@@ -1,0 +1,51 @@
+"""Table 1 reproduction: accuracy (%) per dataset x bandwidth x policy.
+
+Validation targets from the paper:
+  · MoA-Off within <0.4pp of cloud-only,
+  · MoA-Off beats edge-only and PerLLM by >4.8pp absolute.
+"""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import (BANDWIDTHS, DATASETS, POLICIES, RESULTS_DIR,
+                               run_grid, write_csv)
+
+
+def run(n=None):
+    rows = run_grid(n=n) if n else run_grid()
+    path = write_csv(rows, os.path.join(RESULTS_DIR, "table1_accuracy.csv"),
+                     ["dataset", "bandwidth_mbps", "policy", "accuracy",
+                      "frac_edge", "n"])
+
+    # pivot like the paper's Table 1
+    print("\nTable 1 — Accuracy (%) comparison")
+    print(f"{'':16s}" + "".join(f"{p:>12s}" for p in POLICIES))
+    checks = []
+    for ds in DATASETS:
+        print(f"-- {ds} --")
+        for bw in BANDWIDTHS:
+            line = {r["policy"]: r for r in rows
+                    if r["dataset"] == ds and r["bandwidth_mbps"] == bw / 1e6}
+            print(f"{int(bw / 1e6):>4d} Mbps       " + "".join(
+                f"{100 * line[p]['accuracy']:>12.1f}" for p in POLICIES))
+            moa = 100 * line["moa-off"]["accuracy"]
+            cloud = 100 * line["cloud-only"]["accuracy"]
+            edge = 100 * line["edge-only"]["accuracy"]
+            per = 100 * line["perllm"]["accuracy"]
+            checks.append({
+                "cell": f"{ds}@{int(bw / 1e6)}",
+                "moa_vs_cloud_pp": round(moa - cloud, 2),
+                "moa_vs_edge_pp": round(moa - edge, 2),
+                "moa_vs_perllm_pp": round(moa - per, 2),
+            })
+    print("\npaper-claim checks (MoA-Off deltas, pp):")
+    for c in checks:
+        print(f"  {c['cell']:14s} vs cloud {c['moa_vs_cloud_pp']:+5.2f} "
+              f"| vs edge {c['moa_vs_edge_pp']:+5.2f} "
+              f"| vs perllm {c['moa_vs_perllm_pp']:+5.2f}")
+    return rows, checks, path
+
+
+if __name__ == "__main__":
+    run()

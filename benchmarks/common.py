@@ -1,0 +1,76 @@
+"""Shared benchmark harness: run the policy grid of §4 (datasets x
+bandwidths x policies) on the discrete-event simulator with the paper's
+testbed calibration (single A100 cloud, single 3090 edge, Qwen2-VL-2B /
+Qwen2.5-VL-7B, τ=0.5, averaged weights)."""
+from __future__ import annotations
+
+import csv
+import os
+from typing import Dict, List
+
+from repro.config import PolicyConfig, SimConfig
+from repro.data.synthetic import RequestGenerator
+from repro.serving.accuracy_model import MMBENCH, VQAV2
+from repro.serving.simulator import EdgeCloudSimulator
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
+
+POLICIES = ["cloud-only", "edge-only", "perllm", "moa-off"]
+BANDWIDTHS = [200e6, 300e6, 400e6]
+DATASETS = {"vqav2": VQAV2, "mmbench": MMBENCH}
+
+# §4.1 operating point: 5000 images in the paper; we default lower for CI
+# speed but keep the arrival rate that loads a single-GPU tier to ~75%.
+N_REQUESTS = int(os.environ.get("REPRO_SIM_REQUESTS", "1200"))
+ARRIVAL_RATE = 1.1  # req/s — loads a single-GPU tier to ~90%
+EDGE_MFU = 0.15  # 3090-class achievable fraction for a 2B VLM
+
+
+# paper-faithful policy: STATIC τ = 0.5 (§4.1); the adaptive-τ controller is
+# our beyond-paper extension, evaluated separately in EXPERIMENTS.md
+PAPER_POLICY = PolicyConfig(adaptive_tau=False)
+
+
+def run_grid(policies: List[str] = POLICIES,
+             bandwidths: List[float] = BANDWIDTHS,
+             datasets: Dict = DATASETS, n: int = N_REQUESTS,
+             fail_rate: float = 0.0, hedge_after_s: float = 0.0,
+             policy_cfg: PolicyConfig = PAPER_POLICY,
+             seed: int = 0) -> List[dict]:
+    from repro.config import TierConfig
+
+    rows = []
+    for ds_name, acc_model in datasets.items():
+        for bw in bandwidths:
+            for pol in policies:
+                gen = RequestGenerator(seed=seed, arrival_rate=ARRIVAL_RATE)
+                sim_cfg = SimConfig(
+                    bandwidth_bps=bw, seed=seed + 1,
+                    edge=TierConfig("edge", "qwen2-vl-2b", 1, 35.6e12,
+                                    936e9, mfu=EDGE_MFU),
+                    cloud=TierConfig("cloud", "qwen2.5-vl-7b", 1, 312e12,
+                                     1_555e9, mfu=0.42))
+                sim = EdgeCloudSimulator(
+                    sim_cfg,
+                    policy_name=pol, policy_cfg=policy_cfg,
+                    acc_model=acc_model, fail_rate=fail_rate,
+                    hedge_after_s=hedge_after_s,
+                    cloud_servers=1, edge_servers=1)  # the paper's testbed
+                for r in gen.generate(n):
+                    sim.submit(r)
+                sim.run()
+                m = sim.metrics()
+                m.update({"dataset": ds_name, "bandwidth_mbps": bw / 1e6,
+                          "policy": pol, "n": n})
+                rows.append(m)
+    return rows
+
+
+def write_csv(rows: List[dict], path: str, fields: List[str]) -> str:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=fields, extrasaction="ignore")
+        w.writeheader()
+        for r in rows:
+            w.writerow(r)
+    return path

@@ -1,0 +1,46 @@
+"""Fig. 3 reproduction: end-to-end latency distribution per policy/dataset.
+
+Validation targets: MoA-Off mean latency >30% below PerLLM and >50% below
+cloud-only / edge-only.
+"""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import (DATASETS, POLICIES, RESULTS_DIR, run_grid,
+                               write_csv)
+
+
+def run(n=None):
+    rows = run_grid(bandwidths=[300e6], n=n) if n else run_grid(
+        bandwidths=[300e6])
+    path = write_csv(rows, os.path.join(RESULTS_DIR, "fig3_latency.csv"),
+                     ["dataset", "policy", "mean_latency_s", "p50_latency_s",
+                      "p95_latency_s", "p99_latency_s"])
+    print("\nFig. 3 — end-to-end latency (s) @300 Mbps")
+    print(f"{'policy':12s} {'mean':>8s} {'p50':>8s} {'p95':>8s} {'p99':>8s}")
+    checks = []
+    for ds in DATASETS:
+        print(f"-- {ds} --")
+        line = {r["policy"]: r for r in rows if r["dataset"] == ds}
+        for p in POLICIES:
+            r = line[p]
+            print(f"{p:12s} {r['mean_latency_s']:8.3f} {r['p50_latency_s']:8.3f} "
+                  f"{r['p95_latency_s']:8.3f} {r['p99_latency_s']:8.3f}")
+        moa = line["moa-off"]["mean_latency_s"]
+        checks.append({
+            "dataset": ds,
+            "red_vs_cloud_pct": 100 * (1 - moa / line["cloud-only"]["mean_latency_s"]),
+            "red_vs_edge_pct": 100 * (1 - moa / line["edge-only"]["mean_latency_s"]),
+            "red_vs_perllm_pct": 100 * (1 - moa / line["perllm"]["mean_latency_s"]),
+        })
+    print("\npaper-claim checks (MoA-Off latency reduction, %):")
+    for c in checks:
+        print(f"  {c['dataset']:8s} vs cloud {c['red_vs_cloud_pct']:5.1f}% "
+              f"| vs edge {c['red_vs_edge_pct']:5.1f}% "
+              f"| vs perllm {c['red_vs_perllm_pct']:5.1f}%")
+    return rows, checks, path
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Fig. 4 reproduction: computing + memory overhead per policy/dataset.
+
+Validation target: MoA-Off reduces compute overhead by 30-65% vs cloud-only
+and PerLLM; memory overhead lowest among collaborative policies.
+"""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import (DATASETS, POLICIES, RESULTS_DIR, run_grid,
+                               write_csv)
+
+
+def run(n=None):
+    rows = run_grid(bandwidths=[300e6], n=n) if n else run_grid(
+        bandwidths=[300e6])
+    path = write_csv(rows, os.path.join(RESULTS_DIR, "fig4_overhead.csv"),
+                     ["dataset", "policy", "total_flops", "edge_flops",
+                      "cloud_flops", "total_mem_byte_s", "edge_mem_byte_s",
+                      "cloud_mem_byte_s"])
+    print("\nFig. 4 — resource overhead @300 Mbps (normalized to cloud-only)")
+    checks = []
+    for ds in DATASETS:
+        line = {r["policy"]: r for r in rows if r["dataset"] == ds}
+        base_f = line["cloud-only"]["total_flops"]
+        base_m = line["cloud-only"]["total_mem_byte_s"]
+        print(f"-- {ds} --  (flops_norm, mem_norm)")
+        for p in POLICIES:
+            r = line[p]
+            print(f"{p:12s} {r['total_flops'] / base_f:8.3f} "
+                  f"{r['total_mem_byte_s'] / base_m:8.3f}")
+        moa_f = line["moa-off"]["total_flops"]
+        checks.append({
+            "dataset": ds,
+            "compute_red_vs_cloud_pct": 100 * (1 - moa_f / base_f),
+            "compute_red_vs_perllm_pct":
+                100 * (1 - moa_f / line["perllm"]["total_flops"]),
+            "mem_red_vs_cloud_pct":
+                100 * (1 - line["moa-off"]["total_mem_byte_s"] / base_m),
+        })
+    print("\npaper-claim checks (MoA-Off overhead reduction, %):")
+    for c in checks:
+        print(f"  {c['dataset']:8s} compute vs cloud "
+              f"{c['compute_red_vs_cloud_pct']:5.1f}% | vs perllm "
+              f"{c['compute_red_vs_perllm_pct']:5.1f}% | mem vs cloud "
+              f"{c['mem_red_vs_cloud_pct']:5.1f}%")
+    return rows, checks, path
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,67 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (us_per_call = simulated mean
+request latency or kernel wall time; derived = the paper-claim metric that
+table validates).
+
+REPRO_SIM_REQUESTS controls simulation size (default 1200; paper used 5000).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def main() -> None:
+    from benchmarks import (ablation, accuracy_table, kernel_micro,
+                            latency_fig3, overhead_fig4, roofline)
+
+    lines = ["name,us_per_call,derived"]
+
+    t0 = time.perf_counter()
+    rows, checks, _ = accuracy_table.run()
+    moa = [r for r in rows if r["policy"] == "moa-off"]
+    mean_lat = sum(r["mean_latency_s"] for r in moa) / len(moa)
+    worst_gap = min(-c["moa_vs_cloud_pp"] for c in checks)
+    lines.append(f"table1_accuracy,{mean_lat * 1e6:.0f},"
+                 f"moa_vs_cloud_worst_pp={-worst_gap:.2f}")
+
+    rows, checks, _ = latency_fig3.run()
+    moa = [r for r in rows if r["policy"] == "moa-off"]
+    mean_lat = sum(r["mean_latency_s"] for r in moa) / len(moa)
+    red = min(c["red_vs_perllm_pct"] for c in checks)
+    lines.append(f"fig3_latency,{mean_lat * 1e6:.0f},"
+                 f"latency_reduction_vs_perllm_pct={red:.1f}")
+
+    rows, checks, _ = overhead_fig4.run()
+    red = min(c["compute_red_vs_cloud_pct"] for c in checks)
+    lines.append(f"fig4_overhead,0,compute_reduction_vs_cloud_pct={red:.1f}")
+
+    rows, out, _ = ablation.run()
+    lines.append(f"ablation_4p3,0,acc_drop_no_modality_pp="
+                 f"{out['acc_drop_no_modality_pp']:.2f}")
+    lines.append(f"ablation_4p3b,0,latency_rise_no_collab_pct="
+                 f"{out['latency_rise_no_collab_pct']:.1f}")
+
+    krows, _ = kernel_micro.run()
+    img = next(r for r in krows if r["name"] == "image_complexity_512")
+    lines.append(f"kernel_micro,{img['us_per_call']:.0f},"
+                 f"mllm_to_score_flops_ratio={img['flops_ratio']:.2e}")
+
+    try:
+        rrows, _ = roofline.run("single")
+        best = max(r["roofline_fraction"] for r in rrows)
+        lines.append(f"roofline_single,0,best_roofline_fraction={best:.2f}")
+    except (FileNotFoundError, IndexError, ValueError):
+        lines.append("roofline_single,0,missing=run_dryrun_first")
+
+    print("\n" + "=" * 60)
+    print("\n".join(lines))
+    print(f"\n[benchmarks] total {time.perf_counter() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

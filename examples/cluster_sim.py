@@ -1,0 +1,52 @@
+"""Cluster-scale what-if simulation: sweep bandwidth/failure/hedging knobs on
+the discrete-event edge-cloud simulator (the §4 experiments generalized).
+
+    PYTHONPATH=src python examples/cluster_sim.py
+"""
+from repro.config import PolicyConfig, SimConfig, TierConfig
+from repro.data.synthetic import RequestGenerator
+from repro.serving.simulator import EdgeCloudSimulator
+
+
+def run(policy, bw=300e6, fail=0.0, hedge=0.0, n=400, rate=1.1):
+    cfg = SimConfig(
+        bandwidth_bps=bw, seed=1,
+        edge=TierConfig("edge", "qwen2-vl-2b", 1, 35.6e12, 936e9, mfu=0.15),
+        cloud=TierConfig("cloud", "qwen2.5-vl-7b", 1, 312e12, 1555e9, mfu=0.42))
+    sim = EdgeCloudSimulator(cfg, policy_name=policy,
+                             policy_cfg=PolicyConfig(adaptive_tau=True),
+                             fail_rate=fail, hedge_after_s=hedge,
+                             cloud_servers=1, edge_servers=1)
+    for r in RequestGenerator(seed=0, arrival_rate=rate).generate(n):
+        sim.submit(r)
+    sim.run()
+    return sim.metrics()
+
+
+def main():
+    print("bandwidth sweep (moa-off):")
+    for bw in (100e6, 200e6, 400e6, 800e6):
+        m = run("moa-off", bw=bw)
+        print(f"  {bw/1e6:5.0f} Mbps: lat={m['mean_latency_s']:.2f}s "
+              f"acc={m['accuracy']*100:.1f}% frac_edge={m['frac_edge']:.2f}")
+
+    print("\nfault tolerance (10% node failures, heartbeat retry):")
+    for pol in ("moa-off", "cloud-only"):
+        base = run(pol)
+        faulty = run(pol, fail=0.10)
+        hedged = run(pol, fail=0.10, hedge=2.0)
+        print(f"  {pol:10s} lat: clean={base['mean_latency_s']:.2f}s "
+              f"faulty={faulty['mean_latency_s']:.2f}s "
+              f"faulty+hedge={hedged['mean_latency_s']:.2f}s "
+              f"(retries/req={faulty['retries']:.2f})")
+
+    print("\nstraggler mitigation (hedged requests on the slow tail):")
+    m0 = run("moa-off", fail=0.05)
+    m1 = run("moa-off", fail=0.05, hedge=1.5)
+    print(f"  p99 without hedging: {m0['p99_latency_s']:.2f}s; "
+          f"with: {m1['p99_latency_s']:.2f}s "
+          f"({100 * m1['hedged']:.1f}% of requests hedged)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Elastic restart: restore a checkpoint onto a DIFFERENT mesh shape.
+
+Checkpoints store full (unsharded) arrays, so elasticity is a matter of
+re-resolving the logical-axis rules against the new mesh and device_put-ing
+with the new shardings — scale from 256 to 512 chips (or down to 1 for a
+local debug session) without converting anything.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.distributed.sharding import DEFAULT_RULES, param_shardings
+
+
+def elastic_restore_tree(ckpt: Checkpointer, tree_like: Any, specs: Any,
+                         mesh, step: Optional[int] = None,
+                         rules=DEFAULT_RULES, fsdp_axes=()) -> Tuple[int, Any]:
+    """Restore ``tree_like`` re-sharded for ``mesh`` (any shape)."""
+    shardings = None
+    if mesh is not None and specs is not None:
+        shardings = param_shardings(specs, mesh, rules, fsdp_axes)
+    return ckpt.restore(tree_like, step=step, shardings=shardings)

@@ -1,0 +1,347 @@
+"""Central configuration dataclasses for the repro framework.
+
+Everything is a frozen dataclass so configs are hashable (usable as jit
+static args) and safely shareable across threads (serving engine, async
+checkpointer).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description for every model family in the zoo.
+
+    A single config class covers dense / MoE / SSM / hybrid / enc-dec / VLM
+    families; the ``family`` tag selects the block stack in
+    ``repro.models.build_model``.
+    """
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    activation: str = "swiglu"  # swiglu | squared_relu | geglu | gelu
+    qk_norm: bool = False
+
+    # --- MoE ---
+    num_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0  # per-expert hidden width
+    num_shared_experts: int = 0
+    first_k_dense: int = 0  # leading dense layers before MoE starts
+    router_aux_coef: float = 0.01
+    capacity_factor: float = 1.25
+
+    # --- SSM (Mamba-2 / SSD) ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+
+    # --- hybrid (RecurrentGemma / Griffin) ---
+    block_pattern: Tuple[str, ...] = ()  # e.g. ("rglru", "rglru", "local_attn")
+    local_window: int = 2048
+    lru_width: int = 0  # 0 -> d_model
+
+    # --- encoder-decoder (Whisper) ---
+    encoder_layers: int = 0
+    encoder_seq: int = 0  # fixed encoder context (audio frames after conv stub)
+
+    # --- modality frontend (VLM / audio) ---
+    frontend: str = "none"  # none | vision_stub | audio_stub
+    num_patches: int = 0  # vision tokens prepended to the text sequence
+    frontend_dim: int = 0  # embedding dim of the precomputed patches/frames
+
+    # --- misc ---
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+
+    # ----- derived -----
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.num_heads if self.num_heads else 0
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True if serving cost is sub-quadratic in context (long_500k eligible)."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def d_inner(self) -> int:
+        """SSM inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim if self.ssm_state else 0
+
+    def param_count(self) -> int:
+        """Analytic parameter count (exact for our implementation)."""
+        from repro.models.counting import count_params  # local import, no cycle
+
+        return count_params(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.counting import count_active_params
+
+        return count_active_params(self)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned per-arch shape set)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def applicable_shapes(cfg: ModelConfig) -> dict:
+    """Which of the 4 assigned shapes run for this arch (with skip reasons).
+
+    Returns {shape_name: None | skip_reason}.
+    """
+    out = {}
+    for name, shape in SHAPES.items():
+        reason = None
+        if name == "long_500k" and not cfg.is_subquadratic:
+            reason = (
+                "full quadratic attention; 512k-token KV-cache decode is "
+                "defined for sub-quadratic archs only (DESIGN.md §4)"
+            )
+        out[name] = reason
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Mesh / distribution
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axis_names: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    @property
+    def multi_pod(self) -> bool:
+        return "pod" in self.axis_names
+
+
+SINGLE_POD_MESH = MeshConfig((16, 16), ("data", "model"))
+MULTI_POD_MESH = MeshConfig((2, 16, 16), ("pod", "data", "model"))
+
+
+@dataclass(frozen=True)
+class ShardingConfig:
+    """Knobs for the distribution strategy (hillclimbed in §Perf)."""
+
+    zero_stage: int = 1  # 0: replicated opt state, 1: opt sharded over dp, 3: params too
+    remat_policy: str = "dots"  # none | dots | full
+    scan_layers: bool = True
+    sequence_parallel: bool = True  # shard long activations over data axis
+    gradient_accum: int = 1
+    # collective-schedule knobs (beyond-paper perf levers)
+    all_gather_params_once: bool = False  # ZeRO-3: gather per-layer inside scan
+    overlap_collectives: bool = True  # async collective start (XLA flag hint)
+
+
+# ---------------------------------------------------------------------------
+# MoA-Off policy configuration (the paper's §3)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ComplexityConfig:
+    """Weights/constants of §3.1 (paper defaults: averaged weights, τ=0.5)."""
+
+    # image weights (sum to 1; paper sets them to their average -> 0.25 each)
+    w_res: float = 0.25
+    w_edge: float = 0.25
+    w_ent: float = 0.25
+    w_lap: float = 0.25
+    ref_h: int = 1024  # (H0, W0) reference resolution
+    ref_w: int = 1024
+    # calibration percentiles (P5/P95 over a calibration set; Eq. 2 & 4)
+    edge_p5: float = 2.0
+    edge_p95: float = 60.0
+    lap_p5: float = 10.0
+    lap_p95: float = 2_500.0
+    eps: float = 1e-6
+    # text weights (average -> 0.5 each)
+    beta_len: float = 0.5
+    beta_ner: float = 0.5
+    len_l0: int = 512  # token-length threshold L0
+    ner_gamma: float = 4.0  # entities-per-sentence scale γ
+    # audio extension (beyond-paper; same recipe applied to frame features)
+    audio_ref_frames: int = 1_500
+
+
+@dataclass(frozen=True)
+class PolicyConfig:
+    """Eq. 5/6 thresholds and system-state limits."""
+
+    tau_image: float = 0.5
+    tau_text: float = 0.5
+    tau_audio: float = 0.5
+    edge_load_max: float = 0.8  # ℓ_max
+    bandwidth_beta: float = 500e6  # β in bit/s (above the paper's 200-400Mbps sweep)
+    paper_faithful_bandwidth: bool = True  # literal Eq.5 `b <= β` (see DESIGN.md)
+    # adaptive extension: EWMA-driven threshold adjustment (beyond paper §3.2's
+    # "integrates modality-aware thresholds with system-level dynamics")
+    adaptive_tau: bool = True
+    tau_step: float = 0.02
+    target_edge_util: float = 0.65
+
+
+# ---------------------------------------------------------------------------
+# Serving / simulation
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TierConfig:
+    """One serving tier (edge or cloud) in the cost model / simulator."""
+
+    name: str
+    model: str  # config name served on this tier
+    num_chips: int
+    flops_per_s: float  # achievable FLOP/s per chip
+    hbm_bw: float  # bytes/s per chip
+    mfu: float = 0.4  # achieved fraction of peak in the latency model
+    startup_s: float = 0.002  # per-batch dispatch overhead
+
+
+@dataclass(frozen=True)
+class ServingConfig:
+    max_batch: int = 32
+    max_seq: int = 4_096
+    kv_page_size: int = 256
+    prefill_chunk: int = 2_048
+    hedge_after_s: float = 1.5  # straggler mitigation: hedged re-issue
+    retry_limit: int = 2
+    heartbeat_interval_s: float = 0.5
+    heartbeat_timeout_s: float = 2.0
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    """Discrete-event cluster simulation of the paper's testbed."""
+
+    bandwidth_bps: float = 300e6  # WAN edge<->cloud
+    rtt_s: float = 0.02
+    num_requests: int = 1_000
+    arrival_rate: float = 20.0  # req/s Poisson
+    seed: int = 0
+    edge: TierConfig = field(
+        default_factory=lambda: TierConfig(
+            "edge", "qwen2-vl-2b", 1, 35.6e12, 936e9, mfu=0.25
+        )  # RTX-3090-class: 35.6 TFLOP/s fp16, 936 GB/s
+    )
+    cloud: TierConfig = field(
+        default_factory=lambda: TierConfig(
+            "cloud", "qwen2.5-vl-7b", 1, 312e12, 1_555e9, mfu=0.42
+        )  # A100-40GB-class: 312 TFLOP/s bf16, 1.56 TB/s
+    )
+
+
+# ---------------------------------------------------------------------------
+# Training
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"  # bfloat16 for ZeRO-memory-tight cells
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    model: str = "tiny-dense"
+    batch_size: int = 8
+    seq_len: int = 256
+    steps: int = 200
+    log_every: int = 10
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep_checkpoints: int = 3
+    seed: int = 0
+    optimizer: OptimizerConfig = field(default_factory=OptimizerConfig)
+    sharding: ShardingConfig = field(default_factory=ShardingConfig)
+
+
+# ---------------------------------------------------------------------------
+# Roofline constants (TPU v5e, from the assignment)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RooflineConstants:
+    peak_flops: float = 197e12  # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9  # bytes/s per chip
+    ici_bw: float = 50e9  # bytes/s per link
+    hbm_per_chip: float = 16e9  # v5e HBM capacity
+
+
+ROOFLINE = RooflineConstants()

@@ -1,0 +1,15 @@
+"""The paper's primary contribution: modality-aware complexity estimation
+(§3.1) + adaptive edge-cloud offloading (§3.2)."""
+from repro.core.complexity import (audio_complexity, image_complexity,  # noqa
+                                   text_complexity_from_counts,
+                                   text_complexity_from_tokens,
+                                   calibrate_percentiles)
+from repro.core.policy import (EDGE, CLOUD, OffloadingPolicy,  # noqa
+                               NoCollabPolicy, NoModalityAwarePolicy,
+                               decide_modality)
+from repro.core.baselines import (CloudOnlyPolicy, EdgeOnlyPolicy,  # noqa
+                                  PerLLMPolicy, make_policy)
+from repro.core.request import (Decision, ModalityInput, Outcome,  # noqa
+                                Request)
+from repro.core.scheduler import MoAOffScheduler  # noqa
+from repro.core.state import StateEstimator, SystemState  # noqa

@@ -1,0 +1,67 @@
+"""Request/response dataclasses shared by the scheduler, engine and simulator."""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+MODALITIES = ("image", "text", "audio")
+
+
+@dataclass
+class ModalityInput:
+    kind: str  # image | text | audio
+    data: Optional[Any] = None  # real payload (live serving path)
+    meta: Dict[str, float] = field(default_factory=dict)  # h/w/tokens/entities…
+    size_bytes: int = 0
+    complexity: Optional[float] = None  # filled by the modality-aware module
+
+    def __post_init__(self):
+        assert self.kind in MODALITIES, self.kind
+
+
+@dataclass
+class Request:
+    rid: int
+    arrival_s: float
+    modalities: Dict[str, ModalityInput]
+    decode_tokens: int = 64
+    # latent per-request difficulty in [0,1] — simulator ground truth used by
+    # the accuracy model; NOT visible to the policy (it only sees complexity)
+    difficulty: float = 0.5
+    slo_s: float = 5.0
+
+    def total_bytes(self) -> int:
+        return sum(m.size_bytes for m in self.modalities.values())
+
+
+@dataclass
+class Decision:
+    """Per-modality routing (Eq. 6) + bookkeeping for the ablation study."""
+
+    routes: Dict[str, str]  # modality -> "edge" | "cloud"
+    taus: Dict[str, float] = field(default_factory=dict)
+    reason: str = ""
+
+    @property
+    def any_cloud(self) -> bool:
+        return any(r == "cloud" for r in self.routes.values())
+
+    @property
+    def all_edge(self) -> bool:
+        return not self.any_cloud
+
+
+@dataclass
+class Outcome:
+    rid: int
+    latency_s: float
+    routes: Dict[str, str]
+    correct: bool
+    edge_flops: float = 0.0
+    cloud_flops: float = 0.0
+    edge_mem_bytes: float = 0.0
+    cloud_mem_bytes: float = 0.0
+    transfer_bytes: float = 0.0
+    hedged: bool = False
+    retries: int = 0

@@ -1,0 +1,60 @@
+"""System-state tracking for the offloading policy: s = (ℓ, b) of Eq. 5/6.
+
+EWMA estimators over observed edge load and link bandwidth; the scheduler
+feeds observations in, the policy reads smoothed state out.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Deque, Optional
+import collections
+
+
+@dataclass
+class SystemState:
+    edge_load: float = 0.0        # ℓ ∈ [0,1]: edge utilization
+    bandwidth_bps: float = 300e6  # b: available edge<->cloud bandwidth
+    cloud_load: float = 0.0
+    queue_depth_edge: int = 0
+    queue_depth_cloud: int = 0
+
+
+class StateEstimator:
+    """EWMA smoothing of raw observations (load spikes shouldn't thrash τ)."""
+
+    def __init__(self, alpha: float = 0.2,
+                 init: Optional[SystemState] = None):
+        self.alpha = alpha
+        self.state = init or SystemState()
+        self._lat_window: Deque[float] = collections.deque(maxlen=256)
+
+    def observe_edge_load(self, load: float) -> None:
+        a = self.alpha
+        self.state.edge_load = (1 - a) * self.state.edge_load + a * float(load)
+
+    def observe_cloud_load(self, load: float) -> None:
+        a = self.alpha
+        self.state.cloud_load = (1 - a) * self.state.cloud_load + a * float(load)
+
+    def observe_bandwidth(self, bps: float) -> None:
+        a = self.alpha
+        self.state.bandwidth_bps = ((1 - a) * self.state.bandwidth_bps
+                                    + a * float(bps))
+
+    def observe_queues(self, edge: int, cloud: int) -> None:
+        self.state.queue_depth_edge = edge
+        self.state.queue_depth_cloud = cloud
+
+    def observe_latency(self, seconds: float) -> None:
+        self._lat_window.append(float(seconds))
+
+    def p95_latency(self) -> float:
+        if not self._lat_window:
+            return 0.0
+        xs = sorted(self._lat_window)
+        return xs[min(len(xs) - 1, int(0.95 * len(xs)))]
+
+    def snapshot(self) -> SystemState:
+        return SystemState(self.state.edge_load, self.state.bandwidth_bps,
+                           self.state.cloud_load, self.state.queue_depth_edge,
+                           self.state.queue_depth_cloud)

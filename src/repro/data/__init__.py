@@ -1,0 +1,3 @@
+from repro.data.synthetic import (  # noqa: F401
+    RequestGenerator, make_image, make_token_batch, synth_image_batch)
+from repro.data.tokenizer import ToyTokenizer  # noqa: F401

@@ -1,0 +1,6 @@
+from repro.distributed.sharding import (  # noqa: F401
+    DEFAULT_RULES,
+    logical_constraint,
+    param_shardings,
+    spec_to_pspec,
+)

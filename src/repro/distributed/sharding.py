@@ -1,0 +1,128 @@
+"""Logical-axis -> mesh-axis resolution.
+
+Parameters and activations carry *logical* axis names (see
+``repro.models.spec.ParamSpec``); this module resolves them to
+``PartitionSpec``s for a concrete mesh, with divisibility fallbacks (an axis
+that doesn't divide evenly is replicated rather than erroring) and optional
+ZeRO-3 (FSDP) sharding of the remaining large dims over the data axis.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.models import spec as pspec_mod
+from repro.models.spec import ParamSpec
+
+# logical axis -> mesh axis (tuples tried jointly; filtered by mesh axes)
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": (),
+    "seq_sp": ("model",),  # sequence-parallel residuals (batch owns data)
+    "embed": (),
+    "heads": ("model",),
+    "heads_in": (),
+    "kv_heads": ("model",),
+    "ffn": ("model",),
+    "experts": ("model",),
+    "experts_r": (),
+    "expert_ffn": (),
+    "vocab": ("model",),
+    "layers": (),
+    "repeats": (),
+    "pattern": (),
+    "state": (),
+    "frontend": (),
+}
+
+
+def _mesh_axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _resolve_axis(logical: Optional[str], dim: int, mesh: Mesh,
+                  rules: Dict[str, Tuple[str, ...]]):
+    """One logical axis -> mesh axis tuple (or None), divisibility-checked."""
+    if logical is None:
+        return None
+    want = rules.get(logical, ())
+    sizes = _mesh_axis_sizes(mesh)
+    chosen = tuple(a for a in want if a in sizes)
+    if not chosen:
+        return None
+    total = int(np.prod([sizes[a] for a in chosen]))
+    if dim % total != 0:
+        # try dropping axes from the left (pod first) until it divides
+        while chosen and dim % int(np.prod([sizes[a] for a in chosen])) != 0:
+            chosen = chosen[1:]
+        if not chosen:
+            return None
+    return chosen if len(chosen) > 1 else chosen[0]
+
+
+def spec_to_pspec(ps: ParamSpec, mesh: Mesh,
+                  rules: Dict[str, Tuple[str, ...]] = DEFAULT_RULES,
+                  fsdp_axes: Sequence[str] = ()) -> PartitionSpec:
+    """Resolve one ParamSpec to a PartitionSpec (optionally FSDP over data)."""
+    entries = [
+        _resolve_axis(ax, dim, mesh, rules)
+        for ax, dim in zip(ps.axes, ps.shape)
+    ]
+    if fsdp_axes:
+        sizes = _mesh_axis_sizes(mesh)
+        used = set()
+        for e in entries:
+            if e is None:
+                continue
+            used.update(e if isinstance(e, tuple) else (e,))
+        fs = tuple(a for a in fsdp_axes if a in sizes and a not in used)
+        total = int(np.prod([sizes[a] for a in fs])) if fs else 1
+        if fs and total > 1:
+            # shard the LARGEST still-unsharded dim over the fsdp axes
+            cands = [(dim, i) for i, (dim, e) in enumerate(zip(ps.shape, entries))
+                     if e is None and dim % total == 0]
+            if cands:
+                _, idx = max(cands)
+                entries[idx] = fs if len(fs) > 1 else fs[0]
+    return PartitionSpec(*entries)
+
+
+def param_shardings(specs, mesh: Mesh,
+                    rules: Dict[str, Tuple[str, ...]] = DEFAULT_RULES,
+                    fsdp_axes: Sequence[str] = ()):
+    """ParamSpec tree -> NamedSharding tree."""
+    return pspec_mod.tree_map_specs(
+        lambda s: NamedSharding(mesh, spec_to_pspec(s, mesh, rules, fsdp_axes)),
+        specs)
+
+
+def logical_pspec(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+                  mesh: Mesh,
+                  rules: Dict[str, Tuple[str, ...]] = DEFAULT_RULES
+                  ) -> PartitionSpec:
+    return PartitionSpec(*[
+        _resolve_axis(ax, dim, mesh, rules) for ax, dim in zip(axes, shape)])
+
+
+def logical_constraint(x: jax.Array, axes: Tuple[Optional[str], ...],
+                       mesh: Optional[Mesh],
+                       rules: Dict[str, Tuple[str, ...]] = DEFAULT_RULES
+                       ) -> jax.Array:
+    """Apply with_sharding_constraint by logical names (no-op without mesh)."""
+    if mesh is None:
+        return x
+    ps = logical_pspec(axes, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, ps))
+
+
+def batch_shardings(tree_axes, tree_shapes, mesh: Mesh,
+                    rules=DEFAULT_RULES):
+    """Input-batch sharding tree from parallel (axes, shapes) trees."""
+    return jax.tree.map(
+        lambda axes, shp: NamedSharding(mesh, logical_pspec(axes, shp, mesh, rules)),
+        tree_axes, tree_shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))

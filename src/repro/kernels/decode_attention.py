@@ -1,0 +1,107 @@
+"""Flash-decode Pallas TPU kernel: one query token vs a long KV cache.
+
+Grid (B, K, nT): KV-length blocks innermost; running (m, l, acc) for the G
+query heads of one KV head live in VMEM scratch. Ring-buffer caches are
+handled by masking on ABSOLUTE slot positions (pos_cache), exactly like the
+XLA reference — empty slots carry position -1 and are masked out.
+
+Latency note: decode attention is memory-bound (reads the whole KV cache,
+does O(1) FLOPs per byte); the win of the kernel is fusing mask+softmax+
+combine into the single streaming pass over HBM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, posq_ref, posc_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, scale: float, window: Optional[int],
+            n_t: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)       # (G, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bt, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    pos_q = posq_ref[0, 0]                     # scalar int32
+    pos_c = posc_ref[0, :]                     # (bt,) int32
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    d = pos_q - pos_c  # (bt,)
+    ok = (pos_c >= 0) & (d >= 0)
+    if window is not None:
+        ok &= d < window
+    s = jnp.where(ok[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    acc_ref[...] = (acc_ref[...] * corr[:, None]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+
+    @pl.when(it == n_t - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q: jax.Array, k_cache: jax.Array,
+                            v_cache: jax.Array, pos_q: jax.Array,
+                            pos_cache: jax.Array, *,
+                            window: Optional[int] = None,
+                            block_t: int = 512,
+                            interpret: bool = True) -> jax.Array:
+    """q: (B,1,H,hd); k/v_cache: (B,T,K,hd); pos_q: (B,); pos_cache: (B,T).
+
+    Returns (B,1,H,hd).
+    """
+    b, _, h, hd = q.shape
+    t, kh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    block_t = min(block_t, t)
+    assert t % block_t == 0, (t, block_t)
+    n_t = t // block_t
+    scale = hd ** -0.5
+
+    qg = q[:, 0].reshape(b, kh, g, hd)  # (B,K,G,hd), head h = kh_idx*g + g_idx
+    posq2 = pos_q.reshape(b, 1).astype(jnp.int32)
+
+    kernel = functools.partial(_kernel, scale=scale, window=window, n_t=n_t)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kh, n_t),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda b_, kh_, it: (b_, kh_, 0, 0)),
+            pl.BlockSpec((1, block_t, 1, hd), lambda b_, kh_, it: (b_, it, kh_, 0)),
+            pl.BlockSpec((1, block_t, 1, hd), lambda b_, kh_, it: (b_, it, kh_, 0)),
+            pl.BlockSpec((1, 1), lambda b_, kh_, it: (b_, 0)),
+            pl.BlockSpec((1, block_t), lambda b_, kh_, it: (b_, it)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda b_, kh_, it: (b_, kh_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, hd), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k_cache, v_cache, posq2, pos_cache)
+    return out.reshape(b, 1, h, hd)

@@ -1,0 +1,111 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to auto: Pallas executes the kernel body in Python on
+CPU (this container) and compiles natively on TPU. Head dims are padded to a
+lane multiple of 128 before entering the kernels.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ComplexityConfig
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.image_complexity import image_stats_pallas
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_head(x: jax.Array, mult: int = 128):
+    hd = x.shape[-1]
+    pad = (-hd) % mult
+    if pad == 0:
+        return x, hd
+    cfgpad = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, cfgpad), hd
+
+
+# ---------------------------------------------------------------------------
+# image complexity
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def image_stats(imgs: jax.Array, interpret: Optional[bool] = None) -> dict:
+    """Raw stats per image. imgs: (B, H, W) float32 in [0, 255]."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    return image_stats_pallas(imgs.astype(jnp.float32), interpret=interpret)
+
+
+def image_complexity_from_stats(stats: dict, h: int, w: int,
+                                cc: ComplexityConfig) -> dict:
+    """Scalar post-processing of kernel stats -> Eq. 2/3/4 + c_img."""
+    n = float(h * w)
+    g_mean = stats["sobel_sum"] / n
+    c_edge = jnp.clip((g_mean - cc.edge_p5) /
+                      (cc.edge_p95 - cc.edge_p5 + cc.eps), 0.0, 1.0)
+    lap_mean = stats["lap_sum"] / n
+    lap_var = stats["lap_sq_sum"] / n - lap_mean ** 2
+    c_lap = jnp.clip((lap_var - cc.lap_p5) /
+                     (cc.lap_p95 - cc.lap_p5 + cc.eps), 0.0, 1.0)
+    p = stats["hist"] / n
+    ent = -jnp.sum(jnp.where(p > 0, p * jnp.log(p), 0.0), axis=-1)
+    c_ent = ent / jnp.log(256.0)
+    c_res = jnp.minimum(1.0, n / float(cc.ref_h * cc.ref_w))
+    c_res = jnp.broadcast_to(c_res, c_edge.shape)
+    c_img = (cc.w_res * c_res + cc.w_edge * c_edge
+             + cc.w_ent * c_ent + cc.w_lap * c_lap)
+    return {"c_res": c_res, "c_edge": c_edge, "c_ent": c_ent, "c_lap": c_lap,
+            "c_img": c_img}
+
+
+def image_complexity(imgs: jax.Array, cc: ComplexityConfig = ComplexityConfig(),
+                     interpret: Optional[bool] = None) -> dict:
+    """End-to-end §3.1.1: (B,H,W) images -> complexity components + c_img."""
+    stats = image_stats(imgs, interpret=interpret)
+    return image_complexity_from_stats(stats, imgs.shape[1], imgs.shape[2], cc)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, block_q: int = 128,
+                    block_k: int = 128, interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = _auto_interpret()
+    qp, hd = _pad_head(q)
+    kp, _ = _pad_head(k)
+    vp, _ = _pad_head(v)
+    # scale must reflect the TRUE head dim, not the padded one
+    qp = qp * (qp.shape[-1] ** 0.5) * (hd ** -0.5)
+    out = flash_attention_pallas(qp, kp, vp, causal=causal, window=window,
+                                 block_q=block_q, block_k=block_k,
+                                 interpret=interpret)
+    return out[..., :hd]
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_t", "interpret"))
+def decode_attention(q, k_cache, v_cache, pos_q, pos_cache, *,
+                     window: Optional[int] = None, block_t: int = 512,
+                     interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = _auto_interpret()
+    qp, hd = _pad_head(q)
+    kp, _ = _pad_head(k_cache)
+    vp, _ = _pad_head(v_cache)
+    qp = qp * (qp.shape[-1] ** 0.5) * (hd ** -0.5)
+    out = decode_attention_pallas(qp, kp, vp, pos_q, pos_cache, window=window,
+                                  block_t=block_t, interpret=interpret)
+    return out[..., :hd]

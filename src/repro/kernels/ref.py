@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These define the semantics; the kernels must match them bit-for-tolerance.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# image complexity statistics (paper §3.1.1)
+# ---------------------------------------------------------------------------
+
+
+def image_stats_ref(img: jax.Array) -> dict:
+    """Raw single-pass statistics for one image.
+
+    img: (H, W) float32 in [0, 255].
+    Returns {sobel_sum, lap_sum, lap_sq_sum, hist(256,)} — the complexity
+    scores (Eq. 2-4) are scalar post-processing over these (see ops.py).
+    """
+    img = img.astype(jnp.float32)
+    p = jnp.pad(img, 1, mode="edge")
+    # Sobel gradients
+    gx = (p[:-2, 2:] + 2.0 * p[1:-1, 2:] + p[2:, 2:]
+          - p[:-2, :-2] - 2.0 * p[1:-1, :-2] - p[2:, :-2])
+    gy = (p[2:, :-2] + 2.0 * p[2:, 1:-1] + p[2:, 2:]
+          - p[:-2, :-2] - 2.0 * p[:-2, 1:-1] - p[:-2, 2:])
+    mag = jnp.sqrt(gx * gx + gy * gy)
+    # 4-neighbour Laplacian
+    lap = (p[:-2, 1:-1] + p[2:, 1:-1] + p[1:-1, :-2] + p[1:-1, 2:]
+           - 4.0 * img)
+    # gray-level histogram (bin = floor, clipped)
+    bins = jnp.clip(jnp.floor(img), 0, 255).astype(jnp.int32)
+    hist = jnp.zeros((256,), jnp.float32).at[bins.reshape(-1)].add(1.0)
+    return {
+        "sobel_sum": jnp.sum(mag),
+        "lap_sum": jnp.sum(lap),
+        "lap_sq_sum": jnp.sum(lap * lap),
+        "hist": hist,
+    }
+
+
+def image_stats_batch_ref(imgs: jax.Array) -> dict:
+    """imgs: (B, H, W) -> dict of stacked stats."""
+    return jax.vmap(image_stats_ref)(imgs)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (prefill) — GQA, causal, optional sliding window
+# ---------------------------------------------------------------------------
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: Optional[int] = None) -> jax.Array:
+    """q: (B,S,H,hd); k/v: (B,S,K,hd) -> (B,S,H,hd). Self-attention layout
+    (query position i == key position i)."""
+    from repro.models.attention import dense_attention
+
+    s = q.shape[1]
+    pos = jnp.arange(s, dtype=jnp.int32)
+    return dense_attention(q, k, v, pos, pos, causal=causal, window=window)
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         pos_q: jax.Array, pos_cache: jax.Array, *,
+                         window: Optional[int] = None) -> jax.Array:
+    """q: (B,1,H,hd); caches (B,T,K,hd); pos_q (B,); pos_cache (B,T)."""
+    from repro.models.attention import decode_attention_xla
+
+    return decode_attention_xla(q, k_cache, v_cache, pos_q, pos_cache,
+                                window=window)

@@ -1,0 +1,336 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count="
+                           + os.environ.get("REPRO_DRYRUN_DEVICES", "512")).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: pjit with the
+production in/out shardings must partition, compile, and report memory +
+cost analysis for the 16x16 single-pod mesh AND the (2,16,16) multi-pod
+mesh. Collective bytes are parsed from the partitioned HLO (while-loop
+bodies multiplied by their parsed trip counts) for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out results/
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.config import (ROOFLINE, OptimizerConfig, ShardingConfig, SHAPES)
+from repro.configs import ASSIGNED_ARCHS, get_config, iter_dryrun_cells
+from repro.distributed.sharding import (DEFAULT_RULES, logical_pspec,
+                                        param_shardings)
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.training.optimizer import OptState
+from repro.training.train_loop import make_train_step
+
+
+# ---------------------------------------------------------------------------
+# cell construction
+# ---------------------------------------------------------------------------
+
+
+def _batch_shardings(in_specs, in_axes, mesh, rules):
+    return {
+        k: NamedSharding(mesh, logical_pspec(in_axes[k], v.shape, mesh, rules))
+        for k, v in in_specs.items()
+    }
+
+
+def _axes_shardings(struct_tree, axes_tree, mesh, rules):
+    return jax.tree.map(
+        lambda sd, ax: NamedSharding(
+            mesh, logical_pspec(ax, sd.shape, mesh, rules)),
+        struct_tree, axes_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def build_cell(arch: str, shape_name: str, mesh, *,
+               sharding_cfg: Optional[ShardingConfig] = None,
+               rules: Optional[dict] = None,
+               cache_rules: Optional[dict] = None,
+               moe_2d: bool = False):
+    """Returns (jitted_fn, example_args, meta) ready to .lower(*args)."""
+    rules = rules or DEFAULT_RULES
+    cache_rules = cache_rules or rules
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    moe_impl = "auto"
+    if moe_2d and cfg.num_experts and shape.kind == "decode":
+        # weight-stationary 2D expert parallelism (decode): experts over
+        # data, expert-FFN over model -> weights never move at decode time
+        rules = dict(rules)
+        rules.update({"experts": ("data",), "expert_ffn": ("model",)})
+        cache_rules = dict(cache_rules) if cache_rules else rules
+        moe_impl = "decode2d"
+    big = cfg.param_count() > 60e9
+    if sharding_cfg is None:
+        # baseline defaults:
+        # · full remat (recompute-everything) — lowest activation memory;
+        # · gradient accumulation so the per-layer saved residual stack
+        #   (L x B_local/accum x S x D, the irreducible remat footprint)
+        #   stays under ~2 GB/device;
+        # · sequence-parallel residuals for wide models (saved activations
+        #   additionally sharded over the model axis).
+        # The §Perf hillclimb trades these against compute/collective terms.
+        accum = 1
+        if shape.kind == "train":
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            dp = max(1, sizes.get("data", 1) * sizes.get("pod", 1))
+            tp = max(1, sizes.get("model", 1))
+            b_local = max(1, shape.global_batch // dp)
+            seq_shard = tp if cfg.d_model % tp == 0 and cfg.d_model >= 4096 else 1
+            saved = (cfg.num_layers * b_local * shape.seq_len
+                     * cfg.d_model * 2 / seq_shard)
+            while accum < b_local and saved / accum > 2e9:
+                accum *= 2
+        sharding_cfg = ShardingConfig(
+            zero_stage=3 if big else 1, remat_policy="full",
+            gradient_accum=accum,
+            sequence_parallel=cfg.d_model >= 4096)
+    model = build_model(cfg, mesh=mesh, sharding=sharding_cfg,
+                        moe_impl=moe_impl)
+
+    pspecs = model.specs() if hasattr(model, "specs") else None
+    fsdp = ("data", "pod") if sharding_cfg.zero_stage >= 3 else ()
+    if moe_impl == "decode2d":
+        fsdp = ()  # weights are statically 2D-sharded; never re-gathered
+    p_shard = param_shardings(pspecs, mesh, rules, fsdp_axes=fsdp)
+    p_struct = model.param_shapes()
+
+    in_specs, in_axes = model.input_specs(shape)
+    b_shard = _batch_shardings(in_specs, in_axes, mesh, rules)
+
+    if shape.kind == "train":
+        opt_cfg = OptimizerConfig(state_dtype="bfloat16" if big else "float32")
+        st_dt = jnp.dtype(opt_cfg.state_dtype)
+        mv_struct = jax.tree.map(
+            lambda sd: jax.ShapeDtypeStruct(sd.shape, st_dt), p_struct)
+        opt_struct = OptState(jax.ShapeDtypeStruct((), jnp.int32),
+                              mv_struct, mv_struct)
+        # ZeRO >= 1: optimizer states always FSDP-sharded over data(+pod)
+        mv_shard = param_shardings(pspecs, mesh, rules,
+                                   fsdp_axes=("data", "pod"))
+        opt_shard = OptState(NamedSharding(mesh, PartitionSpec()),
+                             mv_shard, mv_shard)
+        step_fn = make_train_step(model, opt_cfg,
+                                  sharding_cfg.gradient_accum)
+        fn = jax.jit(step_fn,
+                     in_shardings=(p_shard, opt_shard, b_shard),
+                     out_shardings=(p_shard, opt_shard, None),
+                     donate_argnums=(0, 1))
+        args = (p_struct, opt_struct, in_specs)
+    elif shape.kind == "prefill":
+        cap = shape.seq_len
+        fn = jax.jit(lambda p, b: model.prefill(p, b, cap),
+                     in_shardings=(p_shard, b_shard))
+        args = (p_struct, in_specs)
+    else:  # decode
+        cap = shape.seq_len
+        c_struct = model.cache_specs(shape.global_batch, cap)
+        c_axes = model.cache_axes(shape.global_batch, cap)
+        c_shard = _axes_shardings(c_struct, c_axes, mesh, cache_rules)
+        fn = jax.jit(model.decode_step,
+                     in_shardings=(p_shard, c_shard, b_shard),
+                     out_shardings=(None, c_shard),
+                     donate_argnums=(1,))
+        args = (p_struct, c_struct, in_specs)
+
+    meta = {"arch": arch, "shape": shape_name, "kind": shape.kind,
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count(),
+            "zero_stage": sharding_cfg.zero_stage}
+    return fn, args, meta, cfg
+
+
+# ---------------------------------------------------------------------------
+# the run
+# ---------------------------------------------------------------------------
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N·D train, 2·N_active·D forward (decode: per step)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             sharding_cfg: Optional[ShardingConfig] = None,
+             rules=None, cache_rules=None, tag: str = "",
+             moe_2d: bool = False) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    t0 = time.perf_counter()
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": "multi" if multi_pod else "single",
+                           "devices": int(n_dev), "tag": tag}
+    try:
+        fn, args, meta, cfg = build_cell(arch, shape_name, mesh,
+                                         sharding_cfg=sharding_cfg,
+                                         rules=rules, cache_rules=cache_rules,
+                                         moe_2d=moe_2d)
+        rec.update(meta)
+        with mesh:
+            lowered = fn.lower(*args)
+            t_lower = time.perf_counter()
+            compiled = lowered.compile()
+            t_compile = time.perf_counter()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        shape = SHAPES[shape_name]
+        hlo = analyze_hlo(compiled.as_text(), default_trip=cfg.num_layers)
+
+        mem_rec = {}
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes", "peak_memory_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                mem_rec[k] = int(v)
+
+        mf = model_flops(cfg, shape)
+        # analyze_hlo numbers are per-device (per-partition SPMD module)
+        flops = hlo["flops"]
+        bytes_acc = hlo["hbm_bytes"]
+        coll_bytes = hlo["collective_bytes"]
+        hlo_flops_total = flops * n_dev
+        compute_t = flops / ROOFLINE.peak_flops
+        memory_t = bytes_acc / ROOFLINE.hbm_bw
+        coll_t = coll_bytes / ROOFLINE.ici_bw  # per-device bytes over 1 link
+        dominant = max((("compute", compute_t), ("memory", memory_t),
+                        ("collective", coll_t)), key=lambda kv: kv[1])[0]
+        rec.update({
+            "ok": True,
+            "lower_s": round(t_lower - t0, 2),
+            "compile_s": round(t_compile - t_lower, 2),
+            "memory": mem_rec,
+            "per_device_flops": flops,
+            "per_device_bytes": bytes_acc,
+            "collective_bytes_per_device": coll_bytes,
+            "collective_per_op": hlo["per_collective"],
+            "xla_cost_analysis_flops": float(cost.get("flops", 0.0)) if cost else 0.0,
+            "model_flops": mf,
+            "hlo_flops_total": hlo_flops_total,
+            "useful_flops_ratio": mf / hlo_flops_total if hlo_flops_total else 0,
+            "roofline": {"compute_s": compute_t, "memory_s": memory_t,
+                         "collective_s": coll_t, "dominant": dominant},
+        })
+        args_b = mem_rec.get("argument_size_in_bytes", 0)
+        temp_b = mem_rec.get("temp_size_in_bytes", 0)
+        rec["fits_hbm"] = bool(args_b + temp_b <= ROOFLINE.hbm_per_chip)
+        print(f"[dryrun] {arch} {shape_name} {rec['mesh']}: OK "
+              f"compile={rec['compile_s']}s flops/dev={flops:.3g} "
+              f"coll={coll_bytes:.3g}B dom={dominant} "
+              f"useful={rec['useful_flops_ratio']:.2f} "
+              f"args+temp={(args_b + temp_b) / 1e9:.2f}GB")
+    except Exception as e:  # noqa: BLE001 — record and continue
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        print(f"[dryrun] {arch} {shape_name} {rec['mesh']}: FAIL {rec['error']}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        fname = os.path.join(
+            out_dir, f"dryrun_{arch}_{shape_name}_{rec['mesh']}{suffix}.json")
+        with open(fname, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results")
+    ap.add_argument("--zero", type=int, default=None)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--seq-par", type=int, default=None, choices=[0, 1])
+    ap.add_argument("--cache-seq-shard", action="store_true",
+                    help="shard decode KV cache sequence dim over model axis")
+    ap.add_argument("--moe-2d", action="store_true",
+                    help="weight-stationary 2D expert parallelism for decode")
+    ap.add_argument("--tag", default="", help="variant tag for perf iterations")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    shard_cfg = None
+    if any(v is not None for v in (args.zero, args.remat, args.accum,
+                                   args.seq_par)):
+        shard_cfg = ShardingConfig(
+            zero_stage=args.zero if args.zero is not None else 3,
+            remat_policy=args.remat or "full",
+            gradient_accum=args.accum or 1,
+            sequence_parallel=bool(args.seq_par)
+            if args.seq_par is not None else True)
+    cache_rules = None
+    if args.cache_seq_shard:
+        cache_rules = dict(DEFAULT_RULES)
+        cache_rules["seq"] = ("model",)
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    cells = []
+    if args.all:
+        for arch, shape_name, skip in iter_dryrun_cells():
+            cells.append((arch, shape_name, skip))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape, None))
+
+    results = []
+    for arch, shape_name, skip in cells:
+        for mp in meshes:
+            if skip:
+                results.append({"arch": arch, "shape": shape_name,
+                                "mesh": "multi" if mp else "single",
+                                "ok": None, "skipped": skip})
+                print(f"[dryrun] {arch} {shape_name}: SKIP ({skip[:60]}…)")
+                continue
+            if args.skip_existing:
+                fname = os.path.join(
+                    args.out, f"dryrun_{arch}_{shape_name}_"
+                    f"{'multi' if mp else 'single'}.json")
+                if os.path.exists(fname):
+                    with open(fname) as f:
+                        prev = json.load(f)
+                    if prev.get("ok"):
+                        results.append(prev)
+                        continue
+            results.append(run_cell(arch, shape_name, mp, args.out,
+                                    sharding_cfg=shard_cfg,
+                                    cache_rules=cache_rules, tag=args.tag,
+                                    moe_2d=args.moe_2d))
+    ok = sum(1 for r in results if r.get("ok"))
+    skipped = sum(1 for r in results if r.get("ok") is None)
+    fail = sum(1 for r in results if r.get("ok") is False)
+    print(f"[dryrun] done: {ok} ok, {skipped} skipped-by-design, {fail} failed")
+    if args.out:
+        with open(os.path.join(args.out, "dryrun_summary.json"), "w") as f:
+            json.dump(results, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

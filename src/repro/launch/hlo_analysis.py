@@ -1,0 +1,227 @@
+"""Trip-count-aware cost analysis over optimized (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE — under
+scan-over-layers that understates FLOPs/bytes by ~num_layers. This module
+re-derives the three roofline inputs from the HLO text itself:
+
+  · FLOPs: every ``dot`` — 2 * prod(output dims) * prod(lhs contracting
+    dims) — multiplied by the effective trip count of its computation
+    (``known_trip_count`` from the while op's backend_config, nesting-aware);
+  · HBM bytes: fusion-boundary traffic — each top-level instruction of a
+    REAL computation (entry / while bodies / conditional branches) reads its
+    operands and writes its outputs once per trip. Interiors of fusions
+    (``%fused_computation*``, ``%wrapped_*``) never touch HBM and are skipped;
+  · collective bytes: payload sizes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute, trip-multiplied.
+
+All numbers are PER-DEVICE (the module is the per-partition SPMD program).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Tuple
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+               "f8e5m2": 1, "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8,
+               "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops with no fusion-boundary HBM traffic of their own
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota", "while",
+             "conditional", "reshape", "call", "custom-call", "copy-start",
+             "copy-done", "send", "recv", "send-done", "recv-done",
+             "opt-barrier"}
+
+_TYPE_RE = re.compile(r"\b([a-z]+\d+[a-z0-9]*|pred)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"^(?:\([^()]*\)|[a-z0-9_\[\]{},\s]+?)\s*"
+                    r"([a-z][a-z0-9\-]*)\(")
+_COMP_START = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[":{\s]+n[":\s]+"?(\d+)')
+
+
+def _dims(s: str) -> List[int]:
+    return [int(x) for x in s.split(",") if x] if s else []
+
+
+def _bytes_of(types: List[Tuple[str, List[int]]]) -> int:
+    total = 0
+    for dt, dims in types:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def split_computations(hlo: str) -> Dict[str, List[str]]:
+    """Computation name -> body lines. Headers sit at column 0, end with '{'
+    and contain '->' (signatures may contain nested parens — match by name)."""
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            if (line and not line[0].isspace() and line.endswith("{")
+                    and "->" in line):
+                m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)", line)
+                if m:
+                    cur = m.group(1)
+                    comps[cur] = []
+        else:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def _parse_instrs(lines: List[str]):
+    """[(name, opname, out_types, operand_names, line)], symbol table."""
+    instrs = []
+    table: Dict[str, List[Tuple[str, List[int]]]] = {}
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # strip metadata/backend_config tails for operand parsing accuracy
+        head, _, _ = rhs.partition(" metadata=")
+        # output types: everything before the op call
+        call = re.search(r"\b([a-z][a-z0-9\-]*)\(", head)
+        opname = call.group(1) if call else ""
+        out_part = head[: call.start()] if call else head
+        out_types = [( t.group(1), _dims(t.group(2)))
+                     for t in _TYPE_RE.finditer(out_part)]
+        operand_part = head[call.end():] if call else ""
+        # operands: %refs before the first attribute (fusion calls=%..., etc.)
+        operand_part = operand_part.split("calls=")[0]
+        operand_part = operand_part.split("condition=")[0]
+        operand_part = operand_part.split("to_apply=")[0]
+        operands = _OPERAND_RE.findall(operand_part.split("),")[0])
+        table[name] = out_types
+        instrs.append((name, opname, out_types, operands, line))
+    return instrs, table
+
+
+def analyze_hlo(hlo: str, default_trip: int = 1) -> Dict[str, Any]:
+    comps = split_computations(hlo)
+    parsed = {name: _parse_instrs(lines) for name, lines in comps.items()}
+
+    # ---- trip counts (nesting-aware fixpoint) ----
+    body_trip: Dict[str, int] = {}
+    body_parent: Dict[str, str] = {}
+    for cname, (instrs, _) in parsed.items():
+        for _, op, _, _, line in instrs:
+            if op == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", line)
+                if not bm:
+                    continue
+                tm = _TRIP_RE.search(line)
+                trip = int(tm.group(1)) if tm else default_trip
+                body = bm.group(1)
+                body_trip[body] = max(body_trip.get(body, 1), trip)
+                body_parent[body] = cname
+                cm = re.search(r"condition=%?([\w.\-]+)", line)
+                if cm:
+                    body_trip.setdefault(cm.group(1), trip)
+                    body_parent.setdefault(cm.group(1), cname)
+
+    def eff_trip(comp: str, depth: int = 0) -> int:
+        if depth > 16:
+            return 1
+        t = body_trip.get(comp, 1)
+        parent = body_parent.get(comp)
+        return t * (eff_trip(parent, depth + 1) if parent else 1)
+
+    def _is_fused(name: str) -> bool:
+        return name.startswith(("fused", "wrapped_"))
+
+    # ---- fusion call counts: fused computation -> Σ eff_trip(call sites) ----
+    fusion_calls: Dict[str, float] = {}
+    for cname, (instrs, _) in parsed.items():
+        if _is_fused(cname):
+            continue
+        mult = eff_trip(cname)
+        for _, op, _, _, line in instrs:
+            m = re.search(r"calls=%?([\w.\-]+)", line)
+            if m:
+                fusion_calls[m.group(1)] = fusion_calls.get(m.group(1), 0.0) + mult
+
+    def _dot_flops(line, operands, out_types, table) -> float:
+        k = 1
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+        cdims = _dims(m.group(1)) if m else []
+        lhs = table.get(operands[0], []) if operands else []
+        lhs_dims = lhs[0][1] if lhs else []
+        for ci in cdims:
+            if ci < len(lhs_dims):
+                k *= lhs_dims[ci]
+        n_out = 1
+        for _, dims in out_types:
+            for d in dims:
+                n_out *= d
+        return 2.0 * n_out * max(k, 1)
+
+    # ---- walk real computations ----
+    flops = 0.0
+    hbm_bytes = 0.0
+    coll_bytes = 0.0
+    per_coll = {c: 0.0 for c in COLLECTIVES}
+    dots = 0
+
+    # dots hidden inside fusions: flops attributed via the call-site trips
+    for cname, (instrs, table) in parsed.items():
+        if not _is_fused(cname):
+            continue
+        mult = fusion_calls.get(cname, 0.0)
+        if mult <= 0:
+            continue
+        for name, op, out_types, operands, line in instrs:
+            if op == "dot":
+                flops += _dot_flops(line, operands, out_types, table) * mult
+                dots += 1
+
+    for cname, (instrs, table) in parsed.items():
+        if _is_fused(cname):
+            continue  # fusion interiors: traffic counted at the call site
+        mult = eff_trip(cname)
+        for name, op, out_types, operands, line in instrs:
+            if not op:
+                continue
+            if op == "dot":
+                flops += _dot_flops(line, operands, out_types, table) * mult
+                dots += 1
+            base_coll = next((c for c in COLLECTIVES if op.startswith(c)), None)
+            if base_coll is not None:
+                if op.endswith("-done"):
+                    continue
+                sz = _bytes_of(out_types)
+                per_coll[base_coll] += sz * mult
+                coll_bytes += sz * mult
+                hbm_bytes += sz * mult
+                continue
+            if op in _FREE_OPS:
+                continue
+            if op in ("slice", "dynamic-slice", "gather"):
+                # reads only the sliced region (≈ output), not the operand
+                nbytes = 2 * _bytes_of(out_types)
+            elif op in ("dynamic-update-slice", "scatter", "scatter-add"):
+                # reads + writes only the updated region (≈ update operand)
+                upd = (_bytes_of(table.get(operands[1], []))
+                       if len(operands) > 1 else _bytes_of(out_types))
+                nbytes = 2 * upd
+            else:
+                nbytes = _bytes_of(out_types)
+                for o in operands:
+                    nbytes += _bytes_of(table.get(o, []))
+            hbm_bytes += nbytes * mult
+
+    return {"flops": flops, "hbm_bytes": hbm_bytes,
+            "collective_bytes": coll_bytes, "per_collective": per_coll,
+            "num_dots": dots,
+            "trip_counts": {k: v for k, v in body_trip.items() if v > 1}}

@@ -1,0 +1,55 @@
+"""Training launcher.
+
+Local smoke:   PYTHONPATH=src python -m repro.launch.train --model tiny-dense --steps 50
+Reduced arch:  PYTHONPATH=src python -m repro.launch.train --arch mamba2-2.7b --reduced
+Mesh runs use the same code path with ``--mesh data,model`` on real hardware;
+on this CPU container meshes beyond 1 device exist only via the dry-run.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.config import OptimizerConfig, ShardingConfig, TrainConfig
+from repro.configs import reduced_config
+from repro.models import build_model
+from repro.training import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="tiny-dense")
+    ap.add_argument("--arch", default=None,
+                    help="assigned arch id; combined with --reduced")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--no-resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = TrainConfig(
+        model=args.model, batch_size=args.batch, seq_len=args.seq,
+        steps=args.steps, checkpoint_dir=args.ckpt_dir,
+        checkpoint_every=args.ckpt_every,
+        optimizer=OptimizerConfig(lr=args.lr, total_steps=args.steps),
+        sharding=ShardingConfig(gradient_accum=args.accum),
+    )
+    model = None
+    if args.arch:
+        mcfg = reduced_config(args.arch) if args.reduced else None
+        if mcfg is None:
+            from repro.configs import get_config
+            mcfg = get_config(args.arch)
+        model = build_model(mcfg.replace(dtype="float32"),
+                            sharding=cfg.sharding, param_dtype="float32")
+    trainer = Trainer(cfg, model=model)
+    trainer.initialize(resume=not args.no_resume)
+    trainer.train()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,244 @@
+"""Attention implementations: dense oracle, XLA flash (chunked online-softmax),
+exact block-local sliding window, and cache decode. All GQA-aware.
+
+The Pallas TPU kernels in ``repro.kernels`` implement the same contracts; the
+XLA paths here are the lowering default (and the correctness oracles).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _split_gqa(q: jax.Array, num_kv: int) -> jax.Array:
+    """(B, S, H, hd) -> (B, S, K, G, hd)."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, num_kv, h // num_kv, d)
+
+
+def _merge_gqa(o: jax.Array) -> jax.Array:
+    b, s, k, g, d = o.shape
+    return o.reshape(b, s, k * g, d)
+
+
+def _largest_divisor_leq(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (for ragged VLM sequences)."""
+    target = min(target, n)
+    for c in range(target, 0, -1):
+        if n % c == 0:
+            return c
+    return 1
+
+
+def _mask_bias(pos_q: jax.Array, pos_kv: jax.Array, causal: bool,
+               window: Optional[int]) -> jax.Array:
+    """Additive mask bias (..., Sq, Skv) from absolute positions.
+
+    pos_q: (B, Sq) or (Sq,); pos_kv: (B, Skv) or (Skv,). kv positions < 0
+    denote empty cache slots and are always masked.
+    """
+    if pos_q.ndim == 1:
+        pos_q = pos_q[None]
+    if pos_kv.ndim == 1:
+        pos_kv = pos_kv[None]
+    d = pos_q[:, :, None] - pos_kv[:, None, :]  # (B, Sq, Skv)
+    ok = pos_kv[:, None, :] >= 0
+    if causal:
+        ok &= d >= 0
+    if window is not None:
+        ok &= d < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def dense_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    pos_q: jax.Array, pos_kv: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    ) -> jax.Array:
+    """Reference attention, fully materialized scores. GQA via K grouping.
+
+    q: (B, Sq, H, hd); k/v: (B, Skv, K, hd). Returns (B, Sq, H, hd).
+    """
+    num_kv = k.shape[2]
+    qg = _split_gqa(q, num_kv)  # (B,Sq,K,G,hd)
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    bias = _mask_bias(pos_q, pos_kv, causal, window)  # (B,Sq,Skv)
+    s = s + bias[:, None, None, :, :]
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return _merge_gqa(o).astype(q.dtype)
+
+
+def flash_attention_xla(q: jax.Array, k: jax.Array, v: jax.Array,
+                        pos_q: jax.Array, pos_kv: jax.Array, *,
+                        causal: bool = True, window: Optional[int] = None,
+                        q_chunk: int = 2048, kv_chunk: int = 2048,
+                        ) -> jax.Array:
+    """Online-softmax attention, O(q_chunk*kv_chunk) score memory.
+
+    Python-unrolled over Q chunks so causal chunk-skipping is STATIC: for
+    query chunk i only kv chunks 0..i are touched -> HLO FLOPs ~ the true
+    causal half, not the dense square (matters for §Roofline usefulness).
+    """
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    num_kv = k.shape[2]
+    scale = d ** -0.5
+    q_chunk = _largest_divisor_leq(sq, q_chunk)
+    kv_chunk = _largest_divisor_leq(skv, kv_chunk)
+    assert sq % q_chunk == 0 and skv % kv_chunk == 0, (sq, q_chunk, skv, kv_chunk)
+    n_q, n_kv = sq // q_chunk, skv // kv_chunk
+    if pos_q.ndim == 1:
+        pos_q = jnp.broadcast_to(pos_q[None], (b, sq))
+    if pos_kv.ndim == 1:
+        pos_kv = jnp.broadcast_to(pos_kv[None], (b, skv))
+
+    qg = _split_gqa(q, num_kv)  # (B,Sq,K,G,hd)
+
+    outs = []
+    for qi in range(n_q):
+        q_blk = jax.lax.dynamic_slice_in_dim(qg, qi * q_chunk, q_chunk, axis=1)
+        pq_blk = jax.lax.dynamic_slice_in_dim(pos_q, qi * q_chunk, q_chunk, axis=1)
+        q_blk = q_blk.astype(jnp.float32)
+
+        # static causal skip: kv chunks beyond the diagonal never touched
+        hi = (qi + 1) if causal else n_kv
+        # static window skip: kv chunks entirely before the window (only valid
+        # for self-attention layouts where pos == index; callers with caches
+        # pass window masking via positions anyway, so this is a safe bound)
+        lo = 0
+        if window is not None and causal and sq == skv and q_chunk == kv_chunk:
+            lo = max(0, qi - (window + q_chunk - 1) // kv_chunk)
+
+        def kv_step(carry, ki):
+            acc, m, l = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, ki * kv_chunk, kv_chunk, axis=1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, ki * kv_chunk, kv_chunk, axis=1)
+            pkv_blk = jax.lax.dynamic_slice_in_dim(pos_kv, ki * kv_chunk, kv_chunk, axis=1)
+            # K/V stay in model dtype; scores accumulate f32 (no f32 copies
+            # of the K/V blocks), probabilities travel to the PV matmul in
+            # the model dtype (flash-standard; final acc stays f32)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", q_blk.astype(k.dtype), k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            bias = _mask_bias(pq_blk, pkv_blk, causal, window)
+            s = s + bias[:, None, None, :, :]
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(v.dtype), v_blk,
+                preferred_element_type=jnp.float32)
+            l = l * corr + jnp.sum(p, axis=-1)
+            return (acc, m_new, l), None
+
+        g = h // num_kv
+        acc0 = jnp.zeros((b, num_kv, g, q_chunk, d), jnp.float32)
+        m0 = jnp.full((b, num_kv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, num_kv, g, q_chunk), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0), jnp.arange(lo, hi))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,K,G,qc,hd)
+        outs.append(jnp.transpose(o, (0, 3, 1, 2, 4)))  # (B,qc,K,G,hd)
+    out = jnp.concatenate(outs, axis=1)
+    return _merge_gqa(out).astype(q.dtype)
+
+
+def local_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    pos: jax.Array, *, window: int) -> jax.Array:
+    """Exact causal sliding-window self-attention via block-local computation.
+
+    Each token attends to the previous ``window`` tokens (inclusive of self).
+    Blocks of size ``window`` attend to (self, previous) block only -> cost
+    O(S * 2W) instead of O(S^2). q: (B,S,H,hd), k/v: (B,S,K,hd).
+    """
+    b, s, h, d = q.shape
+    num_kv = k.shape[2]
+    w = min(window, s)
+    pad = (-s) % w
+    if pad:
+        padf = lambda x: jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+        q, k, v = padf(q), padf(k), padf(v)
+        if pos.ndim == 1:
+            pos = jnp.pad(pos, (0, pad), constant_values=-1)
+        else:
+            pos = jnp.pad(pos, ((0, 0), (0, pad)), constant_values=-1)
+    sp = q.shape[1]
+    nb = sp // w
+    if pos.ndim == 1:
+        pos = jnp.broadcast_to(pos[None], (b, sp))
+
+    qb = _split_gqa(q, num_kv).reshape(b, nb, w, num_kv, h // num_kv, d)
+    kb = k.reshape(b, nb, w, num_kv, d)
+    vb = v.reshape(b, nb, w, num_kv, d)
+    pb = pos.reshape(b, nb, w)
+
+    # previous block (block 0's previous is all-masked via position -1)
+    prev = lambda x, fill: jnp.concatenate(
+        [jnp.full_like(x[:, :1], fill), x[:, :-1]], axis=1)
+    k2 = jnp.concatenate([prev(kb, 0.0), kb], axis=2)      # (B,nb,2w,K,hd)
+    v2 = jnp.concatenate([prev(vb, 0.0), vb], axis=2)
+    p2 = jnp.concatenate([prev(pb, -1), pb], axis=2)        # (B,nb,2w)
+
+    scale = d ** -0.5
+    sco = jnp.einsum("bnqkgd,bnskd->bnkgqs", qb.astype(jnp.float32),
+                     k2.astype(jnp.float32)) * scale
+    diff = pb[:, :, :, None] - p2[:, :, None, :]  # (B,nb,w,2w)
+    ok = (p2[:, :, None, :] >= 0) & (diff >= 0) & (diff < w)
+    sco = sco + jnp.where(ok, 0.0, NEG_INF)[:, :, None, None, :, :]
+    prob = jax.nn.softmax(sco, axis=-1)
+    o = jnp.einsum("bnkgqs,bnskd->bnqkgd", prob, v2.astype(jnp.float32))
+    o = o.reshape(b, sp, h, d)[:, :s]
+    return o.astype(q.dtype)
+
+
+def decode_attention_xla(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         pos_q: jax.Array, pos_cache: jax.Array, *,
+                         window: Optional[int] = None) -> jax.Array:
+    """One-token decode against a (possibly ring-buffer) KV cache.
+
+    q: (B, 1, H, hd); k/v_cache: (B, T, K, hd); pos_q: (B,) current absolute
+    position; pos_cache: (B, T) absolute position per slot (-1 = empty).
+    """
+    num_kv = k_cache.shape[2]
+    qg = _split_gqa(q, num_kv)  # (B,1,K,G,hd)
+    scale = q.shape[-1] ** -0.5
+    # keep the (huge) cache in bf16 and accumulate in f32 — an explicit
+    # astype would materialize (and reshard) an f32 copy of the whole cache
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg.astype(k_cache.dtype), k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    bias = _mask_bias(pos_q[:, None], pos_cache, True, window)  # (B,1,T)
+    s = s + bias[:, None, None, :, :]
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return _merge_gqa(o).astype(q.dtype)
+
+
+def attention(q, k, v, pos_q, pos_kv, *, causal=True, window=None,
+              impl="auto", q_chunk=2048, kv_chunk=2048):
+    """Dispatcher. impl: auto | dense | flash | local | pallas."""
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=causal, window=window)
+    if impl == "auto":
+        sq, skv = q.shape[1], k.shape[1]
+        if window is not None and causal and sq == skv and sq > window:
+            impl = "local"
+        elif sq * skv <= 4096 * 4096 // 4:
+            impl = "dense"
+        else:
+            impl = "flash"
+    if impl == "dense":
+        return dense_attention(q, k, v, pos_q, pos_kv, causal=causal, window=window)
+    if impl == "local":
+        return local_attention(q, k, v, pos_q, window=window)
+    if impl == "flash":
+        return flash_attention_xla(q, k, v, pos_q, pos_kv, causal=causal,
+                                   window=window, q_chunk=q_chunk, kv_chunk=kv_chunk)
+    raise ValueError(impl)

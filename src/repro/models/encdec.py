@@ -1,0 +1,347 @@
+"""Encoder-decoder LM (Whisper-small family).
+
+Encoder: bidirectional attention over precomputed audio-frame embeddings
+(conv frontend is a STUB per the assignment — ``input_specs`` supplies mel
+frames, a linear projection stands in for the two conv1d layers).
+Decoder: causal self-attention (RoPE; the original uses learned positions —
+documented deviation) + cross-attention into the encoder output.
+
+Whisper uses LayerNorm (with bias); attention/MLP biases are omitted
+(documented deviation, immaterial for systems purposes).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig, ShardingConfig
+from repro.distributed.sharding import logical_constraint
+from repro.models import attention as attn_mod
+from repro.models.layers import (apply_rope, embed, layer_norm, pad_vocab,
+                                 rope_freqs, unembed)
+from repro.models.mlp import mlp_forward, mlp_specs
+from repro.models.spec import ParamSpec, init_tree, shape_tree
+from repro.models.transformer import _remat
+
+
+def _ln_specs(d, ps, pa):
+    return {"w": ParamSpec(ps + (d,), pa + ("embed",), "ones"),
+            "b": ParamSpec(ps + (d,), pa + ("embed",), "zeros")}
+
+
+def _attn_proj_specs(cfg, ps, pa):
+    d, h, k, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "wq": ParamSpec(ps + (d, h * hd), pa + ("embed", "heads"), "scaled"),
+        "wk": ParamSpec(ps + (d, k * hd), pa + ("embed", "kv_heads"), "scaled"),
+        "wv": ParamSpec(ps + (d, k * hd), pa + ("embed", "kv_heads"), "scaled"),
+        "wo": ParamSpec(ps + (h * hd, d), pa + ("heads", "embed"), "scaled"),
+    }
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig, mesh=None,
+                 sharding: ShardingConfig = ShardingConfig(),
+                 attn_impl: str = "auto", param_dtype: str = ""):
+        assert cfg.family == "encdec"
+        self.cfg = cfg
+        self.mesh = mesh
+        self.sharding = sharding
+        self.attn_impl = attn_impl
+        self.v_pad = pad_vocab(cfg.vocab_size)
+        self.dtype = jnp.dtype(param_dtype or cfg.dtype)
+
+    # ------------------------------------------------------------------
+
+    def specs(self) -> dict:
+        cfg = self.cfg
+        d = cfg.d_model
+        el, dl = cfg.encoder_layers, cfg.num_layers
+        enc_block = {
+            "ln1": _ln_specs(d, (el,), ("layers",)),
+            "attn": _attn_proj_specs(cfg, (el,), ("layers",)),
+            "ln2": _ln_specs(d, (el,), ("layers",)),
+            "mlp": mlp_specs(d, cfg.d_ff, cfg.activation, ((el, "layers"),)),
+        }
+        dec_block = {
+            "ln1": _ln_specs(d, (dl,), ("layers",)),
+            "self_attn": _attn_proj_specs(cfg, (dl,), ("layers",)),
+            "ln_x": _ln_specs(d, (dl,), ("layers",)),
+            "cross_attn": _attn_proj_specs(cfg, (dl,), ("layers",)),
+            "ln2": _ln_specs(d, (dl,), ("layers",)),
+            "mlp": mlp_specs(d, cfg.d_ff, cfg.activation, ((dl, "layers"),)),
+        }
+        return {
+            "proj_in": ParamSpec((cfg.frontend_dim, d), ("frontend", "embed"),
+                                 "scaled"),
+            "enc_pos": ParamSpec((cfg.encoder_seq, d), (None, "embed"), "normal"),
+            "enc_blocks": enc_block,
+            "enc_ln_f": _ln_specs(d, (), ()),
+            "embed": ParamSpec((self.v_pad, d), ("vocab", "embed"), "normal"),
+            "dec_blocks": dec_block,
+            "dec_ln_f": _ln_specs(d, (), ()),
+        }
+
+    def init(self, rng):
+        return init_tree(self.specs(), rng, self.dtype)
+
+    def param_shapes(self):
+        return shape_tree(self.specs(), self.dtype)
+
+    def input_specs(self, shape: ShapeConfig) -> Tuple[dict, dict]:
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        frames = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.frontend_dim),
+                                      jnp.float32)
+        if shape.kind in ("train", "prefill"):
+            specs = {"frames": frames,
+                     "tokens": jax.ShapeDtypeStruct((b, s), i32)}
+            axes = {"frames": ("batch", None, "frontend"),
+                    "tokens": ("batch", "seq")}
+            if shape.kind == "train":
+                specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+                axes["labels"] = ("batch", "seq")
+        else:
+            specs = {"tokens": jax.ShapeDtypeStruct((b, 1), i32),
+                     "positions": jax.ShapeDtypeStruct((b,), i32)}
+            axes = {"tokens": ("batch", "seq"), "positions": ("batch",)}
+        return specs, axes
+
+    # ------------------------------------------------------------------
+
+    def _constrain(self, x, axes):
+        return logical_constraint(x, axes, self.mesh)
+
+    def _mha(self, lp, xq, xkv, pos_q, pos_kv, causal, mode="full",
+             lcache=None, idx=None):
+        cfg = self.cfg
+        b, sq, d = xq.shape
+        h_, k_, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+        q = jnp.einsum("bsd,dh->bsh", xq, lp["wq"]).reshape(b, sq, h_, hd)
+        if mode == "cross_cached":
+            k, v = lcache["k"], lcache["v"]
+        else:
+            skv = xkv.shape[1]
+            k = jnp.einsum("bsd,dh->bsh", xkv, lp["wk"]).reshape(b, skv, k_, hd)
+            v = jnp.einsum("bsd,dh->bsh", xkv, lp["wv"]).reshape(b, skv, k_, hd)
+        if causal and mode != "cross_cached":  # RoPE on decoder self-attn only
+            cos, sin = rope_freqs(pos_q, hd, cfg.rope_theta)
+            q = apply_rope(q, cos, sin)
+            if mode != "decode":
+                k = apply_rope(k, cos, sin)
+            else:
+                cosk, sink = rope_freqs(pos_q, hd, cfg.rope_theta)
+                k = apply_rope(k, cosk, sink)
+        new_cache = lcache
+        if mode == "decode":
+            bi = jnp.arange(b)
+            kc = lcache["k"].at[bi, idx].set(k[:, 0].astype(lcache["k"].dtype))
+            vc = lcache["v"].at[bi, idx].set(v[:, 0].astype(lcache["v"].dtype))
+            out = attn_mod.decode_attention_xla(q, kc, vc, pos_q[:, 0], pos_kv)
+            new_cache = {"k": kc, "v": vc}
+        elif mode == "cross_cached":
+            out = attn_mod.decode_attention_xla(
+                q, k, v, jnp.full((b,), 10**9, jnp.int32), pos_kv)
+        else:
+            out = attn_mod.attention(q, k, v, pos_q, pos_kv, causal=causal,
+                                     impl=self.attn_impl)
+            if mode == "prefill":
+                new_cache = {"k": k, "v": v}
+        o = jnp.einsum("bsh,hd->bsd", out.reshape(b, sq, h_ * hd), lp["wo"])
+        return o.astype(xq.dtype), new_cache
+
+    def encode(self, params, frames):
+        cfg = self.cfg
+        x = jnp.einsum("bsf,fd->bsd", frames.astype(self.dtype),
+                       params["proj_in"])
+        x = x + params["enc_pos"][None].astype(self.dtype)
+        x = self._constrain(x, ("batch", "seq", "embed"))
+        b, s, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+        def body(x, lp):
+            h = layer_norm(x, lp["ln1"]["w"], lp["ln1"]["b"], cfg.norm_eps)
+            o, _ = self._mha(lp["attn"], h, h, pos, pos, causal=False)
+            x = x + o
+            h = layer_norm(x, lp["ln2"]["w"], lp["ln2"]["b"], cfg.norm_eps)
+            x = x + mlp_forward(lp["mlp"], h, cfg.activation).astype(x.dtype)
+            return x, None
+
+        x, _ = jax.lax.scan(_remat(body, self.sharding.remat_policy),
+                            x, params["enc_blocks"])
+        return layer_norm(x, params["enc_ln_f"]["w"], params["enc_ln_f"]["b"],
+                          cfg.norm_eps)
+
+    def _decode_stack(self, params, x, enc_out, mode, cache):
+        cfg = self.cfg
+        b, s, _ = x.shape
+        if mode == "decode":
+            pos = cache["positions_now"]  # (B,1), injected by decode_step
+        else:
+            pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        enc_pos = None
+        if enc_out is not None:
+            se = enc_out.shape[1]
+            enc_pos = jnp.broadcast_to(jnp.arange(se, dtype=jnp.int32)[None],
+                                       (b, se))
+        idx = cache["index"] if (cache and "index" in cache) else None
+        pos_kv = cache["pos"] if (cache and "pos" in cache) else None
+
+        def body(carry, xs):
+            x = carry
+            lp, lc = xs
+            h = layer_norm(x, lp["ln1"]["w"], lp["ln1"]["b"], cfg.norm_eps)
+            if mode == "decode":
+                o, nc_self = self._mha(lp["self_attn"], h, h, pos, pos_kv,
+                                       True, "decode", lc["self"], idx)
+            else:
+                o, nc_self = self._mha(lp["self_attn"], h, h, pos, pos, True,
+                                       "prefill" if mode == "prefill" else "full")
+            x = x + o
+            h = layer_norm(x, lp["ln_x"]["w"], lp["ln_x"]["b"], cfg.norm_eps)
+            if mode == "decode":
+                o, _ = self._mha(lp["cross_attn"], h, None, pos,
+                                 lc["cross_pos"], False, "cross_cached",
+                                 lc["cross"])
+                nc_cross = lc["cross"]
+            else:
+                o, nc_cross = self._mha(
+                    lp["cross_attn"], h, enc_out, pos, enc_pos, False,
+                    "prefill" if mode == "prefill" else "full")
+            x = x + o
+            h = layer_norm(x, lp["ln2"]["w"], lp["ln2"]["b"], cfg.norm_eps)
+            x = x + mlp_forward(lp["mlp"], h, cfg.activation).astype(x.dtype)
+            ys = None
+            if mode == "prefill":
+                ys = {"self": nc_self, "cross": nc_cross}
+            elif mode == "decode":
+                ys = {"self": nc_self, "cross": lc["cross"]}
+            return x, ys
+
+        policy = self.sharding.remat_policy if mode == "train" else "none"
+        if mode == "decode":
+            lc_tree = {"self": cache["self"], "cross": cache["cross"],
+                       "cross_pos": None}
+            # cross_pos is shared (not stacked): close over it
+            cross_pos = cache["cross_pos"]
+
+            def body2(carry, xs):
+                lp, lc = xs
+                lc = dict(lc)
+                lc["cross_pos"] = cross_pos
+                return body(carry, (lp, lc))
+            x, ys = jax.lax.scan(body2, x,
+                                 (params["dec_blocks"],
+                                  {"self": cache["self"], "cross": cache["cross"]}))
+        else:
+            x, ys = jax.lax.scan(
+                _remat(lambda c, lp: body(c, (lp, None)), policy),
+                x, params["dec_blocks"])
+        x = layer_norm(x, params["dec_ln_f"]["w"], params["dec_ln_f"]["b"],
+                       cfg.norm_eps)
+        return x, ys
+
+    # ------------------------------------------------------------------
+
+    def loss(self, params, batch):
+        enc = self.encode(params, batch["frames"])
+        x = embed(batch["tokens"], params["embed"]).astype(self.dtype)
+        x = self._constrain(x, ("batch", "seq", "embed"))
+        x, _ = self._decode_stack(params, x, enc, "train", None)
+        labels = batch["labels"]
+        mask = jnp.ones_like(labels, jnp.float32)
+        # chunked CE (same scheme as DecoderLM)
+        from repro.models.transformer import DecoderLM
+        ce = DecoderLM._chunked_ce(self, x, params["embed"], labels, mask)
+        return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+    def prefill(self, params, batch, capacity: int):
+        cfg = self.cfg
+        enc = self.encode(params, batch["frames"]) if "frames" in batch else None
+        x = embed(batch["tokens"], params["embed"]).astype(self.dtype)
+        x, ys = self._decode_stack(params, x, enc, "prefill", None)
+        b, s, _ = x.shape
+        logits = unembed(x[:, -1:].astype(jnp.float32), params["embed"],
+                         cfg.vocab_size)[:, 0]
+
+        def pad_full(kv):
+            if s >= capacity:
+                return kv[:, :, s - capacity:]
+            pad = [(0, 0)] * kv.ndim
+            pad[2] = (0, capacity - s)
+            return jnp.pad(kv, pad)
+
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        pos = (pos[:, s - capacity:] if s >= capacity else
+               jnp.pad(pos, ((0, 0), (0, capacity - s)), constant_values=-1))
+        se = enc.shape[1]
+        cache = {
+            "self": jax.tree.map(pad_full, ys["self"]),
+            "cross": ys["cross"],
+            "cross_pos": jnp.broadcast_to(
+                jnp.arange(se, dtype=jnp.int32)[None], (b, se)),
+            "pos": pos,
+            "index": jnp.full((b,), min(s, capacity) % max(capacity, 1),
+                              jnp.int32),
+        }
+        return logits, cache
+
+    def cache_specs(self, batch: int, capacity: int):
+        cfg = self.cfg
+        k, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        dl, se = cfg.num_layers, cfg.encoder_seq
+        kv = lambda t: {
+            "k": jax.ShapeDtypeStruct((dl, batch, t, k, hd), self.dtype),
+            "v": jax.ShapeDtypeStruct((dl, batch, t, k, hd), self.dtype)}
+        return {
+            "self": kv(capacity),
+            "cross": kv(se),
+            "cross_pos": jax.ShapeDtypeStruct((batch, se), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((batch, capacity), jnp.int32),
+            "index": jax.ShapeDtypeStruct((batch,), jnp.int32),
+        }
+
+    def cache_axes(self, batch: int, capacity: int):
+        kvax = lambda: {"k": ("layers", "batch", "seq", "kv_heads", None),
+                        "v": ("layers", "batch", "seq", "kv_heads", None)}
+        return {"self": kvax(), "cross": kvax(),
+                "cross_pos": ("batch", "seq"), "pos": ("batch", "seq"),
+                "index": ("batch",)}
+
+    def init_cache(self, batch: int, capacity: int):
+        structs = self.cache_specs(batch, capacity)
+        cache = jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype), structs)
+        cache["pos"] = jnp.full((batch, capacity), -1, jnp.int32)
+        cache["cross_pos"] = jnp.broadcast_to(
+            jnp.arange(cache["cross_pos"].shape[1], dtype=jnp.int32)[None],
+            cache["cross_pos"].shape)
+        return cache
+
+    def decode_step(self, params, cache, batch):
+        cfg = self.cfg
+        new_cache = dict(cache)
+        idx = cache["index"]  # (B,)
+        bi = jnp.arange(idx.shape[0])
+        new_cache["pos"] = cache["pos"].at[bi, idx].set(
+            batch["positions"].astype(jnp.int32))
+        cap = cache["pos"].shape[1]
+        new_cache["index"] = (idx + 1) % cap
+        run_cache = dict(cache)
+        run_cache["pos"] = new_cache["pos"]
+        run_cache["positions_now"] = batch["positions"][:, None]
+        x = embed(batch["tokens"], params["embed"]).astype(self.dtype)
+        x, ys = self._decode_stack(params, x, None, "decode", run_cache)
+        new_cache["self"] = ys["self"]
+        logits = unembed(x.astype(jnp.float32), params["embed"],
+                         cfg.vocab_size)[:, 0]
+        return logits, new_cache
+
+    def forward(self, params, batch, mode="train", cache=None):
+        """Uniform-API hook (hidden states of the decoder)."""
+        enc = self.encode(params, batch["frames"])
+        x = embed(batch["tokens"], params["embed"]).astype(self.dtype)
+        x, _ = self._decode_stack(params, x, enc, "train", None)
+        return x, jnp.zeros((), jnp.float32), {}, 0

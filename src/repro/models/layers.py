@@ -1,0 +1,119 @@
+"""Shared building blocks: norms, RoPE, activations, embeddings, vocab padding."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+
+def pad_vocab(v: int, multiple: int = 256) -> int:
+    """Pad vocab to a multiple so the unembedding shards evenly over TP."""
+    return ((v + multiple - 1) // multiple) * multiple
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array,
+               eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def activation_fn(name: str, x: jax.Array, gate: Optional[jax.Array] = None) -> jax.Array:
+    """Gated and ungated MLP activations. ``gate`` is the linear branch of GLU."""
+    if name == "swiglu":
+        return jax.nn.silu(x) * gate
+    if name == "geglu":
+        return jax.nn.gelu(x) * gate
+    if name == "squared_relu":  # Primer / Nemotron-4
+        r = jax.nn.relu(x)
+        return r * r
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def is_gated(name: str) -> bool:
+    return name in ("swiglu", "geglu")
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(positions: jax.Array, head_dim: int, theta: float) -> tuple:
+    """cos/sin tables for the given positions. positions: (...,) int32.
+
+    Returns (cos, sin) with shape positions.shape + (head_dim // 2,), float32.
+    """
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, hd); cos/sin: (B, S, half) or (S, half)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (S, half) -> broadcast over batch
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:  # (B, S, half)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    dtype = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    """tokens: (B, S) int32; table: (V_pad, D)."""
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x: jax.Array, table: jax.Array, true_vocab: int) -> jax.Array:
+    """Project to logits; mask the padded vocab tail with -inf.
+
+    x: (B, S, D); table: (V_pad, D) -> logits (B, S, V_pad).
+    """
+    logits = jnp.einsum("bsd,vd->bsv", x, table)
+    v_pad = table.shape[0]
+    if v_pad != true_vocab:
+        mask = jnp.arange(v_pad) < true_vocab
+        logits = jnp.where(mask[None, None, :], logits, -1e30)
+    return logits
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token-level CE. logits (B,S,V), labels (B,S) int32, mask (B,S)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

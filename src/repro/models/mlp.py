@@ -1,0 +1,35 @@
+"""Dense MLP variants: SwiGLU / GeGLU (fused gate+up), squared-ReLU, GELU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import activation_fn, is_gated
+from repro.models.spec import ParamSpec
+
+
+def mlp_specs(d_model: int, d_ff: int, activation: str, prefix_axes=()) -> dict:
+    """Param specs for one dense MLP. ``prefix_axes`` prepends stacked-layer dims."""
+    pshape = tuple(n for n, _ in prefix_axes)
+    paxes = tuple(a for _, a in prefix_axes)
+    if is_gated(activation):
+        return {
+            # fused [gate; up] projection, column-parallel over ffn
+            "wi": ParamSpec(pshape + (d_model, 2 * d_ff), paxes + ("embed", "ffn"), "scaled"),
+            "wo": ParamSpec(pshape + (d_ff, d_model), paxes + ("ffn", "embed"), "scaled"),
+        }
+    return {
+        "wi": ParamSpec(pshape + (d_model, d_ff), paxes + ("embed", "ffn"), "scaled"),
+        "wo": ParamSpec(pshape + (d_ff, d_model), paxes + ("ffn", "embed"), "scaled"),
+    }
+
+
+def mlp_forward(params: dict, x: jax.Array, activation: str) -> jax.Array:
+    """x: (..., D) -> (..., D)."""
+    h = jnp.einsum("...d,df->...f", x, params["wi"])
+    if is_gated(activation):
+        up, gate = jnp.split(h, 2, axis=-1)
+        h = activation_fn(activation, up, gate)
+    else:
+        h = activation_fn(activation, h)
+    return jnp.einsum("...f,fd->...d", h, params["wo"])

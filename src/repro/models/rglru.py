@@ -1,0 +1,114 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma [arXiv:2402.19427]).
+
+Recurrence: a_t = exp(-c * softplus(Λ) * r_t),  r_t, i_t input-dependent gates,
+h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t).
+
+Train/prefill uses ``jax.lax.associative_scan`` (O(S log S), parallel, exact);
+decode is an O(1) state update — this is what makes the hybrid arch
+``long_500k``-eligible.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.spec import ParamSpec
+
+_C = 8.0  # Griffin's fixed gate sharpness constant
+
+
+def rglru_specs(cfg: ModelConfig, prefix_axes=()) -> dict:
+    ps = tuple(n for n, _ in prefix_axes)
+    pa = tuple(a for _, a in prefix_axes)
+    d = cfg.d_model
+    w = cfg.lru_width or cfg.d_model
+    cw = cfg.ssm_conv or 4
+    return {
+        "ln": ParamSpec(ps + (d,), pa + ("embed",), "zeros"),
+        "wg": ParamSpec(ps + (d, w), pa + ("embed", "heads"), "scaled"),  # gelu branch
+        "wx": ParamSpec(ps + (d, w), pa + ("embed", "heads"), "scaled"),  # recurrent branch
+        "conv_w": ParamSpec(ps + (cw, w), pa + (None, "heads"), "scaled"),
+        "conv_b": ParamSpec(ps + (w,), pa + ("heads",), "zeros"),
+        "w_r": ParamSpec(ps + (w, w), pa + ("heads_in", "heads"), "scaled"),
+        "b_r": ParamSpec(ps + (w,), pa + ("heads",), "zeros"),
+        "w_i": ParamSpec(ps + (w, w), pa + ("heads_in", "heads"), "scaled"),
+        "b_i": ParamSpec(ps + (w,), pa + ("heads",), "zeros"),
+        "lam": ParamSpec(ps + (w,), pa + ("heads",), "ones"),  # Λ
+        "wo": ParamSpec(ps + (w, d), pa + ("heads", "embed"), "scaled"),
+    }
+
+
+def _gates(params: dict, xr: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """a_t (log-space) and scaled input. xr: (B,S,W) float32."""
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xr, params["w_r"].astype(jnp.float32))
+                       + params["b_r"].astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xr, params["w_i"].astype(jnp.float32))
+                       + params["b_i"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r  # (B,S,W) <= 0
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * (i * xr)
+    return a, gated_x
+
+
+def _lru_scan(a: jax.Array, b: jax.Array, h0: Optional[jax.Array]
+              ) -> Tuple[jax.Array, jax.Array]:
+    """h_t = a_t h_{t-1} + b_t via associative scan over axis=1.
+
+    a, b: (B,S,W) float32. Returns (h (B,S,W), h_last (B,W)).
+    """
+    if h0 is not None:
+        # fold the incoming state into the first step
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1, :]
+
+
+def rglru_forward(params: dict, x: jax.Array, cfg: ModelConfig, *,
+                  conv_state: Optional[jax.Array] = None,
+                  h_state: Optional[jax.Array] = None,
+                  ) -> Tuple[jax.Array, dict]:
+    """Full-sequence Griffin recurrent block. x: (B,S,D)."""
+    from repro.models.ssm import _causal_conv
+
+    res = x
+    xn = rms_norm(x, params["ln"], cfg.norm_eps)
+    g = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", xn, params["wg"]))
+    xr = jnp.einsum("bsd,dw->bsw", xn, params["wx"])
+    xr, new_conv = _causal_conv(xr, params["conv_w"], params["conv_b"], conv_state)
+    a, gx = _gates(params, xr.astype(jnp.float32))
+    h, h_last = _lru_scan(a, gx, h_state)
+    y = (g.astype(jnp.float32) * h).astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", y, params["wo"])
+    return res + out, {"conv": new_conv, "h": h_last}
+
+
+def rglru_decode(params: dict, x: jax.Array, cfg: ModelConfig, cache: dict
+                 ) -> Tuple[jax.Array, dict]:
+    """Single-token decode. x: (B,1,D); cache {"conv": (B,cw-1,W), "h": (B,W)}."""
+    from repro.models.ssm import _causal_conv
+
+    res = x
+    xn = rms_norm(x, params["ln"], cfg.norm_eps)
+    g = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", xn, params["wg"]))
+    xr = jnp.einsum("bsd,dw->bsw", xn, params["wx"])
+    xr, new_conv = _causal_conv(xr, params["conv_w"], params["conv_b"],
+                                cache["conv"])
+    a, gx = _gates(params, xr.astype(jnp.float32))
+    h = a[:, 0] * cache["h"] + gx[:, 0]  # (B,W)
+    y = (g[:, 0].astype(jnp.float32) * h).astype(x.dtype)[:, None, :]
+    out = jnp.einsum("bsw,wd->bsd", y, params["wo"])
+    return res + out, {"conv": new_conv, "h": h}
+
+
+def rglru_cache_shape(cfg: ModelConfig, batch: int) -> dict:
+    w = cfg.lru_width or cfg.d_model
+    cw = cfg.ssm_conv or 4
+    return {"conv": (batch, cw - 1, w), "h": (batch, w)}

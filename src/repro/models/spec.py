@@ -1,0 +1,81 @@
+"""Parameter-spec system: one declarative tree drives init, dry-run
+ShapeDtypeStructs, and sharding PartitionSpecs — no triple maintenance.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Axis = Optional[str]
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """Declarative description of one parameter tensor.
+
+    ``axes`` are *logical* axis names (resolved to mesh axes by
+    ``repro.distributed.sharding``); len(axes) == len(shape).
+    """
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Axis, ...]
+    init: str = "normal"  # normal | zeros | ones | scaled | small
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn: Callable[[ParamSpec], Any], tree: Dict) -> Dict:
+    return jax.tree.map(fn, tree, is_leaf=is_spec)
+
+
+def init_param(spec: ParamSpec, key: jax.Array, dtype: jnp.dtype) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "normal":
+        return (jax.random.normal(key, spec.shape, jnp.float32) * spec.scale).astype(dtype)
+    if spec.init == "scaled":  # fan-in scaled (truncated-normal-ish)
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        std = 1.0 / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dtype)
+    if spec.init == "small":
+        return (jax.random.normal(key, spec.shape, jnp.float32) * 1e-3).astype(dtype)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def init_tree(specs: Dict, rng: jax.Array, dtype: jnp.dtype) -> Dict:
+    """Materialize a param pytree from a spec tree (deterministic per-path keys)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    arrs = [init_param(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def shape_tree(specs: Dict, dtype: jnp.dtype) -> Dict:
+    """ShapeDtypeStruct tree — used by the dry-run (no allocation)."""
+    return tree_map_specs(lambda s: jax.ShapeDtypeStruct(s.shape, dtype), specs)
+
+
+def axes_tree(specs: Dict) -> Dict:
+    return tree_map_specs(lambda s: s.axes, specs)
+
+
+def count_tree(specs: Dict) -> int:
+    total = 0
+    for s in jax.tree.leaves(specs, is_leaf=is_spec):
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n
+    return total

@@ -1,0 +1,215 @@
+"""Mamba-2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Chunked semi-separable computation: quadratic attention-like term within
+chunks + linear recurrence across chunks. Decode is an O(1) state update.
+
+TP sharding: heads / d_inner are sharded over the model axis (B/C projections
+are small, replicated); out_proj is row-parallel (XLA inserts the reduce).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.spec import ParamSpec
+
+
+def ssd_specs(cfg: ModelConfig, prefix_axes=()) -> dict:
+    ps = tuple(n for n, _ in prefix_axes)
+    pa = tuple(a for _, a in prefix_axes)
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    w = cfg.ssm_conv
+    conv_ch = di + 2 * n  # conv runs over [x, B, C] channels
+    return {
+        "ln": ParamSpec(ps + (d,), pa + ("embed",), "zeros"),
+        "wz": ParamSpec(ps + (d, di), pa + ("embed", "heads"), "scaled"),
+        "wx": ParamSpec(ps + (d, di), pa + ("embed", "heads"), "scaled"),
+        "wb": ParamSpec(ps + (d, n), pa + ("embed", None), "scaled"),
+        "wc": ParamSpec(ps + (d, n), pa + ("embed", None), "scaled"),
+        "wdt": ParamSpec(ps + (d, h), pa + ("embed", "heads"), "scaled"),
+        "conv_w": ParamSpec(ps + (w, conv_ch), pa + (None, "heads"), "scaled"),
+        "conv_b": ParamSpec(ps + (conv_ch,), pa + ("heads",), "zeros"),
+        "a_log": ParamSpec(ps + (h,), pa + ("heads",), "ones"),
+        "d_skip": ParamSpec(ps + (h,), pa + ("heads",), "ones"),
+        "dt_bias": ParamSpec(ps + (h,), pa + ("heads",), "zeros"),
+        "gn": ParamSpec(ps + (di,), pa + ("heads",), "zeros"),  # gated RMSNorm
+        "wo": ParamSpec(ps + (di, d), pa + ("heads", "embed"), "scaled"),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x: (B,S,C); w: (W,C); state: (B,W-1,C) history.
+
+    Returns (y (B,S,C), new_state (B,W-1,C)).
+    """
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # (B, S+W-1, C)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(width))
+    y = y + b[None, None, :]
+    new_state = xp[:, xp.shape[1] - (width - 1):, :]
+    return jax.nn.silu(y), new_state
+
+
+def _ssd_chunked(xh: jax.Array, dt: jax.Array, a: jax.Array, bmat: jax.Array,
+                 cmat: jax.Array, chunk: int, h0: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    xh: (B,S,H,P) inputs per head; dt: (B,S,H) softplus'd step; a: (H,)
+    negative decay rate; bmat/cmat: (B,S,N). Returns (y (B,S,H,P),
+    h_final (B,H,P,N)).
+    """
+    b_, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:  # ragged tail: dt=0 padding is exact (no state contribution)
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        s_orig, s = s, s + pad
+    nc = s // q
+    f32 = jnp.float32
+
+    xc = xh.reshape(b_, nc, q, h, p).astype(f32)
+    dtc = dt.reshape(b_, nc, q, h).astype(f32)
+    bc = bmat.reshape(b_, nc, q, n).astype(f32)
+    cc = cmat.reshape(b_, nc, q, n).astype(f32)
+
+    da = dtc * a[None, None, None, :]  # (B,nc,Q,H) negative
+    cum = jnp.cumsum(da, axis=2)  # within-chunk cumulative decay exponent
+    total = cum[:, :, -1:, :]  # (B,nc,1,H)
+
+    # ---- intra-chunk (quadratic within chunk) ----
+    # L[i,j] = exp(cum_i - cum_j) for i >= j. Mask INSIDE the exp: the
+    # upper triangle has positive exponents that overflow to inf, and the
+    # where-vjp would turn 0*inf into NaN gradients otherwise.
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    li = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    decay = jnp.exp(jnp.where(li, diff, -jnp.inf))
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)  # (B,nc,Q,Q)
+    w_ij = cb[..., None] * decay * dtc[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w_ij, xc)
+
+    # ---- chunk states ----
+    # state_c = sum_j exp(total - cum_j) * dt_j * B_j (x) x_j
+    sdecay = jnp.exp(total - cum)  # (B,nc,Q,H)
+    sx = xc * (dtc * sdecay)[..., None]  # (B,nc,Q,H,P)
+    states = jnp.einsum("bcqn,bcqhp->bchpn", bc, sx)  # (B,nc,H,P,N)
+
+    # ---- inter-chunk recurrence ----
+    chunk_decay = jnp.exp(total[:, :, 0, :])  # (B,nc,H)
+
+    def step(hprev, inp):
+        dec, st = inp  # (B,H), (B,H,P,N)
+        hnew = hprev * dec[:, :, None, None] + st
+        return hnew, hprev  # emit state ENTERING the chunk
+
+    if h0 is None:
+        h0 = jnp.zeros((b_, h, p, n), f32)
+    hN, h_in = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)  # (B,nc,H,P,N) state entering each chunk
+
+    # ---- inter-chunk output: y_inter[i] = exp(cum_i) * C_i . h_in ----
+    y_inter = jnp.einsum("bcqn,bchpn->bcqhp", cc, h_in) * jnp.exp(cum)[..., None]
+
+    y = (y_intra + y_inter).reshape(b_, s, h, p)
+    if pad:
+        y = y[:, :s_orig]
+    return y, hN
+
+
+def ssd_forward(params: dict, x: jax.Array, cfg: ModelConfig, *,
+                conv_state: Optional[jax.Array] = None,
+                h_state: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, dict]:
+    """Full-sequence (train/prefill) Mamba-2 block. x: (B,S,D).
+
+    Returns (y (B,S,D), cache {"conv": (B,W-1,C), "h": (B,H,P,N)}).
+    """
+    b, s, d = x.shape
+    h_heads, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    res = x
+    xn = rms_norm(x, params["ln"], cfg.norm_eps)
+
+    z = jnp.einsum("bsd,de->bse", xn, params["wz"])
+    xi = jnp.einsum("bsd,de->bse", xn, params["wx"])
+    bm = jnp.einsum("bsd,dn->bsn", xn, params["wb"])
+    cm = jnp.einsum("bsd,dn->bsn", xn, params["wc"])
+    dt = jnp.einsum("bsd,dh->bsh", xn, params["wdt"])
+
+    xbc = jnp.concatenate([xi, bm, cm], axis=-1)
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"], conv_state)
+    di = cfg.d_inner
+    xi, bm, cm = xbc[..., :di], xbc[..., di:di + n], xbc[..., di + n:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+
+    xh = xi.reshape(b, s, h_heads, p)
+    y, h_new = _ssd_chunked(xh, dt, a, bm, cm, cfg.ssm_chunk, h_state)
+    y = y + xh.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z), params["gn"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["wo"])
+    return res + out, {"conv": new_conv, "h": h_new}
+
+
+def ssd_decode(params: dict, x: jax.Array, cfg: ModelConfig, cache: dict
+               ) -> Tuple[jax.Array, dict]:
+    """Single-token decode. x: (B,1,D); cache {"conv", "h"}."""
+    b, _, d = x.shape
+    h_heads, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    res = x
+    xn = rms_norm(x, params["ln"], cfg.norm_eps)
+
+    z = jnp.einsum("bsd,de->bse", xn, params["wz"])
+    xi = jnp.einsum("bsd,de->bse", xn, params["wx"])
+    bm = jnp.einsum("bsd,dn->bsn", xn, params["wb"])
+    cm = jnp.einsum("bsd,dn->bsn", xn, params["wc"])
+    dt = jnp.einsum("bsd,dh->bsh", xn, params["wdt"])
+
+    xbc = jnp.concatenate([xi, bm, cm], axis=-1)
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 cache["conv"])
+    di = cfg.d_inner
+    xi, bm, cm = xbc[..., :di], xbc[..., di:di + n], xbc[..., di + n:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))[:, 0]  # (B,H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a[None, :])  # (B,H)
+
+    xh = xi[:, 0].reshape(b, h_heads, p).astype(jnp.float32)
+    hprev = cache["h"]
+    # h = exp(dt*a) h + dt * B (x) x
+    hnew = (hprev * da[:, :, None, None]
+            + jnp.einsum("bn,bhp->bhpn", bm[:, 0].astype(jnp.float32),
+                         xh * dt[..., None]))
+    y = jnp.einsum("bn,bhpn->bhp", cm[:, 0].astype(jnp.float32), hnew)
+    y = y + xh * params["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, di).astype(x.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z), params["gn"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["wo"])
+    return res + out, {"conv": new_conv, "h": hnew}
+
+
+def ssd_cache_shape(cfg: ModelConfig, batch: int) -> dict:
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": (batch, cfg.ssm_conv - 1, conv_ch),
+        "h": (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+    }

@@ -1,0 +1,611 @@
+"""Decoder-only LM covering the dense / MoE / VLM / SSM / hybrid families.
+
+One class, block-dispatch per family; repeated blocks run under
+``jax.lax.scan`` (stacked params, O(1) HLO vs depth) with optional remat.
+Three modes share the block code: ``train`` (full seq, no cache),
+``prefill`` (full seq, emits cache), ``decode`` (one token, consumes cache).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, ShapeConfig, ShardingConfig
+from repro.distributed.sharding import logical_constraint
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (cross_entropy_loss, embed, pad_vocab,
+                                 rms_norm, rope_freqs, apply_rope, unembed)
+from repro.models.mlp import mlp_forward, mlp_specs
+from repro.models.spec import (ParamSpec, init_tree, shape_tree)
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_saveable)
+    if policy == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    raise ValueError(policy)
+
+
+def attn_specs(cfg: ModelConfig, prefix_axes=(), include_mlp=True,
+               moe=False) -> dict:
+    ps = tuple(n for n, _ in prefix_axes)
+    pa = tuple(a for _, a in prefix_axes)
+    d, h, k, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    s = {
+        "ln1": ParamSpec(ps + (d,), pa + ("embed",), "zeros"),
+        "wq": ParamSpec(ps + (d, h * hd), pa + ("embed", "heads"), "scaled"),
+        "wk": ParamSpec(ps + (d, k * hd), pa + ("embed", "kv_heads"), "scaled"),
+        "wv": ParamSpec(ps + (d, k * hd), pa + ("embed", "kv_heads"), "scaled"),
+        "wo": ParamSpec(ps + (h * hd, d), pa + ("heads", "embed"), "scaled"),
+        "ln2": ParamSpec(ps + (d,), pa + ("embed",), "zeros"),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = ParamSpec(ps + (hd,), pa + (None,), "zeros")
+        s["k_norm"] = ParamSpec(ps + (hd,), pa + (None,), "zeros")
+    if moe:
+        s["moe"] = moe_mod.moe_specs(cfg, prefix_axes)
+    elif include_mlp:
+        s["mlp"] = mlp_specs(d, cfg.d_ff, cfg.activation, prefix_axes)
+    return s
+
+
+def rglru_unit_specs(cfg: ModelConfig, prefix_axes=()) -> dict:
+    ps = tuple(n for n, _ in prefix_axes)
+    pa = tuple(a for _, a in prefix_axes)
+    s = rglru_mod.rglru_specs(cfg, prefix_axes)
+    s["ln2"] = ParamSpec(ps + (cfg.d_model,), pa + ("embed",), "zeros")
+    s["mlp"] = mlp_specs(cfg.d_model, cfg.d_ff, cfg.activation, prefix_axes)
+    return s
+
+
+class DecoderLM:
+    """Functional decoder LM; all methods are jit-compatible pure functions."""
+
+    def __init__(self, cfg: ModelConfig, mesh=None,
+                 sharding: ShardingConfig = ShardingConfig(),
+                 attn_impl: str = "auto", moe_impl: str = "auto",
+                 param_dtype: str = ""):
+        assert cfg.family in ("dense", "moe", "vlm", "ssm", "hybrid"), cfg.family
+        self.cfg = cfg
+        self.mesh = mesh
+        self.sharding = sharding
+        self.attn_impl = attn_impl
+        self.moe_impl = moe_impl
+        self.v_pad = pad_vocab(cfg.vocab_size)
+        self.dtype = jnp.dtype(param_dtype or cfg.dtype)
+        # Megatron-style sequence parallelism: the residual stream (and thus
+        # the per-layer saved activations under remat) is sharded over the
+        # model axis between blocks; XLA re-gathers inside attention/MLP.
+        self._seq = "seq_sp" if sharding.sequence_parallel else "seq"
+
+    # ------------------------------------------------------------------
+    # specs / init
+    # ------------------------------------------------------------------
+
+    def _hybrid_counts(self) -> Tuple[int, int]:
+        """(full pattern repeats, extra leading-kind units)."""
+        pat = len(self.cfg.block_pattern)
+        return self.cfg.num_layers // pat, self.cfg.num_layers % pat
+
+    def specs(self) -> dict:
+        cfg = self.cfg
+        d = cfg.d_model
+        s: Dict[str, Any] = {
+            "embed": ParamSpec((self.v_pad, d), ("vocab", "embed"), "normal"),
+            "ln_f": ParamSpec((d,), ("embed",), "zeros"),
+        }
+        if cfg.frontend == "vision_stub":
+            s["proj_in"] = ParamSpec((cfg.frontend_dim, d), ("frontend", "embed"),
+                                     "scaled")
+        if not cfg.tie_embeddings:
+            s["unembed"] = ParamSpec((self.v_pad, d), ("vocab", "embed"), "scaled")
+
+        L = cfg.num_layers
+        if cfg.family in ("dense", "vlm"):
+            s["blocks"] = attn_specs(cfg, ((L, "layers"),))
+        elif cfg.family == "moe":
+            n_moe = L - cfg.first_k_dense
+            if cfg.first_k_dense:
+                s["dense_blocks"] = attn_specs(cfg, ((cfg.first_k_dense, "layers"),))
+            s["blocks"] = attn_specs(cfg, ((n_moe, "layers"),), moe=True)
+        elif cfg.family == "ssm":
+            s["blocks"] = ssm_mod.ssd_specs(cfg, ((L, "layers"),))
+        elif cfg.family == "hybrid":
+            reps, extra = self._hybrid_counts()
+            n_rec = sum(1 for b in cfg.block_pattern if b == "rglru")
+            s["repeats"] = {
+                "rglru": rglru_unit_specs(cfg, ((reps, "repeats"), (n_rec, "pattern"))),
+                "attn": attn_specs(cfg, ((reps, "repeats"),)),
+            }
+            if extra:
+                s["extra"] = rglru_unit_specs(cfg, ((extra, "layers"),))
+        return s
+
+    def init(self, rng: jax.Array) -> dict:
+        return init_tree(self.specs(), rng, self.dtype)
+
+    def param_shapes(self) -> dict:
+        return shape_tree(self.specs(), self.dtype)
+
+    # ------------------------------------------------------------------
+    # input specs (dry-run / data pipeline contract)
+    # ------------------------------------------------------------------
+
+    def input_specs(self, shape: ShapeConfig) -> Tuple[dict, dict]:
+        """(ShapeDtypeStruct tree, logical-axes tree) for a shape cell."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind in ("train", "prefill"):
+            specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+            axes = {"tokens": ("batch", "seq")}
+            if shape.kind == "train":
+                specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+                axes["labels"] = ("batch", "seq")
+            if cfg.frontend == "vision_stub":
+                specs["patches"] = jax.ShapeDtypeStruct(
+                    (b, cfg.num_patches, cfg.frontend_dim), jnp.float32)
+                axes["patches"] = ("batch", None, "frontend")
+        else:  # decode: one token against a seq_len-deep cache
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+                "positions": jax.ShapeDtypeStruct((b,), i32),
+            }
+            axes = {"tokens": ("batch", "seq"), "positions": ("batch",)}
+        return specs, axes
+
+    # ------------------------------------------------------------------
+    # cache
+    # ------------------------------------------------------------------
+
+    def cache_spec_tree(self, batch: int, capacity: int) -> dict:
+        """Shapes+axes of the decode cache as (ParamSpec-like) descriptors."""
+        cfg = self.cfg
+        hd, k = cfg.resolved_head_dim, cfg.num_kv_heads
+        L = cfg.num_layers
+        t: Dict[str, Any] = {}
+        full_kv = lambda n: {
+            "k": ParamSpec((n, batch, capacity, k, hd),
+                           ("layers", "batch", "seq", "kv_heads", None), "zeros"),
+            "v": ParamSpec((n, batch, capacity, k, hd),
+                           ("layers", "batch", "seq", "kv_heads", None), "zeros"),
+        }
+        if cfg.family in ("dense", "vlm"):
+            t["blocks"] = full_kv(L)
+            t["pos"] = ParamSpec((batch, capacity), ("batch", "seq"), "zeros")
+            t["index"] = ParamSpec((batch,), ("batch",), "zeros")
+        elif cfg.family == "moe":
+            if cfg.first_k_dense:
+                t["dense_blocks"] = full_kv(cfg.first_k_dense)
+            t["blocks"] = full_kv(L - cfg.first_k_dense)
+            t["pos"] = ParamSpec((batch, capacity), ("batch", "seq"), "zeros")
+            t["index"] = ParamSpec((batch,), ("batch",), "zeros")
+        elif cfg.family == "ssm":
+            cs = ssm_mod.ssd_cache_shape(cfg, batch)
+            t["blocks"] = {
+                "conv": ParamSpec((L,) + cs["conv"],
+                                  ("layers", "batch", None, "heads"), "zeros"),
+                "h": ParamSpec((L,) + cs["h"],
+                               ("layers", "batch", "heads", None, None), "zeros"),
+            }
+        elif cfg.family == "hybrid":
+            reps, extra = self._hybrid_counts()
+            n_rec = sum(1 for bk in cfg.block_pattern if bk == "rglru")
+            w = min(capacity, cfg.local_window)
+            cs = rglru_mod.rglru_cache_shape(cfg, batch)
+            rg = lambda pre, preax: {
+                "conv": ParamSpec(pre + cs["conv"], preax + ("batch", None, "heads"),
+                                  "zeros"),
+                "h": ParamSpec(pre + cs["h"], preax + ("batch", "heads"), "zeros"),
+            }
+            t["repeats"] = {
+                "rglru": rg((reps, n_rec), ("repeats", "pattern")),
+                "attn": {
+                    "k": ParamSpec((reps, batch, w, cfg.num_kv_heads, hd),
+                                   ("repeats", "batch", "seq", "kv_heads", None), "zeros"),
+                    "v": ParamSpec((reps, batch, w, cfg.num_kv_heads, hd),
+                                   ("repeats", "batch", "seq", "kv_heads", None), "zeros"),
+                },
+            }
+            if extra:
+                t["extra"] = rg((extra,), ("layers",))
+            t["pos"] = ParamSpec((batch, w), ("batch", "seq"), "zeros")
+            t["index"] = ParamSpec((batch,), ("batch",), "zeros")
+        return t
+
+    def cache_specs(self, batch: int, capacity: int):
+        """ShapeDtypeStruct tree of the decode cache.
+
+        pos/index are int32; recurrent ``h`` states are fp32 (accumulated);
+        kv and conv history use the model dtype.
+        """
+        tree = self.cache_spec_tree(batch, capacity)
+        out = {}
+        for key, sub in tree.items():
+            if key in ("pos", "index"):
+                out[key] = jax.ShapeDtypeStruct(sub.shape, jnp.int32)
+                continue
+            out[key] = jax.tree.map_with_path(
+                lambda path, ps: jax.ShapeDtypeStruct(
+                    ps.shape,
+                    jnp.float32 if any(
+                        getattr(p, "key", None) == "h" for p in path)
+                    else self.dtype),
+                sub, is_leaf=lambda x: isinstance(x, ParamSpec))
+        return out
+
+    def cache_axes(self, batch: int, capacity: int) -> dict:
+        """Logical-axes tree parallel to cache_specs (for dry-run sharding)."""
+        return jax.tree.map(lambda ps: ps.axes,
+                            self.cache_spec_tree(batch, capacity),
+                            is_leaf=lambda x: isinstance(x, ParamSpec))
+
+    def init_cache(self, batch: int, capacity: int) -> dict:
+        structs = self.cache_specs(batch, capacity)
+        cache = jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype), structs)
+        if "pos" in cache:
+            cache["pos"] = jnp.full(cache["pos"].shape, -1, jnp.int32)
+        return cache
+
+    # ------------------------------------------------------------------
+    # blocks
+    # ------------------------------------------------------------------
+
+    def _constrain(self, x, axes):
+        return logical_constraint(x, axes, self.mesh)
+
+    def _attn_block(self, lp, x, cos, sin, pos_q, pos_kv, mode, window,
+                    lcache, idx, moe: bool):
+        cfg = self.cfg
+        b, s, d = x.shape
+        h_, k_, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+        hh = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dh->bsh", hh, lp["wq"]).reshape(b, s, h_, hd)
+        k = jnp.einsum("bsd,dh->bsh", hh, lp["wk"]).reshape(b, s, k_, hd)
+        v = jnp.einsum("bsd,dh->bsh", hh, lp["wv"]).reshape(b, s, k_, hd)
+        if cfg.qk_norm:
+            q = rms_norm(q, lp["q_norm"], cfg.norm_eps)
+            k = rms_norm(k, lp["k_norm"], cfg.norm_eps)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        q = self._constrain(q, ("batch", "seq", "heads", None))
+
+        new_cache = None
+        if mode == "decode":
+            # per-slot write position (continuous batching: slots independent)
+            bi = jnp.arange(b)
+            kc = lcache["k"].at[bi, idx].set(k[:, 0].astype(lcache["k"].dtype))
+            vc = lcache["v"].at[bi, idx].set(v[:, 0].astype(lcache["v"].dtype))
+            out = attn_mod.decode_attention_xla(
+                q, kc, vc, pos_q[:, 0], pos_kv, window=window)
+            new_cache = {"k": kc, "v": vc}
+        else:
+            out = attn_mod.attention(
+                q, k, v, pos_q, pos_q, causal=True, window=window,
+                impl=self.attn_impl)
+            if mode == "prefill":
+                new_cache = {"k": k, "v": v}
+        out = out.reshape(b, s, h_ * hd)
+        x = x + jnp.einsum("bsh,hd->bsd", out, lp["wo"]).astype(x.dtype)
+        x = self._constrain(x, ("batch", self._seq, "embed"))
+
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if moe:
+            y, aux = moe_mod.moe_forward(lp["moe"], h2, cfg, self.mesh,
+                                         self.moe_impl)
+        else:
+            y, aux = mlp_forward(lp["mlp"], h2, cfg.activation), jnp.zeros((), jnp.float32)
+        x = x + y.astype(x.dtype)
+        return self._constrain(x, ("batch", self._seq, "embed")), aux, new_cache
+
+    def _rglru_unit(self, lp, x, mode, lcache):
+        cfg = self.cfg
+        if mode == "decode":
+            x, new_cache = rglru_mod.rglru_decode(lp, x, cfg, lcache)
+        else:
+            x, new_cache = rglru_mod.rglru_forward(lp, x, cfg)
+            if mode == "train":
+                new_cache = None
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + mlp_forward(lp["mlp"], h2, cfg.activation).astype(x.dtype)
+        return x, new_cache
+
+    # ------------------------------------------------------------------
+    # the stack
+    # ------------------------------------------------------------------
+
+    def _rope(self, positions):
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return None, None
+        return rope_freqs(positions, cfg.resolved_head_dim, cfg.rope_theta)
+
+    def _stack(self, params, x, positions, mode, cache):
+        cfg = self.cfg
+        cos, sin = self._rope(positions)
+        remat_on = mode == "train"
+        policy = self.sharding.remat_policy if remat_on else "none"
+        idx = cache["index"] if (cache is not None and "index" in cache) else None
+        pos_kv = cache["pos"] if (cache is not None and "pos" in cache) else None
+
+        if cfg.family in ("dense", "vlm", "moe"):
+            aux_total = jnp.zeros((), jnp.float32)
+            new_cache: Dict[str, Any] = {}
+
+            def run_group(x, aux_total, gparams, gcache, moe_flag):
+                def body(carry, xs):
+                    xx, aux = carry
+                    lp, lc = xs
+                    xx, a, nc = self._attn_block(
+                        lp, xx, cos, sin, positions, pos_kv, mode, None,
+                        lc, idx, moe_flag)
+                    return (xx, aux + a), nc
+                bodyc = _remat(body, policy)
+                if gcache is None:
+                    (x, aux_total), ys = jax.lax.scan(
+                        lambda c, lp: bodyc(c, (lp, None)), (x, aux_total),
+                        gparams)
+                else:
+                    (x, aux_total), ys = jax.lax.scan(
+                        bodyc, (x, aux_total), (gparams, gcache))
+                return x, aux_total, ys
+
+            if cfg.family == "moe" and cfg.first_k_dense:
+                gcache = cache.get("dense_blocks") if cache else None
+                x, aux_total, ys = run_group(x, aux_total, params["dense_blocks"],
+                                             gcache, False)
+                if mode != "train" and ys is not None:
+                    new_cache["dense_blocks"] = ys
+            gcache = cache.get("blocks") if cache else None
+            x, aux_total, ys = run_group(x, aux_total, params["blocks"], gcache,
+                                         cfg.family == "moe")
+            if mode != "train" and ys is not None:
+                new_cache["blocks"] = ys
+            return x, aux_total, new_cache
+
+        if cfg.family == "ssm":
+            def body(carry, xs):
+                xx = carry
+                lp, lc = xs
+                if mode == "decode":
+                    xx, nc = ssm_mod.ssd_decode(lp, xx, cfg, lc)
+                else:
+                    xx, nc = ssm_mod.ssd_forward(lp, xx, cfg)
+                    if mode == "train":
+                        nc = None
+                return xx, nc
+            bodyc = _remat(body, policy)
+            gcache = cache.get("blocks") if cache else None
+            if gcache is None:
+                x, ys = jax.lax.scan(lambda c, lp: bodyc(c, (lp, None)), x,
+                                     params["blocks"])
+            else:
+                x, ys = jax.lax.scan(bodyc, x, (params["blocks"], gcache))
+            new_cache = {"blocks": ys} if (mode != "train" and ys is not None) else {}
+            return x, jnp.zeros((), jnp.float32), new_cache
+
+        if cfg.family == "hybrid":
+            return self._hybrid_stack(params, x, positions, cos, sin, mode, cache)
+
+        raise ValueError(cfg.family)
+
+    def _hybrid_stack(self, params, x, positions, cos, sin, mode, cache):
+        cfg = self.cfg
+        reps, extra = self._hybrid_counts()
+        n_rec = sum(1 for bk in cfg.block_pattern if bk == "rglru")
+        policy = self.sharding.remat_policy if mode == "train" else "none"
+        idx = cache["index"] if (cache is not None and "index" in cache) else None
+        pos_kv = cache["pos"] if (cache is not None and "pos" in cache) else None
+        win = cfg.local_window
+
+        def repeat_body(carry, xs):
+            xx = carry
+            lp, lc = xs
+            rg_caches = []
+            for i in range(n_rec):
+                sub = jax.tree.map(lambda p: p[i], lp["rglru"])
+                subc = jax.tree.map(lambda p: p[i], lc["rglru"]) if lc else None
+                xx, nc = self._rglru_unit(sub, xx, mode, subc)
+                rg_caches.append(nc)
+            xx, _, anc = self._attn_block(
+                lp["attn"], xx, cos, sin, positions, pos_kv, mode, win,
+                lc["attn"] if lc else None, idx, False)
+            ys = None
+            if mode != "train":
+                ys = {"rglru": jax.tree.map(lambda *a: jnp.stack(a), *rg_caches),
+                      "attn": anc}
+            return xx, ys
+
+        bodyc = _remat(repeat_body, policy)
+        gcache = cache.get("repeats") if cache else None
+        if gcache is None:
+            x, ys = jax.lax.scan(lambda c, lp: bodyc(c, (lp, None)), x,
+                                 params["repeats"])
+        else:
+            x, ys = jax.lax.scan(bodyc, x, (params["repeats"], gcache))
+        new_cache = {"repeats": ys} if (mode != "train" and ys is not None) else {}
+
+        if extra:
+            ex_caches = []
+            for i in range(extra):
+                sub = jax.tree.map(lambda p: p[i], params["extra"])
+                subc = (jax.tree.map(lambda p: p[i], cache["extra"])
+                        if cache and "extra" in cache else None)
+                x, nc = self._rglru_unit(sub, x, mode, subc)
+                ex_caches.append(nc)
+            if mode != "train" and ex_caches[0] is not None:
+                new_cache["extra"] = jax.tree.map(lambda *a: jnp.stack(a), *ex_caches)
+        return x, jnp.zeros((), jnp.float32), new_cache
+
+    # ------------------------------------------------------------------
+    # modes
+    # ------------------------------------------------------------------
+
+    def _embed_inputs(self, params, batch, mode):
+        cfg = self.cfg
+        x = embed(batch["tokens"], params["embed"]).astype(self.dtype)
+        prefix = 0
+        if cfg.frontend == "vision_stub" and mode != "decode" and "patches" in batch:
+            px = jnp.einsum("bpf,fd->bpd",
+                            batch["patches"].astype(self.dtype),
+                            params["proj_in"])
+            x = jnp.concatenate([px, x], axis=1)
+            prefix = px.shape[1]
+        return self._constrain(x, ("batch", self._seq, "embed")), prefix
+
+    def forward(self, params, batch, mode="train", cache=None):
+        """Backbone -> final hidden states (B, S_total, D)."""
+        x, prefix = self._embed_inputs(params, batch, mode)
+        b, s, _ = x.shape
+        if mode == "decode":
+            positions = batch["positions"][:, None]  # (B,1)
+        else:
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                         (b, s))
+        x, aux, new_cache = self._stack(params, x, positions, mode, cache)
+        x = rms_norm(x, params["ln_f"], self.cfg.norm_eps)
+        return x, aux, new_cache, prefix
+
+    def _unembed_table(self, params):
+        return params["embed"] if self.cfg.tie_embeddings else params["unembed"]
+
+    def _chunked_ce(self, hidden, table, labels, mask):
+        b, s, d = hidden.shape
+        nc = 1
+        for cand in (8, 4, 2, 1):
+            if s % cand == 0 and s // cand >= 128:
+                nc = cand
+                break
+        c = s // nc
+        hs = jnp.moveaxis(hidden.reshape(b, nc, c, d), 1, 0)
+        ls = jnp.moveaxis(labels.reshape(b, nc, c), 1, 0)
+        ms = jnp.moveaxis(mask.reshape(b, nc, c), 1, 0)
+
+        def body(carry, xs):
+            tot, cnt = carry
+            h, lab, mk = xs
+            # h upcast to f32 -> einsum accumulates f32 without copying `table`
+            logits = unembed(h.astype(jnp.float32), table,
+                             self.cfg.vocab_size)
+            logits = self._constrain(logits, ("batch", "seq", "vocab"))
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+            nll = (logz - gold) * mk
+            return (tot + jnp.sum(nll), cnt + jnp.sum(mk)), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            jax.checkpoint(body), (jnp.zeros((), jnp.float32),) * 2, (hs, ls, ms))
+        return tot / jnp.maximum(cnt, 1.0)
+
+    def loss(self, params, batch):
+        """Mean CE (+ MoE aux). batch: tokens, labels, optional patches/mask."""
+        hidden, aux, _, prefix = self.forward(params, batch, "train")
+        labels = batch["labels"]
+        mask = batch.get("loss_mask")
+        if mask is None:
+            mask = jnp.ones_like(labels, jnp.float32)
+        if prefix:  # VLM: no loss on image-prefix positions
+            b = labels.shape[0]
+            labels = jnp.concatenate(
+                [jnp.zeros((b, prefix), labels.dtype), labels], axis=1)
+            mask = jnp.concatenate(
+                [jnp.zeros((b, prefix), mask.dtype), mask], axis=1)
+        ce = self._chunked_ce(hidden, self._unembed_table(params), labels,
+                              mask.astype(jnp.float32))
+        total = ce + self.cfg.router_aux_coef * aux
+        return total, {"ce": ce, "aux": aux}
+
+    def prefill(self, params, batch, capacity: int):
+        """Run the prompt, return (last-token logits (B, V), cache)."""
+        cfg = self.cfg
+        hidden, _, layer_caches, prefix = self.forward(params, batch, "prefill")
+        b, s, _ = hidden.shape
+        logits = unembed(hidden[:, -1:].astype(jnp.float32),
+                         self._unembed_table(params).astype(jnp.float32),
+                         cfg.vocab_size)[:, 0]
+        cache = self._assemble_prefill_cache(layer_caches, b, s, capacity)
+        return logits, cache
+
+    def _assemble_prefill_cache(self, layer_caches, b, s, capacity):
+        """Pad/roll per-layer prefill KV into capacity-sized decode caches."""
+        cfg = self.cfg
+        cache: Dict[str, Any] = {}
+
+        def pad_full(kv):  # (L,B,S,K,hd) -> (L,B,T,K,hd)
+            if s >= capacity:
+                return kv[:, :, s - capacity:]
+            pad = [(0, 0)] * kv.ndim
+            pad[2] = (0, capacity - s)
+            return jnp.pad(kv, pad)
+
+        if cfg.family in ("dense", "vlm", "moe"):
+            for key in ("dense_blocks", "blocks"):
+                if key in layer_caches:
+                    cache[key] = jax.tree.map(pad_full, layer_caches[key])
+            pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                   (b, s))
+            if s >= capacity:
+                pos = pos[:, s - capacity:]
+            else:
+                pos = jnp.pad(pos, ((0, 0), (0, capacity - s)),
+                              constant_values=-1)
+            cache["pos"] = pos
+            cache["index"] = jnp.full((b,), min(s, capacity) % max(capacity, 1),
+                                      jnp.int32)
+        elif cfg.family == "ssm":
+            cache["blocks"] = layer_caches["blocks"]
+        elif cfg.family == "hybrid":
+            w = min(capacity, cfg.local_window)
+
+            def ring(kv):  # (R,B,S,K,hd) -> (R,B,w,K,hd) ring-consistent
+                if s >= w:
+                    last = kv[:, :, s - w:]
+                    return jnp.roll(last, (s - w) % w, axis=2)
+                pad = [(0, 0)] * kv.ndim
+                pad[2] = (0, w - s)
+                return jnp.pad(kv, pad)
+
+            rep = layer_caches["repeats"]
+            cache["repeats"] = {"rglru": rep["rglru"],
+                                "attn": jax.tree.map(ring, rep["attn"])}
+            if "extra" in layer_caches:
+                cache["extra"] = layer_caches["extra"]
+            pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+            if s >= w:
+                pos = jnp.roll(pos[:, s - w:], (s - w) % w, axis=1)
+            else:
+                pos = jnp.pad(pos, ((0, 0), (0, w - s)), constant_values=-1)
+            cache["pos"] = pos
+            cache["index"] = jnp.full((b,), s % w, jnp.int32)
+        return cache
+
+    def decode_step(self, params, cache, batch):
+        """One token. batch: tokens (B,1), positions (B,). Returns (logits, cache)."""
+        cfg = self.cfg
+        new_cache = dict(cache)
+        if "pos" in cache:
+            idx = cache["index"]  # (B,) per-slot write positions
+            bi = jnp.arange(idx.shape[0])
+            new_cache["pos"] = cache["pos"].at[bi, idx].set(
+                batch["positions"].astype(jnp.int32))
+            cap = cache["pos"].shape[1]
+            new_cache["index"] = (idx + 1) % cap
+            cache = dict(cache)
+            cache["pos"] = new_cache["pos"]  # new token must see itself
+        hidden, _, layer_caches, _ = self.forward(params, batch, "decode", cache)
+        for key, val in layer_caches.items():
+            new_cache[key] = val
+        logits = unembed(hidden.astype(jnp.float32),
+                         self._unembed_table(params).astype(jnp.float32),
+                         cfg.vocab_size)[:, 0]
+        return logits, new_cache

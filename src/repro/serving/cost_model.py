@@ -1,0 +1,128 @@
+"""Analytic per-request cost model: FLOPs, HBM bytes, transfer bytes, latency.
+
+Drives the discrete-event simulator AND the roofline sanity checks. All
+formulas derive from the real ModelConfig (param counts come from the same
+spec trees that build the models — no hand-entered sizes).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.config import ModelConfig, TierConfig
+from repro.core.request import ModalityInput, Request
+
+
+@functools.lru_cache(maxsize=64)
+def _active_params(cfg: ModelConfig) -> int:
+    return cfg.active_param_count()
+
+
+@functools.lru_cache(maxsize=64)
+def _kv_bytes_per_token(cfg: ModelConfig) -> int:
+    """KV-cache bytes appended per generated/prefilled token (bf16)."""
+    if cfg.family == "ssm":
+        return 0  # O(1) state instead
+    hd, k = cfg.resolved_head_dim, cfg.num_kv_heads
+    n_attn = cfg.num_layers
+    if cfg.family == "hybrid":
+        n_attn = sum(1 for b in cfg.block_pattern if b == "local_attn") * (
+            cfg.num_layers // len(cfg.block_pattern))
+    return 2 * n_attn * k * hd * 2  # k+v, bf16
+
+
+def prefill_flops(cfg: ModelConfig, prompt_tokens: int,
+                  image_tokens: int = 0) -> float:
+    """2·N_active per token matmul FLOPs + quadratic attention term."""
+    s = prompt_tokens + image_tokens
+    linear = 2.0 * _active_params(cfg) * s
+    if cfg.family == "ssm":
+        attn = 2.0 * cfg.num_layers * s * cfg.ssm_chunk * cfg.d_inner
+    else:
+        hd, h = cfg.resolved_head_dim, cfg.num_heads
+        eff_ctx = s
+        if cfg.family == "hybrid":
+            eff_ctx = min(s, cfg.local_window)
+        attn = 4.0 * cfg.num_layers * s * eff_ctx * h * hd / 2.0  # causal half
+    return linear + attn
+
+
+def decode_flops(cfg: ModelConfig, context_len: int) -> float:
+    """FLOPs for ONE generated token at the given context length."""
+    linear = 2.0 * _active_params(cfg)
+    if cfg.family == "ssm":
+        attn = 2.0 * cfg.num_layers * cfg.d_inner * cfg.ssm_state
+    else:
+        hd, h = cfg.resolved_head_dim, cfg.num_heads
+        ctx = context_len
+        if cfg.family == "hybrid":
+            ctx = min(ctx, cfg.local_window)
+        attn = 4.0 * cfg.num_layers * ctx * h * hd
+    return linear + attn
+
+
+def decode_hbm_bytes(cfg: ModelConfig, context_len: int) -> float:
+    """HBM traffic for one decode step: weights + KV read (the decode bound)."""
+    weight_bytes = 2.0 * _active_params(cfg)  # bf16 resident weights
+    kv = _kv_bytes_per_token(cfg) * min(
+        context_len,
+        cfg.local_window if cfg.family == "hybrid" else context_len)
+    if cfg.family == "ssm":
+        kv = (cfg.num_layers * cfg.ssm_heads * cfg.ssm_head_dim
+              * cfg.ssm_state * 4.0)
+    return weight_bytes + kv
+
+
+def weights_bytes(cfg: ModelConfig) -> float:
+    return 2.0 * cfg.param_count()
+
+
+@dataclass
+class PhaseCost:
+    flops: float
+    hbm_bytes: float
+    seconds: float
+
+
+def phase_latency(flops: float, hbm_bytes: float, tier: TierConfig,
+                  batch: int = 1) -> float:
+    """Roofline latency on a tier: max(compute, memory) + dispatch."""
+    t_c = flops / (tier.num_chips * tier.flops_per_s * tier.mfu)
+    t_m = hbm_bytes / (tier.num_chips * tier.hbm_bw)
+    return max(t_c, t_m) + tier.startup_s / max(batch, 1)
+
+
+def request_phase_costs(cfg: ModelConfig, prompt_tokens: int,
+                        image_tokens: int, decode_tokens: int,
+                        tier: TierConfig) -> Dict[str, PhaseCost]:
+    pf = prefill_flops(cfg, prompt_tokens, image_tokens)
+    pb = 2.0 * _active_params(cfg) + _kv_bytes_per_token(cfg) * (
+        prompt_tokens + image_tokens)
+    prefill = PhaseCost(pf, pb, phase_latency(pf, pb, tier))
+    ctx = prompt_tokens + image_tokens
+    df = db = 0.0
+    dsec = 0.0
+    for i in range(decode_tokens):
+        f = decode_flops(cfg, ctx + i)
+        b = decode_hbm_bytes(cfg, ctx + i)
+        df += f
+        db += b
+    dsec = phase_latency(df, db, tier)  # amortized (continuous batching)
+    return {"prefill": prefill, "decode": PhaseCost(df, db, dsec)}
+
+
+def transfer_seconds(num_bytes: float, bandwidth_bps: float,
+                     rtt_s: float) -> float:
+    return rtt_s + 8.0 * num_bytes / max(bandwidth_bps, 1.0)
+
+
+def modality_tokens(cfg: ModelConfig, mod: ModalityInput) -> int:
+    """How many backbone tokens a modality contributes."""
+    if mod.kind == "image":
+        return cfg.num_patches or 256
+    if mod.kind == "text":
+        return int(mod.meta.get("tokens", 64))
+    if mod.kind == "audio":
+        return int(mod.meta.get("frames", cfg.encoder_seq or 1500))
+    return 0

@@ -1,0 +1,191 @@
+"""Live continuous-batching serving engine (runs real models).
+
+One engine per tier. Fixed-slot design: ``max_batch`` decode slots share a
+static-shaped KV cache (per-slot write indices — see models/*); prompts are
+prefilled one request at a time into a free slot, decode advances ALL active
+slots each step. Finished slots are freed and immediately refilled
+(continuous batching). Greedy or temperature sampling.
+
+Fault tolerance: every mutation of engine state is journaled; ``snapshot()``/
+``restore()`` allow a failed tier to be rebuilt on a standby (exercised in
+tests), and a watchdog marks the engine unhealthy if a step exceeds the
+heartbeat timeout.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, ServingConfig
+
+
+@dataclass
+class SeqState:
+    rid: int
+    prompt_len: int
+    generated: List[int] = field(default_factory=list)
+    max_new: int = 32
+    done: bool = False
+    t_submit: float = 0.0
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+
+
+class TierEngine:
+    def __init__(self, model, params, serving: ServingConfig = ServingConfig(),
+                 eos_id: int = 2, sample_temp: float = 0.0, seed: int = 0):
+        self.model = model
+        self.cfg: ModelConfig = model.cfg
+        self.params = params
+        self.serving = serving
+        self.eos_id = eos_id
+        self.temp = sample_temp
+        self.rng = np.random.default_rng(seed)
+
+        b, t = serving.max_batch, serving.max_seq
+        self.cache = model.init_cache(b, t)
+        self.slots: List[Optional[SeqState]] = [None] * b
+        self.positions = np.zeros((b,), np.int64)  # absolute next position
+        self.waiting: List[Dict[str, Any]] = []
+        self.finished: List[SeqState] = []
+        self.journal: List[tuple] = []  # (op, payload) event journal
+        self.healthy = True
+        self.last_heartbeat = time.monotonic()
+        self.steps = 0
+
+        self._decode = jax.jit(model.decode_step)
+        self._prefill1 = jax.jit(lambda p, batch: model.prefill(p, batch, t))
+
+    # ------------------------------------------------------------------
+
+    def submit(self, rid: int, tokens: np.ndarray, max_new: int = 32,
+               extras: Optional[Dict[str, np.ndarray]] = None) -> None:
+        self.journal.append(("submit", {"rid": rid, "tokens": tokens,
+                                        "max_new": max_new,
+                                        "extras": extras}))
+        self.waiting.append({"rid": rid, "tokens": np.asarray(tokens),
+                             "max_new": max_new, "extras": extras or {},
+                             "t": time.monotonic()})
+
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def _insert_cache(self, cache1, slot: int) -> None:
+        """Copy a batch-1 prefill cache into slot ``slot`` of the pool."""
+        def ins(pool, one):
+            if pool.ndim == one.ndim and pool.shape[0] == len(self.slots):
+                # batch-leading leaves: pos (B,T), index (B,)
+                return pool.at[slot].set(one[0])
+            # layer-stacked leaves: (L, B, ...) — batch is axis 1
+            return pool.at[:, slot].set(one[:, 0])
+        self.cache = jax.tree.map(ins, self.cache, cache1)
+
+    def _admit(self) -> None:
+        while self.waiting:
+            slot = self._free_slot()
+            if slot is None:
+                return
+            job = self.waiting.pop(0)
+            toks = job["tokens"][None]  # (1, S)
+            batch = {"tokens": jnp.asarray(toks, jnp.int32)}
+            for k, v in job["extras"].items():
+                batch[k] = jnp.asarray(v)[None]
+            logits, cache1 = self._prefill1(self.params, batch)
+            self._insert_cache(cache1, slot)
+            prefix = 0
+            if self.cfg.frontend == "vision_stub" and "patches" in batch:
+                prefix = self.cfg.num_patches
+            st = SeqState(rid=job["rid"], prompt_len=toks.shape[1] + prefix,
+                          max_new=job["max_new"], t_submit=job["t"])
+            first = self._sample(np.asarray(logits)[0])
+            st.generated.append(int(first))
+            st.t_first_token = time.monotonic()
+            self.slots[slot] = st
+            self.positions[slot] = st.prompt_len
+            self.journal.append(("admit", {"rid": st.rid, "slot": slot}))
+
+    def _sample(self, logits: np.ndarray) -> int:
+        if self.temp <= 0:
+            return int(np.argmax(logits))
+        z = logits / self.temp
+        z = z - z.max()
+        p = np.exp(z)
+        p /= p.sum()
+        return int(self.rng.choice(len(p), p=p))
+
+    def step(self) -> int:
+        """Admit + one decode step for all active slots. Returns #active."""
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return 0
+        b = len(self.slots)
+        tokens = np.zeros((b, 1), np.int32)
+        positions = np.zeros((b,), np.int32)
+        for i in active:
+            tokens[i, 0] = self.slots[i].generated[-1]
+            positions[i] = self.positions[i]
+        logits, self.cache = self._decode(
+            self.params, self.cache,
+            {"tokens": jnp.asarray(tokens),
+             "positions": jnp.asarray(positions)})
+        logits = np.asarray(logits)
+        now = time.monotonic()
+        for i in active:
+            st = self.slots[i]
+            self.positions[i] += 1
+            nxt = self._sample(logits[i])
+            st.generated.append(nxt)
+            hit_cap = self.positions[i] + 1 >= self.serving.max_seq
+            if (nxt == self.eos_id or len(st.generated) >= st.max_new
+                    or hit_cap):
+                st.done = True
+                st.t_done = now
+                self.finished.append(st)
+                self.journal.append(("finish", {"rid": st.rid}))
+                self.slots[i] = None
+        self.steps += 1
+        self.last_heartbeat = now
+        return len(active)
+
+    def run_until_drained(self, max_steps: int = 100_000) -> List[SeqState]:
+        while (self.waiting or any(s is not None for s in self.slots)):
+            if self.steps >= max_steps:
+                break
+            self.step()
+        return self.finished
+
+    # -- fault tolerance ----------------------------------------------------
+
+    def heartbeat_ok(self) -> bool:
+        dt = time.monotonic() - self.last_heartbeat
+        self.healthy = dt <= self.serving.heartbeat_timeout_s or self.steps == 0
+        return self.healthy
+
+    def snapshot(self) -> dict:
+        return {
+            "cache": jax.tree.map(np.asarray, self.cache),
+            "slots": [dataclasses.replace(s) if s else None for s in self.slots],
+            "positions": self.positions.copy(),
+            "waiting": list(self.waiting),
+            "steps": self.steps,
+        }
+
+    def restore(self, snap: dict) -> None:
+        self.cache = jax.tree.map(jnp.asarray, snap["cache"])
+        self.slots = [dataclasses.replace(s) if s else None
+                      for s in snap["slots"]]
+        self.positions = snap["positions"].copy()
+        self.waiting = list(snap["waiting"])
+        self.steps = snap["steps"]
+        self.healthy = True
+        self.last_heartbeat = time.monotonic()

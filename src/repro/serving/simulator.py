@@ -1,0 +1,342 @@
+"""Discrete-event simulation of the paper's edge-cloud testbed (§4).
+
+Stations (edge GPU, cloud GPU, WAN uplink) are FIFO queues with service times
+from the analytic cost model over the REAL model configs; the scheduler in
+the loop is the real MoA-Off implementation (same code path that serves the
+live engine). Fault tolerance is exercised in-simulation: nodes fail with a
+configurable rate (heartbeat-detected, requests retried) and slow stragglers
+are hedged to the other tier.
+
+Outputs per policy: latency distribution, accuracy, per-tier compute
+(FLOP·s used) and memory (byte·s) overheads — everything Table 1 / Fig. 3 /
+Fig. 4 need.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.config import ModelConfig, PolicyConfig, SimConfig
+from repro.configs import get_config
+from repro.core.baselines import make_policy
+from repro.core.request import Decision, ModalityInput, Outcome, Request
+from repro.core.scheduler import MoAOffScheduler
+from repro.serving import cost_model as cm
+from repro.serving.accuracy_model import VQAV2, AccuracyModel
+
+
+@dataclass(order=True)
+class Event:
+    t: float
+    seq: int
+    kind: str = field(compare=False)
+    payload: dict = field(compare=False, default_factory=dict)
+
+
+class Station:
+    """FIFO multi-server station with failure injection + utilization stats."""
+
+    def __init__(self, name: str, servers: int, fail_rate: float = 0.0):
+        self.name = name
+        self.servers = servers
+        self.busy = 0
+        self.queue: List[dict] = []
+        self.fail_rate = fail_rate
+        self.busy_time = 0.0
+        self._last_t = 0.0
+        self.flops = 0.0
+        self.mem_byte_s = 0.0
+
+    def utilization_update(self, t: float):
+        self.busy_time += self.busy / max(self.servers, 1) * (t - self._last_t)
+        self._last_t = t
+
+    # a station "at capacity" = all servers busy + ~3 queued per server;
+    # ℓ = 0.8 (the Eq.5 gate) then corresponds to a ~2-deep queue
+    QUEUE_TOLERANCE = 4
+
+    @property
+    def load(self) -> float:
+        denom = max(self.servers, 1) * self.QUEUE_TOLERANCE
+        return min(1.0, (self.busy + len(self.queue)) / denom)
+
+
+class EdgeCloudSimulator:
+    def __init__(self, sim_cfg: SimConfig, policy_name: str = "moa-off",
+                 policy_cfg: PolicyConfig = PolicyConfig(),
+                 acc_model: AccuracyModel = VQAV2,
+                 fail_rate: float = 0.0, hedge_after_s: float = 0.0,
+                 cloud_servers: int = 4, edge_servers: int = 1):
+        self.cfg = sim_cfg
+        self.rng = np.random.default_rng(sim_cfg.seed)
+        self.policy_name = policy_name
+        self.scheduler = MoAOffScheduler(policy=make_policy(policy_name,
+                                                            policy_cfg))
+        self.acc = acc_model
+        self.edge_model = get_config(sim_cfg.edge.model)
+        self.cloud_model = get_config(sim_cfg.cloud.model)
+        self.edge = Station("edge", edge_servers, fail_rate)
+        self.cloud = Station("cloud", cloud_servers, fail_rate)
+        self.link = Station("link", 1)
+        self.hedge_after_s = hedge_after_s
+        self.events: List[Event] = []
+        self._seq = itertools.count()
+        self.outcomes: List[Outcome] = []
+        self.t = 0.0
+
+    # ------------------------------------------------------------------
+
+    def _push(self, t: float, kind: str, **payload):
+        heapq.heappush(self.events, Event(t, next(self._seq), kind, payload))
+
+    def _station(self, tier: str) -> Station:
+        return self.edge if tier == "edge" else self.cloud
+
+    def _model(self, tier: str) -> ModelConfig:
+        return self.edge_model if tier == "edge" else self.cloud_model
+
+    def _tier_cfg(self, tier: str):
+        return self.cfg.edge if tier == "edge" else self.cfg.cloud
+
+    # ------------------------------------------------------------------
+
+    def _service_request(self, job: dict) -> Tuple[float, float, float]:
+        """(service_seconds, flops, mem_byte_s) for one fused inference."""
+        req: Request = job["request"]
+        tier = job["tier"]
+        mcfg = self._model(tier)
+        tcfg = self._tier_cfg(tier)
+        text_tokens = 0
+        image_tokens = 0
+        for m in req.modalities.values():
+            n = cm.modality_tokens(mcfg, m)
+            if m.kind == "image":
+                image_tokens += n
+            else:
+                text_tokens += n
+        # the paper's "severe latency tail typical of edge-only models
+        # struggling with difficult samples": the weak model rambles /
+        # re-derives on inputs beyond its capability knee -> decode length
+        # grows with difficulty (easy inputs run at full speed)
+        decode_tokens = req.decode_tokens
+        if tier == "edge":
+            decode_tokens = int(decode_tokens
+                                * (1.0 + 14.0 * max(0.0, req.difficulty - 0.45)))
+        # PARTIAL offloading (§3.2): modalities routed to the edge of a
+        # cloud-fused request are ENCODED at the edge — only their compact
+        # embeddings ride along, so the cloud never spends prefill FLOPs on
+        # them. (This is MoA-Off's fine-grained scheduling; uniform policies
+        # ship the whole request.)
+        routes = job["decision"].routes
+        if tier == "cloud" and any(r == "edge" for r in routes.values()):
+            edge_cfg = self.edge_model
+            edge_tc = self.cfg.edge
+            off_text = sum(cm.modality_tokens(edge_cfg, m)
+                           for nm, m in req.modalities.items()
+                           if m.kind != "image" and routes.get(nm) == "edge")
+            text_tokens = max(0, text_tokens - off_text)
+            if off_text:
+                enc = cm.prefill_flops(edge_cfg, off_text, 0)
+                self.edge.flops += enc
+                self.edge.mem_byte_s += 2.0 * enc  # ~bytes/flop of prefill
+        costs = cm.request_phase_costs(mcfg, text_tokens, image_tokens,
+                                       decode_tokens, tcfg)
+        sec = costs["prefill"].seconds + costs["decode"].seconds
+        flops = costs["prefill"].flops + costs["decode"].flops
+        kv = cm._kv_bytes_per_token(mcfg) * (text_tokens + image_tokens
+                                             + req.decode_tokens)
+        mem_byte_s = (cm.weights_bytes(mcfg) / max(self._station(tier).servers, 1)
+                      + kv) * sec
+        return sec, flops, mem_byte_s
+
+    # ------------------------------------------------------------------
+
+    def submit(self, req: Request):
+        self._push(req.arrival_s, "arrival", request=req)
+
+    def _observe(self):
+        self.scheduler.observe(edge_load=self.edge.load,
+                               cloud_load=self.cloud.load,
+                               bandwidth_bps=self.cfg.bandwidth_bps)
+        self.scheduler.estimator.observe_queues(
+            self.edge.busy + len(self.edge.queue),
+            self.cloud.busy + len(self.cloud.queue))
+
+    def _on_arrival(self, ev: Event):
+        req: Request = ev.payload["request"]
+        self._observe()
+        decision = self.scheduler.route(req)
+        # score cost: the modality-aware module runs on the edge CPU/NPU —
+        # orders of magnitude below model inference (§4.2.3); modelled as a
+        # fixed sub-millisecond cost on the request path.
+        score_cost = 5e-4 if self.policy_name.startswith("moa-off") else 0.0
+        fusion_tier = "cloud" if decision.any_cloud else "edge"
+        job = {"request": req, "decision": decision, "tier": fusion_tier,
+               "t_start": ev.t, "retries": 0, "hedged": False,
+               "done": False}
+        # bytes that must cross the WAN: payloads of cloud-routed modalities
+        up_bytes = sum(m.size_bytes for name, m in req.modalities.items()
+                       if decision.routes.get(name) == "cloud")
+        if fusion_tier == "cloud" and up_bytes == 0:
+            up_bytes = 2048  # at minimum the text/prompt goes up
+        job["transfer_bytes"] = up_bytes
+        if up_bytes > 0:
+            self._enqueue_link(ev.t + score_cost, job)
+        else:
+            self._enqueue_station(ev.t + score_cost, job)
+        if self.hedge_after_s > 0:
+            self._push(ev.t + self.hedge_after_s, "hedge_check", job=job)
+
+    # -- WAN link ----------------------------------------------------------
+
+    def _enqueue_link(self, t: float, job: dict):
+        self.link.utilization_update(t)
+        if self.link.busy < self.link.servers:
+            self.link.busy += 1
+            sec = cm.transfer_seconds(job["transfer_bytes"],
+                                      self.cfg.bandwidth_bps, self.cfg.rtt_s)
+            self._push(t + sec, "transfer_done", job=job)
+        else:
+            self.link.queue.append({"job": job})
+
+    def _on_transfer_done(self, ev: Event):
+        job = ev.payload["job"]
+        self.link.utilization_update(ev.t)
+        self.link.busy -= 1
+        if self.link.queue:
+            nxt = self.link.queue.pop(0)["job"]
+            self.link.busy += 1
+            sec = cm.transfer_seconds(nxt["transfer_bytes"],
+                                      self.cfg.bandwidth_bps, self.cfg.rtt_s)
+            self._push(ev.t + sec, "transfer_done", job=nxt)
+        self._enqueue_station(ev.t, job)
+
+    # -- compute stations ----------------------------------------------------
+
+    def _enqueue_station(self, t: float, job: dict):
+        st = self._station(job["tier"])
+        st.utilization_update(t)
+        if st.busy < st.servers:
+            self._start_service(t, st, job)
+        else:
+            st.queue.append(job)
+
+    def _start_service(self, t: float, st: Station, job: dict):
+        st.busy += 1
+        sec, flops, mem = self._service_request(job)
+        job["service_s"] = sec
+        # fault injection: the node serving this job dies mid-flight and the
+        # failure is detected after a heartbeat timeout, then retried
+        if st.fail_rate > 0 and self.rng.random() < st.fail_rate:
+            detect = 2.0  # heartbeat timeout
+            self._push(t + detect, "service_failed", job=job, station=st.name)
+        else:
+            self._push(t + sec, "service_done", job=job, station=st.name)
+
+    def _next_from_queue(self, t: float, st: Station):
+        st.utilization_update(t)
+        st.busy -= 1
+        if st.queue:
+            job = st.queue.pop(0)
+            self._start_service(t, st, job)
+
+    def _on_service_failed(self, ev: Event):
+        st = self.edge if ev.payload["station"] == "edge" else self.cloud
+        job = ev.payload["job"]
+        self._next_from_queue(ev.t, st)
+        if job["done"]:
+            return
+        job["retries"] += 1
+        self._enqueue_station(ev.t, job)  # retry (possibly behind queue)
+
+    def _on_hedge_check(self, ev: Event):
+        job = ev.payload["job"]
+        if job["done"] or job.get("in_service_done"):
+            return
+        # straggler mitigation: duplicate to the other tier; first wins
+        if not job["hedged"]:
+            clone = dict(job)
+            clone["tier"] = "cloud" if job["tier"] == "edge" else "edge"
+            clone["hedged"] = True
+            job["hedged"] = True
+            clone["transfer_bytes"] = 0
+            self._enqueue_station(ev.t, clone)
+
+    def _on_service_done(self, ev: Event):
+        st = self.edge if ev.payload["station"] == "edge" else self.cloud
+        job = ev.payload["job"]
+        self._next_from_queue(ev.t, st)
+        if job["done"]:
+            return  # the hedged twin finished first
+        job["done"] = True
+        req: Request = job["request"]
+        tier = ev.payload["station"]
+        sec, flops, mem = job["service_s"], *self._resources(job)
+        st.flops += flops
+        st.mem_byte_s += mem
+        down = self.cfg.rtt_s if tier == "cloud" else 0.0
+        latency = ev.t + down - req.arrival_s
+        on_time = latency <= req.slo_s
+        correct = self.acc.sample(self.rng, req.difficulty, tier, on_time)
+        self.scheduler.observe(latency_s=latency)
+        self.outcomes.append(Outcome(
+            rid=req.rid, latency_s=latency, routes=job["decision"].routes,
+            correct=correct,
+            edge_flops=flops if tier == "edge" else 0.0,
+            cloud_flops=flops if tier == "cloud" else 0.0,
+            edge_mem_bytes=mem if tier == "edge" else 0.0,
+            cloud_mem_bytes=mem if tier == "cloud" else 0.0,
+            transfer_bytes=job["transfer_bytes"], hedged=job["hedged"],
+            retries=job["retries"]))
+
+    def _resources(self, job):
+        _, flops, mem = self._service_request(job)
+        return flops, mem
+
+    # ------------------------------------------------------------------
+
+    def run(self) -> List[Outcome]:
+        handlers = {
+            "arrival": self._on_arrival,
+            "transfer_done": self._on_transfer_done,
+            "service_done": self._on_service_done,
+            "service_failed": self._on_service_failed,
+            "hedge_check": self._on_hedge_check,
+        }
+        while self.events:
+            ev = heapq.heappop(self.events)
+            self.t = ev.t
+            handlers[ev.kind](ev)
+        return self.outcomes
+
+    # ------------------------------------------------------------------
+
+    def metrics(self) -> Dict[str, float]:
+        lats = np.array([o.latency_s for o in self.outcomes])
+        acc = np.mean([o.correct for o in self.outcomes])
+        edge_f = sum(o.edge_flops for o in self.outcomes)
+        cloud_f = sum(o.cloud_flops for o in self.outcomes)
+        edge_m = sum(o.edge_mem_bytes for o in self.outcomes)
+        cloud_m = sum(o.cloud_mem_bytes for o in self.outcomes)
+        return {
+            "accuracy": float(acc),
+            "mean_latency_s": float(lats.mean()),
+            "p50_latency_s": float(np.percentile(lats, 50)),
+            "p95_latency_s": float(np.percentile(lats, 95)),
+            "p99_latency_s": float(np.percentile(lats, 99)),
+            "edge_flops": edge_f, "cloud_flops": cloud_f,
+            "total_flops": edge_f + cloud_f,
+            "edge_mem_byte_s": edge_m, "cloud_mem_byte_s": cloud_m,
+            "total_mem_byte_s": edge_m + cloud_m,
+            "edge_util": self.edge.busy_time / max(self.t, 1e-9),
+            "cloud_util": self.cloud.busy_time / max(self.t, 1e-9),
+            "frac_edge": float(np.mean([not any(
+                r == "cloud" for r in o.routes.values())
+                for o in self.outcomes])),
+            "hedged": float(np.mean([o.hedged for o in self.outcomes])),
+            "retries": float(np.mean([o.retries for o in self.outcomes])),
+        }

@@ -1,0 +1,3 @@
+from repro.training.optimizer import (OptState, adamw_update,  # noqa
+                                      init_opt_state, lr_schedule)
+from repro.training.train_loop import Trainer, make_train_step  # noqa

@@ -1,0 +1,147 @@
+"""Training loop: jit'd train_step factory (grad-accum, remat, donation),
+fault-tolerant Trainer (auto-resume, preemption save, data-skip on resume).
+"""
+from __future__ import annotations
+
+import os
+import signal
+import time
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.config import TrainConfig
+from repro.configs import get_config
+from repro.data.synthetic import make_token_batch
+from repro.models import build_model
+from repro.training.optimizer import OptState, adamw_update, init_opt_state
+
+
+def make_train_step(model, opt_cfg, accum: int = 1) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics), jit-ready.
+
+    ``accum`` > 1 splits the batch into microbatches inside a lax.scan —
+    activation memory scales with the microbatch, grads accumulate in f32.
+    """
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(params, opt_state, batch):
+        if accum <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def micro(carry, mb):
+                gsum, lsum = carry
+                (l, _), g = grad_fn(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(micro, (g0, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+            metrics = {}
+        new_params, new_state, om = adamw_update(params, grads, opt_state,
+                                                 opt_cfg)
+        out = {"loss": loss, **om}
+        out.update({k: v for k, v in metrics.items()})
+        return new_params, new_state, out
+
+    return step
+
+
+class Trainer:
+    """Fault-tolerant single-controller trainer.
+
+    · auto-resumes from the latest checkpoint in ``cfg.checkpoint_dir``;
+    · async-checkpoints every ``checkpoint_every`` steps;
+    · on SIGTERM/SIGINT (preemption) writes a final checkpoint and stops;
+    · the data stream is seeded by (seed, step) so resume skips consumed
+      batches deterministically.
+    """
+
+    def __init__(self, cfg: TrainConfig, model=None, mesh=None):
+        self.cfg = cfg
+        mcfg = get_config(cfg.model)
+        self.model = model or build_model(mcfg, mesh=mesh,
+                                          sharding=cfg.sharding,
+                                          param_dtype="float32")
+        self.mesh = mesh
+        self.ckpt = Checkpointer(cfg.checkpoint_dir, keep=cfg.keep_checkpoints)
+        self._step_fn = jax.jit(
+            make_train_step(self.model, cfg.optimizer,
+                            cfg.sharding.gradient_accum),
+            donate_argnums=(0, 1))
+        self.params = None
+        self.opt_state: Optional[OptState] = None
+        self.step = 0
+        self.history: list = []
+        self._preempted = False
+
+    # ------------------------------------------------------------------
+
+    def _batch(self, step: int) -> Dict[str, jnp.ndarray]:
+        rng = np.random.default_rng((self.cfg.seed << 20) + step)
+        b = make_token_batch(rng, self.cfg.batch_size, self.cfg.seq_len,
+                             self.model.cfg.vocab_size)
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    def initialize(self, resume: bool = True) -> None:
+        rng = jax.random.PRNGKey(self.cfg.seed)
+        self.params = self.model.init(rng)
+        self.opt_state = init_opt_state(self.params, self.cfg.optimizer)
+        if resume and self.ckpt.latest_step() is not None:
+            tree = {"params": self.params, "opt": self.opt_state}
+            step, restored = self.ckpt.restore(tree)
+            self.params = restored["params"]
+            self.opt_state = OptState(restored["opt"].step,
+                                      restored["opt"].m, restored["opt"].v)
+            self.step = step
+            print(f"[trainer] resumed from step {step}")
+
+    def _install_preempt_handler(self) -> None:
+        def handler(signum, frame):
+            self._preempted = True
+        try:
+            signal.signal(signal.SIGTERM, handler)
+        except ValueError:
+            pass  # non-main thread (tests)
+
+    def save(self, async_: bool = True) -> None:
+        self.ckpt.save(self.step, {"params": self.params,
+                                   "opt": self.opt_state}, async_=async_)
+
+    def train(self, steps: Optional[int] = None) -> list:
+        if self.params is None:
+            self.initialize()
+        self._install_preempt_handler()
+        target = self.step + (steps if steps is not None else self.cfg.steps)
+        t0 = time.perf_counter()
+        while self.step < target and not self._preempted:
+            batch = self._batch(self.step)
+            self.params, self.opt_state, metrics = self._step_fn(
+                self.params, self.opt_state, batch)
+            self.step += 1
+            if self.step % self.cfg.log_every == 0:
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+                self.history.append((self.step, loss))
+                print(f"[trainer] step={self.step} loss={loss:.4f} "
+                      f"({dt / self.cfg.log_every:.3f}s/step)")
+                t0 = time.perf_counter()
+            if self.step % self.cfg.checkpoint_every == 0:
+                self.save(async_=True)
+        self.save(async_=False)  # final/preemption checkpoint is blocking
+        self.ckpt.wait()
+        return self.history

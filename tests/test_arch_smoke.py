@@ -1,0 +1,105 @@
+"""Per-assigned-architecture smoke tests: reduced config of the same family,
+one forward/train step on CPU, asserting output shapes and no NaNs.
+(The FULL configs are exercised only via the dry-run.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, PAPER_ARCHS, get_config, reduced_config
+from repro.models import build_model
+from repro.models.layers import pad_vocab
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=32):
+    tok = jax.random.randint(RNG, (b, s + 1), 0, cfg.vocab_size)
+    batch = {"tokens": tok[:, :s], "labels": tok[:, 1:]}
+    if cfg.frontend == "vision_stub":
+        batch["patches"] = jax.random.normal(
+            RNG, (b, cfg.num_patches, cfg.frontend_dim))
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            RNG, (b, cfg.encoder_seq, cfg.frontend_dim))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS + PAPER_ARCHS)
+def test_reduced_forward_and_train_step(arch):
+    cfg = reduced_config(arch).replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(RNG)
+    batch = _batch(cfg)
+    b, s = batch["tokens"].shape
+
+    hidden, aux, _, prefix = model.forward(params, batch, "train")
+    expect_s = s + (cfg.num_patches if cfg.frontend == "vision_stub" else 0)
+    assert hidden.shape == (b, expect_s, cfg.d_model)
+    assert not bool(jnp.any(jnp.isnan(hidden)))
+
+    loss, metrics = model.loss(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+    # one full train step (grads + adamw)
+    from repro.config import OptimizerConfig
+    from repro.training import init_opt_state, make_train_step
+
+    step = jax.jit(make_train_step(model, OptimizerConfig(lr=1e-3)))
+    opt = init_opt_state(params, OptimizerConfig())
+    new_params, new_opt, m = step(params, opt, batch)
+    assert np.isfinite(float(m["loss"]))
+    assert int(new_opt.step) == 1
+    # params actually moved
+    delta = sum(float(jnp.sum(jnp.abs(a - b))) for a, b in zip(
+        jax.tree.leaves(new_params), jax.tree.leaves(params)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_reduced_prefill_decode_consistency(arch):
+    cfg = reduced_config(arch).replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(RNG)
+    b, s, cap = 2, 16, 48
+    batch = _batch(cfg, b, s)
+    batch.pop("labels")
+    from repro.models.layers import unembed
+
+    fb = dict(batch)
+    fb["tokens"] = jnp.concatenate(
+        [batch["tokens"], batch["tokens"][:, :1]], axis=1)
+    hidden, _, _, prefix = model.forward(params, fb, "train")
+    logits_p, cache = model.prefill(params, batch, cap)
+    assert logits_p.shape[0] == b
+    assert not bool(jnp.any(jnp.isnan(logits_p)))
+
+    db = {"tokens": fb["tokens"][:, s:s + 1],
+          "positions": jnp.full((b,), prefix + s, jnp.int32)}
+    logits_d, cache2 = model.decode_step(params, cache, db)
+    tab = (params["embed"] if (cfg.family == "encdec" or cfg.tie_embeddings)
+           else params["unembed"])
+    want = unembed(hidden[:, prefix + s:prefix + s + 1].astype(jnp.float32),
+                   tab, cfg.vocab_size)[:, 0]
+    np.testing.assert_allclose(logits_d, want, rtol=1e-4, atol=1e-4)
+
+
+def test_full_configs_param_counts_match_literature():
+    expect = {
+        "nemotron-4-340b": 340e9, "qwen3-0.6b": 0.6e9,
+        "deepseek-coder-33b": 33e9, "yi-34b": 34e9,
+        "kimi-k2-1t-a32b": 1000e9, "qwen3-moe-235b-a22b": 235e9,
+        "mamba2-2.7b": 2.7e9,
+    }
+    for arch, want in expect.items():
+        n = get_config(arch).param_count()
+        assert 0.85 * want <= n <= 1.2 * want, (arch, n)
+
+
+def test_moe_active_params_match():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    na = cfg.active_param_count()
+    assert 18e9 <= na <= 26e9, na  # A22B
+    cfg = get_config("kimi-k2-1t-a32b")
+    na = cfg.active_param_count()
+    assert 28e9 <= na <= 40e9, na  # A32B

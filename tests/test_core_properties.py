@@ -1,0 +1,195 @@
+"""Hypothesis property tests on the MoA-Off core invariants."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import ComplexityConfig, PolicyConfig
+from repro.core import (CLOUD, EDGE, MoAOffScheduler, ModalityInput,
+                        OffloadingPolicy, Request, SystemState,
+                        decide_modality, make_policy,
+                        text_complexity_from_counts)
+
+# ---------------------------------------------------------------------------
+# complexity invariants
+# ---------------------------------------------------------------------------
+
+
+@given(tokens=st.integers(0, 100_000), ents=st.integers(0, 10_000),
+       sents=st.integers(1, 1_000))
+@settings(max_examples=200, deadline=None)
+def test_text_complexity_bounded(tokens, ents, sents):
+    out = text_complexity_from_counts(tokens, ents, sents)
+    for k in ("c_len", "c_ner", "c_text"):
+        assert 0.0 <= float(out[k]) <= 1.0
+
+
+@given(tokens=st.integers(0, 5_000), extra=st.integers(1, 5_000))
+@settings(max_examples=100, deadline=None)
+def test_text_complexity_monotone_in_length(tokens, extra):
+    a = float(text_complexity_from_counts(tokens, 0, 1)["c_text"])
+    b = float(text_complexity_from_counts(tokens + extra, 0, 1)["c_text"])
+    assert b >= a - 1e-9
+
+
+@given(ents=st.integers(0, 100), extra=st.integers(1, 100),
+       sents=st.integers(1, 50))
+@settings(max_examples=100, deadline=None)
+def test_text_complexity_monotone_in_entities(ents, extra, sents):
+    a = float(text_complexity_from_counts(512, ents, sents)["c_text"])
+    b = float(text_complexity_from_counts(512, ents + extra, sents)["c_text"])
+    assert b >= a - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Eq. 5 policy invariants
+# ---------------------------------------------------------------------------
+
+_state = st.builds(
+    SystemState,
+    edge_load=st.floats(0, 1),
+    bandwidth_bps=st.floats(1e6, 1e9),
+    cloud_load=st.floats(0, 1),
+)
+
+
+@given(c=st.floats(0, 1), tau=st.floats(0, 1), state=_state)
+@settings(max_examples=300, deadline=None)
+def test_eq5_literal_semantics(c, tau, state):
+    pol = PolicyConfig(paper_faithful_bandwidth=True)
+    d = decide_modality(c, tau, state, pol)
+    expect_edge = (c <= tau and state.edge_load <= pol.edge_load_max
+                   and state.bandwidth_bps <= pol.bandwidth_beta)
+    assert d == (EDGE if expect_edge else CLOUD)
+
+
+@given(c=st.floats(0, 1), state=_state)
+@settings(max_examples=200, deadline=None)
+def test_eq5_complexity_monotone(c, state):
+    """If c routes to cloud at threshold τ, any c' > c also routes cloud."""
+    pol = PolicyConfig()
+    tau = 0.5
+    d1 = decide_modality(c, tau, state, pol)
+    if d1 == CLOUD and c <= tau:
+        # cloud due to system state: all complexities go cloud
+        assert decide_modality(min(1.0, c + 0.3), tau, state, pol) == CLOUD
+    if d1 == EDGE:
+        assert decide_modality(max(0.0, c - 0.3), tau, state, pol) == EDGE
+
+
+@given(scores=st.dictionaries(
+    st.sampled_from(["image", "text", "audio"]),
+    st.floats(0, 1), min_size=1, max_size=3), state=_state)
+@settings(max_examples=200, deadline=None)
+def test_decision_vector_complete_and_valid(scores, state):
+    pol = OffloadingPolicy(PolicyConfig(adaptive_tau=False))
+    req = Request(rid=0, arrival_s=0.0, modalities={})
+    d = pol.decide(req, scores, state)
+    assert set(d.routes) == set(scores)
+    assert all(r in (EDGE, CLOUD) for r in d.routes.values())
+
+
+@given(state=_state)
+@settings(max_examples=50, deadline=None)
+def test_policy_determinism(state):
+    pol = OffloadingPolicy(PolicyConfig(adaptive_tau=False))
+    req = Request(rid=0, arrival_s=0.0, modalities={})
+    scores = {"image": 0.7, "text": 0.2}
+    d1 = pol.decide(req, scores, state)
+    d2 = pol.decide(req, scores, state)
+    assert d1.routes == d2.routes
+
+
+def test_adaptive_tau_balances_queues():
+    pol = OffloadingPolicy(PolicyConfig(adaptive_tau=True))
+    edge_hot = SystemState(edge_load=0.5, bandwidth_bps=3e8,
+                           queue_depth_edge=12, queue_depth_cloud=0)
+    t0 = dict(pol.taus)
+    for _ in range(10):
+        pol.update(edge_hot)
+    assert all(pol.taus[m] < t0[m] for m in t0)  # shed load from edge
+    cloud_hot = SystemState(edge_load=0.1, bandwidth_bps=3e8,
+                            queue_depth_edge=0, queue_depth_cloud=12)
+    t1 = dict(pol.taus)
+    for _ in range(10):
+        pol.update(cloud_hot)
+    assert all(pol.taus[m] > t1[m] for m in t1)  # pull load back
+
+
+def test_adaptive_tau_steady_at_balance():
+    pol = OffloadingPolicy(PolicyConfig(adaptive_tau=True))
+    steady = SystemState(edge_load=0.4, bandwidth_bps=3e8,
+                         queue_depth_edge=2, queue_depth_cloud=2)
+    t0 = dict(pol.taus)
+    for _ in range(10):
+        pol.update(steady)
+    assert pol.taus == t0  # balanced queues: no thrash
+
+
+def test_tau_stays_clamped():
+    pol = OffloadingPolicy(PolicyConfig(adaptive_tau=True))
+    hot = SystemState(edge_load=1.0, bandwidth_bps=3e8,
+                      queue_depth_edge=50, queue_depth_cloud=0)
+    for _ in range(200):
+        pol.update(hot)
+    assert all(0.05 <= v <= 0.95 for v in pol.taus.values())
+
+
+# ---------------------------------------------------------------------------
+# baselines
+# ---------------------------------------------------------------------------
+
+
+@given(scores=st.dictionaries(st.sampled_from(["image", "text"]),
+                              st.floats(0, 1), min_size=1), state=_state)
+@settings(max_examples=100, deadline=None)
+def test_single_tier_baselines(scores, state):
+    req = Request(rid=0, arrival_s=0.0, modalities={})
+    assert all(r == CLOUD for r in make_policy("cloud-only")
+               .decide(req, scores, state).routes.values())
+    assert all(r == EDGE for r in make_policy("edge-only")
+               .decide(req, scores, state).routes.values())
+
+
+@given(scores=st.dictionaries(st.sampled_from(["image", "text"]),
+                              st.floats(0, 1), min_size=2, max_size=2),
+       state=_state)
+@settings(max_examples=100, deadline=None)
+def test_perllm_and_ablation_are_uniform(scores, state):
+    """Modality-blind policies must give the SAME route to all modalities."""
+    req = Request(rid=0, arrival_s=0.0, modalities={})
+    for name in ("perllm", "moa-off-no-modality"):
+        routes = make_policy(name).decide(req, scores, state).routes
+        assert len(set(routes.values())) == 1, name
+
+
+def test_moa_off_splits_heterogeneous_request():
+    """The paper's Fig. 2 example: complex image -> cloud, short text -> edge."""
+    pol = OffloadingPolicy(PolicyConfig(adaptive_tau=False))
+    st_ = SystemState(edge_load=0.3, bandwidth_bps=3e8)
+    req = Request(rid=0, arrival_s=0.0, modalities={})
+    d = pol.decide(req, {"image": 0.9, "text": 0.1}, st_)
+    assert d.routes["image"] == CLOUD and d.routes["text"] == EDGE
+
+
+# ---------------------------------------------------------------------------
+# scheduler integration
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_scores_real_payloads():
+    rng = np.random.default_rng(0)
+    sched = MoAOffScheduler(use_kernel=True)
+    img = rng.uniform(0, 255, (48, 48)).astype(np.float32)
+    req = Request(rid=1, arrival_s=0.0, modalities={
+        "image": ModalityInput("image", data=img),
+        "text": ModalityInput("text",
+                              meta={"tokens": 900, "entities": 40,
+                                    "sentences": 10}),
+    })
+    scores = sched.score(req)
+    assert set(scores) == {"image", "text"}
+    assert all(0 <= v <= 1 for v in scores.values())
+    d = sched.route(req)
+    assert set(d.routes) == {"image", "text"}
