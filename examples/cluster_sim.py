@@ -1,11 +1,16 @@
 """Cluster-scale what-if simulation: sweep bandwidth/failure/hedging knobs on
-the discrete-event edge-cloud simulator (the §4 experiments generalized).
+the discrete-event cluster simulator (the §4 experiments generalized).
 
     PYTHONPATH=src python examples/cluster_sim.py
+    PYTHONPATH=src python examples/cluster_sim.py --topology edge-regional-cloud
 """
-from repro.config import PolicyConfig, SimConfig, TierConfig
+import argparse
+import collections
+
+from repro.config import (PolicyConfig, SimConfig, TOPOLOGIES, TierConfig,
+                          get_topology)
 from repro.data.synthetic import RequestGenerator
-from repro.serving.simulator import EdgeCloudSimulator
+from repro.serving.simulator import ClusterSimulator, EdgeCloudSimulator
 
 
 def run(policy, bw=300e6, fail=0.0, hedge=0.0, n=400, rate=1.1):
@@ -23,7 +28,18 @@ def run(policy, bw=300e6, fail=0.0, hedge=0.0, n=400, rate=1.1):
     return sim.metrics()
 
 
-def main():
+def run_topology(topology_name, policy="moa-off", n=400, rate=2.5, seed=1):
+    topo = get_topology(topology_name)
+    sim = ClusterSimulator(SimConfig(seed=seed), policy_name=policy,
+                           policy_cfg=PolicyConfig(adaptive_tau=True),
+                           topology=topo)
+    for r in RequestGenerator(seed=0, arrival_rate=rate).generate(n):
+        sim.submit(r)
+    sim.run()
+    return sim, sim.metrics()
+
+
+def main_two_tier():
     print("bandwidth sweep (moa-off):")
     for bw in (100e6, 200e6, 400e6, 800e6):
         m = run("moa-off", bw=bw)
@@ -48,5 +64,30 @@ def main():
           f"({100 * m1['hedged']:.1f}% of requests hedged)")
 
 
+def main_topology(name):
+    print(f"multi-tier what-if on topology '{name}':")
+    for pol in ("moa-off", "cloud-only", "edge-only", "perllm"):
+        sim, m = run_topology(name, policy=pol)
+        served = collections.Counter(o.served_tier for o in sim.outcomes)
+        split = " ".join(f"{t}={served.get(t, 0)}"
+                         for t in sim.topology.names)
+        print(f"  {pol:12s} lat={m['mean_latency_s']:6.2f}s "
+              f"acc={m['accuracy']*100:5.1f}% frac_local={m['frac_local']:.2f}"
+              f" | served: {split}")
+    sim, m = run_topology(name)
+    print("\n  per-tier utilization / compute (moa-off):")
+    for t in sim.topology.names:
+        print(f"    {t:9s} util={m[f'{t}_util']:.2f} "
+              f"flops={m[f'{t}_flops']:.3g}")
+
+
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--topology", default=None, choices=sorted(TOPOLOGIES),
+                    help="run the multi-tier what-if on this topology "
+                         "instead of the default two-tier sweeps")
+    args = ap.parse_args()
+    if args.topology:
+        main_topology(args.topology)
+    else:
+        main_two_tier()

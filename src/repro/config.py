@@ -265,6 +265,94 @@ class TierConfig:
 
 
 @dataclass(frozen=True)
+class TierSpec(TierConfig):
+    """A tier in a :class:`ClusterTopology` — TierConfig plus placement.
+
+    ``uplink_bps == 0`` marks the tier as local (no WAN hop to reach it);
+    remote tiers pay ``transfer_seconds(bytes, uplink_bps, rtt_s)`` per
+    request. ``capability`` ∈ [0,1] anchors the accuracy model: 0.0 behaves
+    like the paper's edge model (steep cliff past the difficulty knee),
+    1.0 like the cloud model (no cliff); intermediate values interpolate.
+    """
+
+    servers: int = 1  # parallel FIFO servers at this tier
+    uplink_bps: float = 0.0  # 0 -> local tier, no transfer needed
+    rtt_s: float = 0.0
+    capability: float = 0.0
+
+    @property
+    def is_remote(self) -> bool:
+        return self.uplink_bps > 0
+
+    @classmethod
+    def from_tier(cls, cfg: TierConfig, **kw) -> "TierSpec":
+        if isinstance(cfg, TierSpec):
+            return dataclasses.replace(cfg, **kw)
+        return cls(**dataclasses.asdict(cfg), **kw)
+
+
+@dataclass(frozen=True)
+class ClusterTopology:
+    """N named heterogeneous tiers forming an edge–cloud continuum.
+
+    Frozen + tuple-backed so it can ride inside other frozen configs. The
+    first declared local tier is the *anchor* edge (where non-offloaded work
+    lands for modality-blind baselines); the highest-capability remote tier
+    is the anchor cloud.
+    """
+
+    name: str
+    tiers: Tuple[TierSpec, ...]
+
+    def __post_init__(self):
+        names = [t.name for t in self.tiers]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tier names in topology: {names}")
+        if not self.tiers:
+            raise ValueError("topology needs at least one tier")
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(t.name for t in self.tiers)
+
+    @property
+    def local_tiers(self) -> Tuple[TierSpec, ...]:
+        return tuple(t for t in self.tiers if not t.is_remote)
+
+    @property
+    def remote_tiers(self) -> Tuple[TierSpec, ...]:
+        return tuple(t for t in self.tiers if t.is_remote)
+
+    def tier(self, name: str) -> TierSpec:
+        for t in self.tiers:
+            if t.name == name:
+                return t
+        raise KeyError(f"unknown tier {name!r}; have {self.names}")
+
+    @property
+    def default_local(self) -> TierSpec:
+        locals_ = self.local_tiers
+        return locals_[0] if locals_ else self.tiers[0]
+
+    @property
+    def default_remote(self) -> TierSpec:
+        remotes = self.remote_tiers
+        pool = remotes if remotes else self.tiers
+        return max(pool, key=lambda t: t.capability)
+
+    def fusion_tier(self, routes: dict) -> str:
+        """Where the fused generation runs: the most capable routed tier
+        (legacy semantics: cloud if any modality went cloud, else edge)."""
+        routed = [self.tier(r) for r in sorted(set(routes.values()))]
+        if not routed:
+            return self.default_local.name
+        # tier name as final tie-break: deterministic across interpreter
+        # runs even when two routed tiers share capability and placement
+        best = max(routed, key=lambda t: (t.capability, t.is_remote, t.name))
+        return best.name
+
+
+@dataclass(frozen=True)
 class ServingConfig:
     max_batch: int = 32
     max_seq: int = 4_096
@@ -295,6 +383,84 @@ class SimConfig:
             "cloud", "qwen2.5-vl-7b", 1, 312e12, 1_555e9, mfu=0.42
         )  # A100-40GB-class: 312 TFLOP/s bf16, 1.56 TB/s
     )
+    # optional N-tier cluster; None -> the legacy two-tier pair above
+    topology: Optional[ClusterTopology] = None
+
+
+# ---------------------------------------------------------------------------
+# Topology builders / registry
+# ---------------------------------------------------------------------------
+
+
+def two_tier_topology(edge: Optional[TierConfig] = None,
+                      cloud: Optional[TierConfig] = None,
+                      bandwidth_bps: float = 300e6, rtt_s: float = 0.02,
+                      edge_servers: int = 1, cloud_servers: int = 1,
+                      name: str = "edge-cloud") -> ClusterTopology:
+    """The paper's testbed (§4.1) as a ClusterTopology: one local edge GPU,
+    one remote cloud GPU behind a WAN uplink."""
+    e = edge or TierConfig("edge", "qwen2-vl-2b", 1, 35.6e12, 936e9, mfu=0.25)
+    c = cloud or TierConfig("cloud", "qwen2.5-vl-7b", 1, 312e12, 1_555e9,
+                            mfu=0.42)
+    return ClusterTopology(name, (
+        TierSpec.from_tier(e, servers=edge_servers, capability=0.0),
+        TierSpec.from_tier(c, servers=cloud_servers, uplink_bps=bandwidth_bps,
+                           rtt_s=rtt_s, capability=1.0),
+    ))
+
+
+def _edge_cloud() -> ClusterTopology:
+    return two_tier_topology()
+
+
+def _edge_edge_cloud() -> ClusterTopology:
+    """Two heterogeneous edge GPUs (3090-class + Orin-class) + one cloud."""
+    return ClusterTopology("edge-edge-cloud", (
+        TierSpec("edge", "qwen2-vl-2b", 1, 35.6e12, 936e9, mfu=0.25,
+                 capability=0.0),
+        TierSpec("edge1", "qwen2-vl-2b", 1, 10.6e12, 204e9, mfu=0.20,
+                 capability=0.0),  # Jetson-Orin-class
+        TierSpec("cloud", "qwen2.5-vl-7b", 1, 312e12, 1_555e9, mfu=0.42,
+                 servers=2, uplink_bps=300e6, rtt_s=0.02, capability=1.0),
+    ))
+
+
+def _edge_regional_cloud() -> ClusterTopology:
+    """Cloud-edge continuum: edge GPU, regional A10-class node on a fat
+    metro link, A100 cloud across the WAN."""
+    return ClusterTopology("edge-regional-cloud", (
+        TierSpec("edge", "qwen2-vl-2b", 1, 35.6e12, 936e9, mfu=0.25,
+                 capability=0.0),
+        TierSpec("regional", "qwen2.5-vl-7b", 1, 125e12, 933e9, mfu=0.35,
+                 servers=2, uplink_bps=1e9, rtt_s=0.005, capability=0.7),
+        TierSpec("cloud", "qwen2.5-vl-7b", 1, 312e12, 1_555e9, mfu=0.42,
+                 uplink_bps=300e6, rtt_s=0.02, capability=1.0),
+    ))
+
+
+def _continuum_4() -> ClusterTopology:
+    """Four tiers: two edge GPUs + regional + cloud."""
+    base = _edge_regional_cloud()
+    edge1 = TierSpec("edge1", "qwen2-vl-2b", 1, 10.6e12, 204e9, mfu=0.20,
+                     capability=0.0)
+    return ClusterTopology("continuum-4",
+                           (base.tiers[0], edge1) + base.tiers[1:])
+
+
+TOPOLOGIES = {
+    "edge-cloud": _edge_cloud,
+    "edge-edge-cloud": _edge_edge_cloud,
+    "edge-regional-cloud": _edge_regional_cloud,
+    "continuum-4": _continuum_4,
+}
+
+
+def get_topology(name: str) -> ClusterTopology:
+    try:
+        return TOPOLOGIES[name]()
+    except KeyError:
+        raise KeyError(f"unknown topology {name!r}; "
+                       f"have {sorted(TOPOLOGIES)}") from None
 
 
 # ---------------------------------------------------------------------------

@@ -25,7 +25,9 @@ class CloudOnlyPolicy(OffloadingPolicy):
     uses_system_state = False
 
     def decide(self, request, scores, state):
-        return Decision(routes={m: CLOUD for m in scores}, reason="cloud-only")
+        cloud = self.topology.default_remote.name
+        return Decision(routes={m: cloud for m in scores},
+                        reason="cloud-only", local_tiers=self.local_names)
 
     def update(self, state):
         return
@@ -37,7 +39,9 @@ class EdgeOnlyPolicy(OffloadingPolicy):
     uses_system_state = False
 
     def decide(self, request, scores, state):
-        return Decision(routes={m: EDGE for m in scores}, reason="edge-only")
+        edge = self.topology.default_local.name
+        return Decision(routes={m: edge for m in scores}, reason="edge-only",
+                        local_tiers=self.local_names)
 
     def update(self, state):
         return
@@ -58,11 +62,11 @@ class PerLLMPolicy(OffloadingPolicy):
     name = "perllm"
     modality_aware = False
 
-    def __init__(self, cfg: PolicyConfig = PolicyConfig(),
+    def __init__(self, cfg: PolicyConfig = PolicyConfig(), topology=None,
                  slo_margin: float = 0.20, edge_service_est: float = 0.8,
                  explore_eps: float = 0.28, refresh_s: float = 12.0,
                  seed: int = 17):
-        super().__init__(cfg)
+        super().__init__(cfg, topology)
         import numpy as _np
         self.slo_margin = slo_margin
         self.svc_est = edge_service_est  # EWMA-updated from feedback
@@ -77,28 +81,31 @@ class PerLLMPolicy(OffloadingPolicy):
     def decide(self, request: Request, scores: Dict[str, float],
                state: SystemState) -> Decision:
         self.t += 1
+        edge = self.topology.default_local.name
+        cloud = self.topology.default_remote.name
         # per-service scheduling loop: PerLLM re-plans periodically, not per
         # request — between refreshes it routes on the cached queue estimate
         if request.arrival_s - self._last_refresh >= self.refresh_s:
-            self._cached_queue = state.queue_depth_edge
+            self._cached_queue = state.queue_depth(edge)
             self._last_refresh = request.arrival_s
         pred_edge = (self._cached_queue + 1) * self.svc_est
         budget = self.slo_margin * request.slo_s
         big = request.total_bytes() > 0.45e6  # payload constraint -> cloud
         if big and state.bandwidth_bps >= 100e6:
-            arm = CLOUD
+            arm = cloud
         elif pred_edge <= budget:
-            arm = EDGE  # cheapest feasible deployment
+            arm = edge  # cheapest feasible deployment
         else:
-            arm = CLOUD
+            arm = cloud
         if self._rng.random() < self.eps:  # bandit exploration step
-            arm = EDGE if arm == CLOUD else CLOUD
+            arm = edge if arm == cloud else cloud
         self._pending_arm = arm
         return Decision(routes={m: arm for m in scores},
-                        reason=f"perllm-{arm} pred={pred_edge:.2f}")
+                        reason=f"perllm-{arm} pred={pred_edge:.2f}",
+                        local_tiers=self.local_names)
 
     def feedback(self, latency_s: float) -> None:
-        if self._pending_arm == EDGE:
+        if self._pending_arm == self.topology.default_local.name:
             # crude online service estimate (keeps the predictor honest)
             self.svc_est = 0.95 * self.svc_est + 0.05 * min(latency_s, 2.0)
         self._pending_arm = None
@@ -107,7 +114,8 @@ class PerLLMPolicy(OffloadingPolicy):
         return
 
 
-def make_policy(name: str, cfg: PolicyConfig = PolicyConfig()):
+def make_policy(name: str, cfg: PolicyConfig = PolicyConfig(),
+                topology=None):
     from repro.core.policy import (NoCollabPolicy, NoModalityAwarePolicy,
                                    OffloadingPolicy)
 
@@ -119,4 +127,4 @@ def make_policy(name: str, cfg: PolicyConfig = PolicyConfig()):
         "moa-off-no-modality": NoModalityAwarePolicy,
         "moa-off-no-collab": NoCollabPolicy,
     }
-    return table[name](cfg)
+    return table[name](cfg, topology)

@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Dict, Optional
+from typing import Any, Dict, FrozenSet, Optional
 
 MODALITIES = ("image", "text", "audio")
 
@@ -39,13 +39,19 @@ class Request:
 class Decision:
     """Per-modality routing (Eq. 6) + bookkeeping for the ablation study."""
 
-    routes: Dict[str, str]  # modality -> "edge" | "cloud"
+    routes: Dict[str, str]  # modality -> tier name ("edge"/"cloud"/…)
     taus: Dict[str, float] = field(default_factory=dict)
     reason: str = ""
+    # names of the topology's local tiers, stamped by the deciding policy
+    local_tiers: FrozenSet[str] = frozenset({"edge"})
 
     @property
     def any_cloud(self) -> bool:
-        return any(r == "cloud" for r in self.routes.values())
+        """Any modality routed off the local tier set. On the legacy
+        two-tier topology this is exactly "any modality went cloud"; on an
+        N-tier topology it means "some modality was offloaded to a remote
+        tier" (use ``ClusterTopology.fusion_tier`` for the serving tier)."""
+        return any(r not in self.local_tiers for r in self.routes.values())
 
     @property
     def all_edge(self) -> bool:
@@ -54,14 +60,35 @@ class Decision:
 
 @dataclass
 class Outcome:
+    """Per-request result with per-tier resource attribution.
+
+    ``tier_flops`` / ``tier_mem_bytes`` are keyed by tier name; the legacy
+    two-tier scalars remain readable as properties.
+    """
+
     rid: int
     latency_s: float
     routes: Dict[str, str]
     correct: bool
-    edge_flops: float = 0.0
-    cloud_flops: float = 0.0
-    edge_mem_bytes: float = 0.0
-    cloud_mem_bytes: float = 0.0
+    tier_flops: Dict[str, float] = field(default_factory=dict)
+    tier_mem_bytes: Dict[str, float] = field(default_factory=dict)
     transfer_bytes: float = 0.0
     hedged: bool = False
     retries: int = 0
+    served_tier: str = ""  # tier that ran the fused generation
+
+    @property
+    def edge_flops(self) -> float:
+        return self.tier_flops.get("edge", 0.0)
+
+    @property
+    def cloud_flops(self) -> float:
+        return self.tier_flops.get("cloud", 0.0)
+
+    @property
+    def edge_mem_bytes(self) -> float:
+        return self.tier_mem_bytes.get("edge", 0.0)
+
+    @property
+    def cloud_mem_bytes(self) -> float:
+        return self.tier_mem_bytes.get("cloud", 0.0)

@@ -87,13 +87,24 @@ class MoAOffScheduler:
     def observe(self, *, edge_load: Optional[float] = None,
                 cloud_load: Optional[float] = None,
                 bandwidth_bps: Optional[float] = None,
-                latency_s: Optional[float] = None) -> None:
+                latency_s: Optional[float] = None,
+                loads: Optional[Dict[str, float]] = None,
+                queue_depths: Optional[Dict[str, int]] = None,
+                bandwidths: Optional[Dict[str, float]] = None) -> None:
         if edge_load is not None:
             self.estimator.observe_edge_load(edge_load)
         if cloud_load is not None:
             self.estimator.observe_cloud_load(cloud_load)
+        if loads:
+            for tier, load in loads.items():
+                self.estimator.observe_load(tier, load)
+        if queue_depths:
+            self.estimator.observe_queue_depths(queue_depths)
         if bandwidth_bps is not None:
             self.estimator.observe_bandwidth(bandwidth_bps)
+        if bandwidths:
+            for tier, bps in bandwidths.items():
+                self.estimator.observe_bandwidth(bps, tier=tier)
         if latency_s is not None:
             self.estimator.observe_latency(latency_s)
             if hasattr(self.policy, "feedback"):

@@ -1,22 +1,99 @@
-"""System-state tracking for the offloading policy: s = (ℓ, b) of Eq. 5/6.
+"""System-state tracking for the offloading policy: s = (ℓ_t, b) of Eq. 5/6.
 
-EWMA estimators over observed edge load and link bandwidth; the scheduler
-feeds observations in, the policy reads smoothed state out.
+Generalized to an N-tier cluster: load and queue-depth EWMAs are kept per
+tier name; the two-tier quantities of the paper (``edge_load``,
+``cloud_load``, …) remain available as property views onto the dicts, so all
+legacy call sites and the Eq. 5 gate read the same numbers they always did.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Deque, Optional
+from typing import Deque, Dict, Optional
 import collections
 
+EDGE_TIER, CLOUD_TIER = "edge", "cloud"
 
-@dataclass
+
 class SystemState:
-    edge_load: float = 0.0        # ℓ ∈ [0,1]: edge utilization
-    bandwidth_bps: float = 300e6  # b: available edge<->cloud bandwidth
-    cloud_load: float = 0.0
-    queue_depth_edge: int = 0
-    queue_depth_cloud: int = 0
+    """Per-tier system state with legacy two-tier accessors.
+
+    Constructor keeps the historical field order
+    ``(edge_load, bandwidth_bps, cloud_load, queue_depth_edge,
+    queue_depth_cloud)`` so existing positional/keyword call sites work
+    unchanged; N-tier callers pass ``loads`` / ``queue_depths`` /
+    ``bandwidths`` dicts keyed by tier name.
+    """
+
+    def __init__(self, edge_load: float = 0.0, bandwidth_bps: float = 300e6,
+                 cloud_load: float = 0.0, queue_depth_edge: int = 0,
+                 queue_depth_cloud: int = 0, *,
+                 loads: Optional[Dict[str, float]] = None,
+                 queue_depths: Optional[Dict[str, int]] = None,
+                 bandwidths: Optional[Dict[str, float]] = None):
+        self.loads: Dict[str, float] = {EDGE_TIER: float(edge_load),
+                                        CLOUD_TIER: float(cloud_load)}
+        self.queue_depths: Dict[str, int] = {
+            EDGE_TIER: int(queue_depth_edge),
+            CLOUD_TIER: int(queue_depth_cloud)}
+        if loads:
+            self.loads.update({k: float(v) for k, v in loads.items()})
+        if queue_depths:
+            self.queue_depths.update({k: int(v)
+                                      for k, v in queue_depths.items()})
+        # scalar b of Eq. 5 (the edge<->cloud WAN); per-tier uplinks optional
+        self.bandwidth_bps = float(bandwidth_bps)
+        self.bandwidths: Dict[str, float] = (
+            {k: float(v) for k, v in bandwidths.items()} if bandwidths else {})
+
+    # -- per-tier access ----------------------------------------------------
+
+    def load(self, tier: str) -> float:
+        return self.loads.get(tier, 0.0)
+
+    def queue_depth(self, tier: str) -> int:
+        return self.queue_depths.get(tier, 0)
+
+    def bandwidth_to(self, tier: str) -> float:
+        """Uplink bandwidth toward ``tier`` (the global b when untracked)."""
+        return self.bandwidths.get(tier, self.bandwidth_bps)
+
+    # -- legacy two-tier views ---------------------------------------------
+
+    @property
+    def edge_load(self) -> float:
+        return self.loads.get(EDGE_TIER, 0.0)
+
+    @edge_load.setter
+    def edge_load(self, v: float) -> None:
+        self.loads[EDGE_TIER] = float(v)
+
+    @property
+    def cloud_load(self) -> float:
+        return self.loads.get(CLOUD_TIER, 0.0)
+
+    @cloud_load.setter
+    def cloud_load(self, v: float) -> None:
+        self.loads[CLOUD_TIER] = float(v)
+
+    @property
+    def queue_depth_edge(self) -> int:
+        return self.queue_depths.get(EDGE_TIER, 0)
+
+    @queue_depth_edge.setter
+    def queue_depth_edge(self, v: int) -> None:
+        self.queue_depths[EDGE_TIER] = int(v)
+
+    @property
+    def queue_depth_cloud(self) -> int:
+        return self.queue_depths.get(CLOUD_TIER, 0)
+
+    @queue_depth_cloud.setter
+    def queue_depth_cloud(self, v: int) -> None:
+        self.queue_depths[CLOUD_TIER] = int(v)
+
+    def __repr__(self) -> str:
+        return (f"SystemState(loads={self.loads}, "
+                f"queues={self.queue_depths}, "
+                f"bandwidth_bps={self.bandwidth_bps:.3g})")
 
 
 class StateEstimator:
@@ -28,22 +105,34 @@ class StateEstimator:
         self.state = init or SystemState()
         self._lat_window: Deque[float] = collections.deque(maxlen=256)
 
-    def observe_edge_load(self, load: float) -> None:
+    def observe_load(self, tier: str, load: float) -> None:
         a = self.alpha
-        self.state.edge_load = (1 - a) * self.state.edge_load + a * float(load)
+        prev = self.state.loads.get(tier, 0.0)
+        self.state.loads[tier] = (1 - a) * prev + a * float(load)
+
+    def observe_edge_load(self, load: float) -> None:
+        self.observe_load(EDGE_TIER, load)
 
     def observe_cloud_load(self, load: float) -> None:
-        a = self.alpha
-        self.state.cloud_load = (1 - a) * self.state.cloud_load + a * float(load)
+        self.observe_load(CLOUD_TIER, load)
 
-    def observe_bandwidth(self, bps: float) -> None:
+    def observe_bandwidth(self, bps: float,
+                          tier: Optional[str] = None) -> None:
         a = self.alpha
-        self.state.bandwidth_bps = ((1 - a) * self.state.bandwidth_bps
-                                    + a * float(bps))
+        if tier is None:
+            self.state.bandwidth_bps = ((1 - a) * self.state.bandwidth_bps
+                                        + a * float(bps))
+            return
+        prev = self.state.bandwidths.get(tier, float(bps))
+        self.state.bandwidths[tier] = (1 - a) * prev + a * float(bps)
 
     def observe_queues(self, edge: int, cloud: int) -> None:
-        self.state.queue_depth_edge = edge
-        self.state.queue_depth_cloud = cloud
+        self.state.queue_depths[EDGE_TIER] = int(edge)
+        self.state.queue_depths[CLOUD_TIER] = int(cloud)
+
+    def observe_queue_depths(self, depths: Dict[str, int]) -> None:
+        for tier, d in depths.items():
+            self.state.queue_depths[tier] = int(d)
 
     def observe_latency(self, seconds: float) -> None:
         self._lat_window.append(float(seconds))
@@ -55,6 +144,8 @@ class StateEstimator:
         return xs[min(len(xs) - 1, int(0.95 * len(xs)))]
 
     def snapshot(self) -> SystemState:
-        return SystemState(self.state.edge_load, self.state.bandwidth_bps,
-                           self.state.cloud_load, self.state.queue_depth_edge,
-                           self.state.queue_depth_cloud)
+        s = self.state
+        return SystemState(bandwidth_bps=s.bandwidth_bps,
+                           loads=dict(s.loads),
+                           queue_depths=dict(s.queue_depths),
+                           bandwidths=dict(s.bandwidths))

@@ -1,40 +1,61 @@
-"""Two-tier serving launcher: MoA-Off scheduler + live engines on reduced
-models (the paper's edge/cloud pair), driven by a synthetic request stream.
+"""Serving launcher: MoA-Off scheduler + live engines on reduced models,
+driven by a synthetic request stream.
+
+Default is the paper's two-tier edge/cloud pair; ``--topology`` selects any
+registered ``ClusterTopology`` (e.g. ``edge-regional-cloud``) and spins up
+one reduced-model engine per tier.
 
 PYTHONPATH=src python -m repro.launch.serve --requests 16 --bandwidth 300e6
+PYTHONPATH=src python -m repro.launch.serve --topology edge-regional-cloud
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 import numpy as np
 
-from repro.config import ServingConfig
+from repro.config import TOPOLOGIES, ServingConfig, get_topology
 from repro.configs import reduced_config
 from repro.data.synthetic import make_image
 from repro.models import build_model
 from repro.serving.engine import TierEngine
-from repro.serving.tiers import EdgeCloudServer
+from repro.serving.tiers import ClusterServer
+
+
+def build_engines(topology, sv: ServingConfig) -> dict:
+    engines = {}
+    for i, tier in enumerate(topology.tiers):
+        cfg = reduced_config(tier.model).replace(dtype="float32")
+        model = build_model(cfg)
+        engines[tier.name] = TierEngine(
+            model, model.init(jax.random.PRNGKey(i)), sv)
+    return engines
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--bandwidth", type=float, default=300e6)
+    ap.add_argument("--bandwidth", type=float, default=None,
+                    help="override every remote uplink (bps); default keeps "
+                         "the topology's declared links")
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--topology", default="edge-cloud",
+                    choices=sorted(TOPOLOGIES),
+                    help="cluster topology to serve (one engine per tier)")
     args = ap.parse_args()
 
     sv = ServingConfig(max_batch=args.max_batch, max_seq=128)
-    edge_cfg = reduced_config("qwen2-vl-2b").replace(dtype="float32")
-    cloud_cfg = reduced_config("qwen2.5-vl-7b").replace(dtype="float32")
-    em = build_model(edge_cfg)
-    cm = build_model(cloud_cfg)
-    edge = TierEngine(em, em.init(jax.random.PRNGKey(0)), sv)
-    cloud = TierEngine(cm, cm.init(jax.random.PRNGKey(1)), sv)
-    server = EdgeCloudServer(edge, cloud, bandwidth_bps=args.bandwidth)
+    topo = get_topology(args.topology)
+    if args.bandwidth is not None:
+        topo = dataclasses.replace(topo, tiers=tuple(
+            dataclasses.replace(t, uplink_bps=args.bandwidth)
+            if t.is_remote else t for t in topo.tiers))
+    print(f"topology {topo.name}: tiers {', '.join(topo.names)}")
+    server = ClusterServer(build_engines(topo, sv), topology=topo)
 
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
@@ -45,12 +66,14 @@ def main() -> None:
         server.submit(text, image=img, max_new=args.max_new)
 
     results = server.run()
-    n_edge = sum(r.tier == "edge" for r in results)
+    per_tier = {}
+    for r in results:
+        per_tier[r.tier] = per_tier.get(r.tier, 0) + 1
     lat = np.mean([r.latency_s for r in results])
-    print(f"served {len(results)} requests | edge={n_edge} "
-          f"cloud={len(results) - n_edge} | mean latency {lat:.3f}s")
+    split = " ".join(f"{t}={n}" for t, n in sorted(per_tier.items()))
+    print(f"served {len(results)} requests | {split} | mean latency {lat:.3f}s")
     for r in sorted(results, key=lambda r: r.rid)[:10]:
-        print(f"  rid={r.rid} tier={r.tier:5s} routes={r.routes} "
+        print(f"  rid={r.rid} tier={r.tier:9s} routes={r.routes} "
               f"lat={r.latency_s:.3f}s")
 
 

@@ -235,7 +235,7 @@ class DecoderLM:
             if key in ("pos", "index"):
                 out[key] = jax.ShapeDtypeStruct(sub.shape, jnp.int32)
                 continue
-            out[key] = jax.tree.map_with_path(
+            out[key] = jax.tree_util.tree_map_with_path(
                 lambda path, ps: jax.ShapeDtypeStruct(
                     ps.shape,
                     jnp.float32 if any(

@@ -1,4 +1,6 @@
 from repro.serving.accuracy_model import AccuracyModel, MMBENCH, VQAV2  # noqa
 from repro.serving.engine import SeqState, TierEngine  # noqa
-from repro.serving.simulator import EdgeCloudSimulator  # noqa
-from repro.serving.tiers import EdgeCloudServer, ServedResult  # noqa
+from repro.serving.simulator import (ClusterSimulator,  # noqa
+                                     EdgeCloudSimulator)
+from repro.serving.tiers import (ClusterServer, EdgeCloudServer,  # noqa
+                                 ServedResult)

@@ -28,23 +28,33 @@ class AccuracyModel:
     edge_cliff: float = 2.4
     late_penalty: float = 0.9  # SLO-missed responses lose some utility
 
-    def p_correct(self, difficulty: float, tier: str) -> float:
+    def p_correct(self, difficulty: float, tier: str,
+                  capability: float = None) -> float:
+        """P(correct). ``capability`` ∈ [0,1] interpolates the cliff between
+        the edge curve (0.0) and the cloud curve (1.0); when omitted it is
+        inferred from the legacy tier name."""
         d = float(np.clip(difficulty, 0.0, 1.0))
+        if capability is None:
+            # conservative fallback: only the literal cloud tier gets the
+            # cliff-free curve; unknown tier names behave edge-grade
+            capability = 1.0 if tier == "cloud" else 0.0
         p = self.base - self.cloud_slope * d
-        if tier == "edge":
-            p -= self.edge_cliff * max(0.0, d - self.edge_knee)
+        p -= (1.0 - float(np.clip(capability, 0.0, 1.0))) \
+            * self.edge_cliff * max(0.0, d - self.edge_knee)
         return float(np.clip(p, 0.02, 0.99))
 
     def sample(self, rng: np.random.Generator, difficulty: float, tier: str,
-               on_time: bool = True) -> bool:
-        p = self.p_correct(difficulty, tier)
+               on_time: bool = True, capability: float = None) -> bool:
+        p = self.p_correct(difficulty, tier, capability)
         if not on_time:
             p *= self.late_penalty
         return bool(rng.random() < p)
 
-    def mean_accuracy(self, tier: str, n: int = 20001) -> float:
+    def mean_accuracy(self, tier: str, n: int = 20001,
+                      capability: float = None) -> float:
         ds = np.linspace(0, 1, n)
-        return float(np.mean([self.p_correct(d, tier) for d in ds]))
+        return float(np.mean([self.p_correct(d, tier, capability)
+                              for d in ds]))
 
 
 # dataset-flavoured variants (MMBench is a bit harder across the board)

@@ -1,15 +1,20 @@
-"""Discrete-event simulation of the paper's edge-cloud testbed (§4).
+"""Discrete-event simulation of an N-tier edge–cloud cluster (§4,
+generalized from the paper's two-tier testbed).
 
-Stations (edge GPU, cloud GPU, WAN uplink) are FIFO queues with service times
-from the analytic cost model over the REAL model configs; the scheduler in
-the loop is the real MoA-Off implementation (same code path that serves the
-live engine). Fault tolerance is exercised in-simulation: nodes fail with a
-configurable rate (heartbeat-detected, requests retried) and slow stragglers
-are hedged to the other tier.
+Stations (one FIFO multi-server queue per tier, one WAN link per remote
+tier) take service times from the analytic cost model over the REAL model
+configs; the scheduler in the loop is the real MoA-Off implementation (same
+code path that serves the live engine). Fault tolerance is exercised
+in-simulation: nodes fail with a configurable rate (heartbeat-detected,
+requests retried) and slow stragglers are hedged to the least-loaded other
+tier.
 
-Outputs per policy: latency distribution, accuracy, per-tier compute
-(FLOP·s used) and memory (byte·s) overheads — everything Table 1 / Fig. 3 /
-Fig. 4 need.
+The topology comes from ``ClusterTopology`` (config arg or ``--topology``
+name); with none given the paper's edge/cloud pair is built from the legacy
+``SimConfig`` fields, reproducing the original behavior and metric keys
+exactly. Outputs per policy: latency distribution, accuracy, per-tier
+compute (FLOP·s used) and memory (byte·s) overheads — everything Table 1 /
+Fig. 3 / Fig. 4 need.
 """
 from __future__ import annotations
 
@@ -20,7 +25,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.config import ModelConfig, PolicyConfig, SimConfig
+from repro.config import (ClusterTopology, ModelConfig, PolicyConfig,
+                          SimConfig, TierSpec, two_tier_topology)
 from repro.configs import get_config
 from repro.core.baselines import make_policy
 from repro.core.request import Decision, ModalityInput, Outcome, Request
@@ -65,24 +71,46 @@ class Station:
         return min(1.0, (self.busy + len(self.queue)) / denom)
 
 
-class EdgeCloudSimulator:
+class ClusterSimulator:
+    """Cluster runtime simulator over an arbitrary ``ClusterTopology``."""
+
     def __init__(self, sim_cfg: SimConfig, policy_name: str = "moa-off",
                  policy_cfg: PolicyConfig = PolicyConfig(),
                  acc_model: AccuracyModel = VQAV2,
                  fail_rate: float = 0.0, hedge_after_s: float = 0.0,
-                 cloud_servers: int = 4, edge_servers: int = 1):
+                 cloud_servers: int = 4, edge_servers: int = 1,
+                 topology: Optional[ClusterTopology] = None):
         self.cfg = sim_cfg
+        topo = topology or sim_cfg.topology
+        if topo is not None and (edge_servers != 1 or cloud_servers != 4):
+            raise ValueError(
+                "edge_servers/cloud_servers only apply to the legacy "
+                "two-tier default; set TierSpec.servers on the topology "
+                "instead")
+        topo = topo or two_tier_topology(
+            sim_cfg.edge, sim_cfg.cloud, sim_cfg.bandwidth_bps,
+            sim_cfg.rtt_s, edge_servers=edge_servers,
+            cloud_servers=cloud_servers)
+        self.topology = topo
         self.rng = np.random.default_rng(sim_cfg.seed)
         self.policy_name = policy_name
-        self.scheduler = MoAOffScheduler(policy=make_policy(policy_name,
-                                                            policy_cfg))
+        self.scheduler = MoAOffScheduler(policy=make_policy(
+            policy_name, policy_cfg, topology=topo))
         self.acc = acc_model
-        self.edge_model = get_config(sim_cfg.edge.model)
-        self.cloud_model = get_config(sim_cfg.cloud.model)
-        self.edge = Station("edge", edge_servers, fail_rate)
-        self.cloud = Station("cloud", cloud_servers, fail_rate)
-        self.link = Station("link", 1)
+        self.specs: Dict[str, TierSpec] = {t.name: t for t in topo.tiers}
+        self.models: Dict[str, ModelConfig] = {
+            t.name: get_config(t.model) for t in topo.tiers}
+        self.stations: Dict[str, Station] = {
+            t.name: Station(t.name, t.servers, fail_rate) for t in topo.tiers}
+        self.links: Dict[str, Station] = {
+            t.name: Station(f"link:{t.name}", 1)
+            for t in topo.tiers if t.is_remote}
+        # legacy attribute views (None when the topology lacks the name)
+        self.edge = self.stations.get("edge")
+        self.cloud = self.stations.get("cloud")
+        self.link = self.links.get("cloud")
         self.hedge_after_s = hedge_after_s
+        self.encode_flops: Dict[str, float] = {}  # partial-offload side work
         self.events: List[Event] = []
         self._seq = itertools.count()
         self.outcomes: List[Outcome] = []
@@ -94,18 +122,23 @@ class EdgeCloudSimulator:
         heapq.heappush(self.events, Event(t, next(self._seq), kind, payload))
 
     def _station(self, tier: str) -> Station:
-        return self.edge if tier == "edge" else self.cloud
+        return self.stations[tier]
 
     def _model(self, tier: str) -> ModelConfig:
-        return self.edge_model if tier == "edge" else self.cloud_model
+        return self.models[tier]
 
-    def _tier_cfg(self, tier: str):
-        return self.cfg.edge if tier == "edge" else self.cfg.cloud
+    def _tier_cfg(self, tier: str) -> TierSpec:
+        return self.specs[tier]
 
     # ------------------------------------------------------------------
 
     def _service_request(self, job: dict) -> Tuple[float, float, float]:
-        """(service_seconds, flops, mem_byte_s) for one fused inference."""
+        """(service_seconds, flops, mem_byte_s) for one fused inference.
+
+        Pure function of (request, routes, serving tier) — all accounting
+        side effects live with the callers, so it can be re-evaluated (e.g.
+        for a hedged clone on another tier) without double charging.
+        """
         req: Request = job["request"]
         tier = job["tier"]
         mcfg = self._model(tier)
@@ -119,39 +152,60 @@ class EdgeCloudSimulator:
             else:
                 text_tokens += n
         # the paper's "severe latency tail typical of edge-only models
-        # struggling with difficult samples": the weak model rambles /
+        # struggling with difficult samples": a weak model rambles /
         # re-derives on inputs beyond its capability knee -> decode length
-        # grows with difficulty (easy inputs run at full speed)
+        # grows with difficulty, scaled by how far the tier sits from
+        # cloud-class capability (easy inputs run at full speed)
         decode_tokens = req.decode_tokens
-        if tier == "edge":
-            decode_tokens = int(decode_tokens
-                                * (1.0 + 14.0 * max(0.0, req.difficulty - 0.45)))
-        # PARTIAL offloading (§3.2): modalities routed to the edge of a
-        # cloud-fused request are ENCODED at the edge — only their compact
-        # embeddings ride along, so the cloud never spends prefill FLOPs on
+        weakness = 1.0 - tcfg.capability
+        if weakness > 0:
+            decode_tokens = int(decode_tokens * (
+                1.0 + 14.0 * weakness * max(0.0, req.difficulty - 0.45)))
+        # PARTIAL offloading (§3.2): modalities routed to another tier of a
+        # fused request are ENCODED there — only their compact embeddings
+        # ride along, so the serving tier never spends prefill FLOPs on
         # them. (This is MoA-Off's fine-grained scheduling; uniform policies
-        # ship the whole request.)
-        routes = job["decision"].routes
-        if tier == "cloud" and any(r == "edge" for r in routes.values()):
-            edge_cfg = self.edge_model
-            edge_tc = self.cfg.edge
-            off_text = sum(cm.modality_tokens(edge_cfg, m)
+        # ship the whole request.) The discount belongs to the PLANNED
+        # fusion tier only: a hedged clone running elsewhere has no
+        # embeddings waiting for it and must prefill everything.
+        if tier == job.get("fusion", tier):
+            routes = job["decision"].routes
+            off_text = sum(cm.modality_tokens(mcfg, m)
                            for nm, m in req.modalities.items()
-                           if m.kind != "image" and routes.get(nm) == "edge")
+                           if m.kind != "image"
+                           and routes.get(nm, tier) != tier)
             text_tokens = max(0, text_tokens - off_text)
-            if off_text:
-                enc = cm.prefill_flops(edge_cfg, off_text, 0)
-                self.edge.flops += enc
-                self.edge.mem_byte_s += 2.0 * enc  # ~bytes/flop of prefill
         costs = cm.request_phase_costs(mcfg, text_tokens, image_tokens,
                                        decode_tokens, tcfg)
         sec = costs["prefill"].seconds + costs["decode"].seconds
         flops = costs["prefill"].flops + costs["decode"].flops
         kv = cm._kv_bytes_per_token(mcfg) * (text_tokens + image_tokens
                                              + req.decode_tokens)
-        mem_byte_s = (cm.weights_bytes(mcfg) / max(self._station(tier).servers, 1)
+        mem_byte_s = (cm.weights_bytes(mcfg) / max(tcfg.servers, 1)
                       + kv) * sec
         return sec, flops, mem_byte_s
+
+    def _encode_charges(self, req: Request, routes: Dict[str, str],
+                        fusion: str) -> List[Tuple[str, float, float]]:
+        """Partial-offload encode work: (tier, flops, mem_byte_s) for every
+        non-image modality encoded away from the fusion tier. Charged ONCE
+        per request, at arrival, to the encoding tier's station counters."""
+        charges = []
+        for nm, m in req.modalities.items():
+            routed = routes.get(nm, fusion)
+            if m.kind == "image" or routed == fusion:
+                continue
+            enc_cfg = self._model(routed)
+            spec = self._tier_cfg(routed)
+            toks = cm.modality_tokens(enc_cfg, m)
+            if toks <= 0:
+                continue
+            enc = cm.request_phase_costs(enc_cfg, toks, 0, 0, spec)["prefill"]
+            kv = cm._kv_bytes_per_token(enc_cfg) * toks
+            mem = (cm.weights_bytes(enc_cfg) / max(spec.servers, 1)
+                   + kv) * enc.seconds
+            charges.append((routed, enc.flops, mem))
+        return charges
 
     # ------------------------------------------------------------------
 
@@ -159,12 +213,18 @@ class EdgeCloudSimulator:
         self._push(req.arrival_s, "arrival", request=req)
 
     def _observe(self):
-        self.scheduler.observe(edge_load=self.edge.load,
-                               cloud_load=self.cloud.load,
-                               bandwidth_bps=self.cfg.bandwidth_bps)
-        self.scheduler.estimator.observe_queues(
-            self.edge.busy + len(self.edge.queue),
-            self.cloud.busy + len(self.cloud.queue))
+        remote = self.topology.remote_tiers
+        # the scalar b of Eq. 5 is the edge<->cloud WAN: the anchor remote
+        # tier's uplink (per-tier uplinks ride in the bandwidths dict)
+        wan = (self.topology.default_remote.uplink_bps if remote
+               else self.cfg.bandwidth_bps)
+        self.scheduler.observe(
+            loads={name: st.load for name, st in self.stations.items()},
+            bandwidth_bps=wan,
+            bandwidths={t.name: t.uplink_bps for t in remote})
+        self.scheduler.estimator.observe_queue_depths(
+            {name: st.busy + len(st.queue)
+             for name, st in self.stations.items()})
 
     def _on_arrival(self, ev: Event):
         req: Request = ev.payload["request"]
@@ -174,48 +234,79 @@ class EdgeCloudSimulator:
         # orders of magnitude below model inference (§4.2.3); modelled as a
         # fixed sub-millisecond cost on the request path.
         score_cost = 5e-4 if self.policy_name.startswith("moa-off") else 0.0
-        fusion_tier = "cloud" if decision.any_cloud else "edge"
-        job = {"request": req, "decision": decision, "tier": fusion_tier,
-               "t_start": ev.t, "retries": 0, "hedged": False,
-               "done": False}
-        # bytes that must cross the WAN: payloads of cloud-routed modalities
-        up_bytes = sum(m.size_bytes for name, m in req.modalities.items()
-                       if decision.routes.get(name) == "cloud")
-        if fusion_tier == "cloud" and up_bytes == 0:
-            up_bytes = 2048  # at minimum the text/prompt goes up
-        job["transfer_bytes"] = up_bytes
-        if up_bytes > 0:
-            self._enqueue_link(ev.t + score_cost, job)
+        fusion = self.topology.fusion_tier(decision.routes)
+        # "done" is a shared cell so a hedged clone finishing first also
+        # retires the original (and vice versa) — exactly one Outcome/request
+        job = {"request": req, "decision": decision, "tier": fusion,
+               "fusion": fusion, "t_start": ev.t, "retries": 0,
+               "hedged": False, "done": [False]}
+        for tier, enc_f, enc_m in self._encode_charges(req, decision.routes,
+                                                       fusion):
+            st = self.stations[tier]
+            st.flops += enc_f
+            st.mem_byte_s += enc_m
+            self.encode_flops[tier] = self.encode_flops.get(tier, 0.0) + enc_f
+        # bytes that must cross a WAN: payloads of remote-routed modalities,
+        # tallied per remote tier (their links transfer in parallel)
+        remote_bytes: Dict[str, float] = {}
+        for name, m in req.modalities.items():
+            routed = decision.routes.get(name, fusion)
+            if self.specs[routed].is_remote:
+                remote_bytes[routed] = (remote_bytes.get(routed, 0.0)
+                                        + m.size_bytes)
+        if self.specs[fusion].is_remote:
+            # the fusion tier's own link carries at minimum the text/prompt
+            remote_bytes[fusion] = remote_bytes.get(fusion, 0.0) or 2048.0
+        job["transfer_bytes"] = sum(remote_bytes.values())
+        if remote_bytes:
+            # each remote tier's payload crosses its OWN uplink; the links
+            # run in parallel and service starts when the last one lands
+            # (sorted for deterministic event order)
+            for tname, nbytes in sorted(remote_bytes.items()):
+                self._enqueue_link(ev.t + score_cost, tname, job, nbytes)
         else:
             self._enqueue_station(ev.t + score_cost, job)
         if self.hedge_after_s > 0:
             self._push(ev.t + self.hedge_after_s, "hedge_check", job=job)
 
-    # -- WAN link ----------------------------------------------------------
+    # -- WAN links ---------------------------------------------------------
 
-    def _enqueue_link(self, t: float, job: dict):
-        self.link.utilization_update(t)
-        if self.link.busy < self.link.servers:
-            self.link.busy += 1
-            sec = cm.transfer_seconds(job["transfer_bytes"],
-                                      self.cfg.bandwidth_bps, self.cfg.rtt_s)
-            self._push(t + sec, "transfer_done", job=job)
+    def _link_seconds(self, tier: str, num_bytes: float) -> float:
+        spec = self.specs[tier]
+        return cm.transfer_seconds(num_bytes, spec.uplink_bps, spec.rtt_s)
+
+    def _enqueue_link(self, t: float, tier: str, job: dict,
+                      num_bytes: float):
+        """Queue one transfer (a job may hold several, one per remote tier
+        its modalities route to); the job proceeds to its station only once
+        every pending transfer has landed."""
+        xfer = {"job": job, "tier": tier, "bytes": num_bytes}
+        job["pending_transfers"] = job.get("pending_transfers", 0) + 1
+        link = self.links[tier]
+        link.utilization_update(t)
+        if link.busy < link.servers:
+            link.busy += 1
+            sec = self._link_seconds(tier, num_bytes)
+            self._push(t + sec, "transfer_done", xfer=xfer)
         else:
-            self.link.queue.append({"job": job})
+            link.queue.append(xfer)
 
     def _on_transfer_done(self, ev: Event):
-        job = ev.payload["job"]
-        self.link.utilization_update(ev.t)
-        self.link.busy -= 1
-        if self.link.queue:
-            nxt = self.link.queue.pop(0)["job"]
-            self.link.busy += 1
-            sec = cm.transfer_seconds(nxt["transfer_bytes"],
-                                      self.cfg.bandwidth_bps, self.cfg.rtt_s)
-            self._push(ev.t + sec, "transfer_done", job=nxt)
-        self._enqueue_station(ev.t, job)
+        xfer = ev.payload["xfer"]
+        link = self.links[xfer["tier"]]
+        link.utilization_update(ev.t)
+        link.busy -= 1
+        if link.queue:
+            nxt = link.queue.pop(0)
+            link.busy += 1
+            sec = self._link_seconds(nxt["tier"], nxt["bytes"])
+            self._push(ev.t + sec, "transfer_done", xfer=nxt)
+        job = xfer["job"]
+        job["pending_transfers"] -= 1
+        if job["pending_transfers"] == 0:
+            self._enqueue_station(ev.t, job)
 
-    # -- compute stations ----------------------------------------------------
+    # -- compute stations --------------------------------------------------
 
     def _enqueue_station(self, t: float, job: dict):
         st = self._station(job["tier"])
@@ -227,8 +318,14 @@ class EdgeCloudSimulator:
 
     def _start_service(self, t: float, st: Station, job: dict):
         st.busy += 1
-        sec, flops, mem = self._service_request(job)
-        job["service_s"] = sec
+        job["in_service"] = True
+        # compute once per (job, tier) and cache — _on_service_done reads
+        # the cached values, so resources are charged exactly once
+        if job.get("cost_tier") != job["tier"]:
+            sec, flops, mem = self._service_request(job)
+            job.update(service_s=sec, service_flops=flops, service_mem=mem,
+                       cost_tier=job["tier"])
+        sec = job["service_s"]
         # fault injection: the node serving this job dies mid-flight and the
         # failure is detected after a heartbeat timeout, then retried
         if st.fail_rate > 0 and self.rng.random() < st.fail_rate:
@@ -245,57 +342,63 @@ class EdgeCloudSimulator:
             self._start_service(t, st, job)
 
     def _on_service_failed(self, ev: Event):
-        st = self.edge if ev.payload["station"] == "edge" else self.cloud
+        st = self.stations[ev.payload["station"]]
         job = ev.payload["job"]
         self._next_from_queue(ev.t, st)
-        if job["done"]:
+        if job["done"][0]:
             return
         job["retries"] += 1
+        job["in_service"] = False
         self._enqueue_station(ev.t, job)  # retry (possibly behind queue)
 
     def _on_hedge_check(self, ev: Event):
         job = ev.payload["job"]
-        if job["done"] or job.get("in_service_done"):
+        # only genuinely queued/straggling jobs are hedged — a job already
+        # being served (or finished) is left alone
+        if job["done"][0] or job.get("in_service"):
             return
-        # straggler mitigation: duplicate to the other tier; first wins
         if not job["hedged"]:
+            others = [n for n in self.stations if n != job["tier"]]
+            if not others:
+                return
+            # duplicate to the least-loaded other tier; first copy wins
+            alt = min(others, key=lambda n: (self.stations[n].load, n))
             clone = dict(job)
-            clone["tier"] = "cloud" if job["tier"] == "edge" else "edge"
+            clone["tier"] = alt
             clone["hedged"] = True
             job["hedged"] = True
-            clone["transfer_bytes"] = 0
+            # keep transfer_bytes: the original's WAN transfer already
+            # happened, and the single Outcome must account for it even
+            # when the clone wins
+            clone["in_service"] = False
             self._enqueue_station(ev.t, clone)
 
     def _on_service_done(self, ev: Event):
-        st = self.edge if ev.payload["station"] == "edge" else self.cloud
+        tier = ev.payload["station"]
+        st = self.stations[tier]
         job = ev.payload["job"]
         self._next_from_queue(ev.t, st)
-        if job["done"]:
+        if job["done"][0]:
             return  # the hedged twin finished first
-        job["done"] = True
+        job["done"][0] = True
         req: Request = job["request"]
-        tier = ev.payload["station"]
-        sec, flops, mem = job["service_s"], *self._resources(job)
+        sec = job["service_s"]
+        flops, mem = job["service_flops"], job["service_mem"]
         st.flops += flops
         st.mem_byte_s += mem
-        down = self.cfg.rtt_s if tier == "cloud" else 0.0
+        spec = self.specs[tier]
+        down = spec.rtt_s if spec.is_remote else 0.0
         latency = ev.t + down - req.arrival_s
         on_time = latency <= req.slo_s
-        correct = self.acc.sample(self.rng, req.difficulty, tier, on_time)
+        correct = self.acc.sample(self.rng, req.difficulty, tier, on_time,
+                                  capability=spec.capability)
         self.scheduler.observe(latency_s=latency)
         self.outcomes.append(Outcome(
             rid=req.rid, latency_s=latency, routes=job["decision"].routes,
-            correct=correct,
-            edge_flops=flops if tier == "edge" else 0.0,
-            cloud_flops=flops if tier == "cloud" else 0.0,
-            edge_mem_bytes=mem if tier == "edge" else 0.0,
-            cloud_mem_bytes=mem if tier == "cloud" else 0.0,
+            correct=correct, tier_flops={tier: flops},
+            tier_mem_bytes={tier: mem},
             transfer_bytes=job["transfer_bytes"], hedged=job["hedged"],
-            retries=job["retries"]))
-
-    def _resources(self, job):
-        _, flops, mem = self._service_request(job)
-        return flops, mem
+            retries=job["retries"], served_tier=tier))
 
     # ------------------------------------------------------------------
 
@@ -318,25 +421,37 @@ class EdgeCloudSimulator:
     def metrics(self) -> Dict[str, float]:
         lats = np.array([o.latency_s for o in self.outcomes])
         acc = np.mean([o.correct for o in self.outcomes])
-        edge_f = sum(o.edge_flops for o in self.outcomes)
-        cloud_f = sum(o.cloud_flops for o in self.outcomes)
-        edge_m = sum(o.edge_mem_bytes for o in self.outcomes)
-        cloud_m = sum(o.cloud_mem_bytes for o in self.outcomes)
-        return {
+        per_flops = {name: 0.0 for name in self.stations}
+        per_mem = {name: 0.0 for name in self.stations}
+        for o in self.outcomes:
+            for t, v in o.tier_flops.items():
+                per_flops[t] += v
+            for t, v in o.tier_mem_bytes.items():
+                per_mem[t] += v
+        local = {t.name for t in self.topology.local_tiers}
+        frac_local = float(np.mean([
+            all(r in local for r in o.routes.values())
+            for o in self.outcomes]))
+        out = {
             "accuracy": float(acc),
             "mean_latency_s": float(lats.mean()),
             "p50_latency_s": float(np.percentile(lats, 50)),
             "p95_latency_s": float(np.percentile(lats, 95)),
             "p99_latency_s": float(np.percentile(lats, 99)),
-            "edge_flops": edge_f, "cloud_flops": cloud_f,
-            "total_flops": edge_f + cloud_f,
-            "edge_mem_byte_s": edge_m, "cloud_mem_byte_s": cloud_m,
-            "total_mem_byte_s": edge_m + cloud_m,
-            "edge_util": self.edge.busy_time / max(self.t, 1e-9),
-            "cloud_util": self.cloud.busy_time / max(self.t, 1e-9),
-            "frac_edge": float(np.mean([not any(
-                r == "cloud" for r in o.routes.values())
-                for o in self.outcomes])),
+            "total_flops": sum(per_flops.values()),
+            "total_mem_byte_s": sum(per_mem.values()),
+            "frac_edge": frac_local,  # legacy name: fully-local fraction
+            "frac_local": frac_local,
             "hedged": float(np.mean([o.hedged for o in self.outcomes])),
             "retries": float(np.mean([o.retries for o in self.outcomes])),
         }
+        for name, st in self.stations.items():
+            out[f"{name}_flops"] = per_flops[name]
+            out[f"{name}_mem_byte_s"] = per_mem[name]
+            out[f"{name}_util"] = st.busy_time / max(self.t, 1e-9)
+        return out
+
+
+# the original two-tier entry point: same class, topology defaulted from the
+# legacy SimConfig edge/cloud pair
+EdgeCloudSimulator = ClusterSimulator

@@ -1,23 +1,30 @@
-"""Two-tier live serving: the MoA-Off scheduler in front of two real engines.
+"""N-tier live serving: the MoA-Off scheduler in front of real engines.
 
-``EdgeCloudServer`` is the end-to-end driver: requests carry real payloads
-(images as arrays, text as strings through the toy tokenizer); the scheduler
-scores them with the kernel-backed complexity module, routes per modality
-(Eq. 6), and the chosen tier's continuous-batching engine generates tokens.
-A simulated WAN delay (bandwidth + RTT) is charged on cloud-routed bytes.
+``ClusterServer`` is the end-to-end driver over a ``ClusterTopology``:
+requests carry real payloads (images as arrays, text as strings through the
+toy tokenizer); the scheduler scores them with the kernel-backed complexity
+module, routes per modality (Eq. 6 over the tier set), and the fusion tier's
+continuous-batching engine generates tokens. A simulated WAN delay
+(per-tier uplink bandwidth + RTT) is charged on remote-routed bytes.
+
+``EdgeCloudServer`` is the original two-tier entry point, now a thin
+wrapper building the legacy edge/cloud topology.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.config import ServingConfig
+from repro.config import (ClusterTopology, ServingConfig, TierSpec,
+                          two_tier_topology)
 from repro.core.request import ModalityInput, Request
 from repro.core.scheduler import MoAOffScheduler
 from repro.data.tokenizer import ToyTokenizer
+from repro.serving.cost_model import transfer_seconds
 from repro.serving.engine import TierEngine
 
 
@@ -31,22 +38,54 @@ class ServedResult:
     wan_s: float
 
 
-class EdgeCloudServer:
-    def __init__(self, edge_engine: TierEngine, cloud_engine: TierEngine,
+def _default_topology(engine_names, bandwidth_bps: float,
+                      rtt_s: float) -> ClusterTopology:
+    """Topology inferred from engine names when none is given: a tier named
+    "cloud" is remote behind the WAN, everything else is local. Hardware
+    specs come from the canonical testbed pair in ``two_tier_topology``."""
+    edge_spec, cloud_spec = two_tier_topology(
+        bandwidth_bps=bandwidth_bps, rtt_s=rtt_s).tiers
+    return ClusterTopology("inferred", tuple(
+        dataclasses.replace(
+            cloud_spec if name == "cloud" else edge_spec, name=name)
+        for name in engine_names))
+
+
+class ClusterServer:
+    """MoA-Off control plane in front of one live ``TierEngine`` per tier."""
+
+    def __init__(self, engines: Dict[str, TierEngine],
+                 topology: Optional[ClusterTopology] = None,
                  scheduler: Optional[MoAOffScheduler] = None,
-                 bandwidth_bps: float = 300e6, rtt_s: float = 0.02):
-        self.edge = edge_engine
-        self.cloud = cloud_engine
-        self.scheduler = scheduler or MoAOffScheduler()
+                 bandwidth_bps: Optional[float] = None, rtt_s: float = 0.02):
+        self.engines = dict(engines)
+        self.topology = topology or _default_topology(
+            self.engines, bandwidth_bps if bandwidth_bps is not None
+            else 300e6, rtt_s)
+        missing = set(self.topology.names) - set(self.engines)
+        if missing:
+            raise ValueError(f"no engine for topology tiers {sorted(missing)}")
+        from repro.core.baselines import make_policy
+
+        self.scheduler = scheduler or MoAOffScheduler(
+            policy=make_policy("moa-off", topology=self.topology))
         self.tok = ToyTokenizer()
-        self.bandwidth = bandwidth_bps
+        # the scheduler's observed scalar b defaults to the topology's own
+        # anchor WAN uplink, so Eq. 5 gating and charged WAN cost agree
+        self.bandwidth = (bandwidth_bps if bandwidth_bps is not None
+                          else self.topology.default_remote.uplink_bps)
         self.rtt = rtt_s
         self._rid = 0
         self._meta: Dict[int, dict] = {}
         self.results: List[ServedResult] = []
 
     def _engine(self, tier: str) -> TierEngine:
-        return self.edge if tier == "edge" else self.cloud
+        return self.engines[tier]
+
+    def _wan_seconds(self, spec: TierSpec, num_bytes: int) -> float:
+        if not spec.is_remote:
+            return 0.0
+        return transfer_seconds(num_bytes, spec.uplink_bps, spec.rtt_s)
 
     def submit(self, text: str, image: Optional[np.ndarray] = None,
                max_new: int = 16) -> int:
@@ -65,26 +104,44 @@ class EdgeCloudServer:
                   "sentences": max(1, int(self.tok.is_sentence_end(arr).sum()))})
         req = Request(rid=rid, arrival_s=time.monotonic(), modalities=mods)
 
-        # live load feedback into the scheduler state
-        for tier, eng in (("edge", self.edge), ("cloud", self.cloud)):
-            load = 1.0 - sum(s is None for s in eng.slots) / len(eng.slots)
-            if tier == "edge":
-                self.scheduler.observe(edge_load=load,
-                                       bandwidth_bps=self.bandwidth)
-            else:
-                self.scheduler.observe(cloud_load=load)
+        # live per-tier load + queue feedback into the scheduler state (the
+        # cost-model argmin reads queue depths; engine backlog = waiting list)
+        loads = {}
+        for tier, eng in self.engines.items():
+            loads[tier] = 1.0 - sum(s is None for s in eng.slots) / len(eng.slots)
+        self.scheduler.observe(
+            loads=loads, bandwidth_bps=self.bandwidth,
+            queue_depths={t: len(e.waiting)
+                          for t, e in self.engines.items()},
+            bandwidths={t.name: t.uplink_bps
+                        for t in self.topology.remote_tiers})
 
         decision = self.scheduler.route(req)
-        tier = "cloud" if decision.any_cloud else "edge"
-        wan_bytes = sum(m.size_bytes for n, m in mods.items()
-                        if decision.routes.get(n) == "cloud")
-        wan_s = (self.rtt + 8.0 * wan_bytes / self.bandwidth) if tier == "cloud" else 0.0
+        tier = self.topology.fusion_tier(decision.routes)
+        spec = self.topology.tier(tier)
+        # every modality routed to a remote tier crosses that tier's uplink
+        # (even when the fusion runs locally); distinct links transfer in
+        # parallel, so the slowest one bounds the WAN delay. A remote fusion
+        # with no remote-routed payload still pays its RTT for the prompt.
+        remote_bytes: Dict[str, int] = {}
+        for n, m in mods.items():
+            routed = decision.routes.get(n, tier)
+            if self.topology.tier(routed).is_remote:
+                remote_bytes[routed] = (remote_bytes.get(routed, 0)
+                                        + m.size_bytes)
+        if spec.is_remote and tier not in remote_bytes:
+            remote_bytes[tier] = 0
+        wan_s = max((self._wan_seconds(self.topology.tier(t), b)
+                     for t, b in remote_bytes.items()), default=0.0)
 
         eng = self._engine(tier)
         extras = {}
         mcfg = eng.cfg
-        if image is not None and decision.routes.get("image") == tier == "cloud" \
-                or (image is not None and tier == "edge"):
+        # the serving engine sees raw patches only when the image is routed
+        # to it (a locally-fused request always encodes its own image);
+        # images encoded on another tier ride along as compact embeddings
+        if image is not None and (decision.routes.get("image") == tier
+                                  or not spec.is_remote):
             if mcfg.frontend == "vision_stub":
                 extras["patches"] = self._patchify(image, mcfg)
         tokens = self.tok.pad(ids, min(len(ids), eng.serving.max_seq // 2))
@@ -103,16 +160,16 @@ class EdgeCloudServer:
         return np.tile(flat, rep)[:need].reshape(p, fd)
 
     def run(self, max_steps: int = 10_000) -> List[ServedResult]:
-        """Drive both engines until all submitted requests finish."""
+        """Drive every engine until all submitted requests finish."""
         steps = 0
         while steps < max_steps:
-            a = self.edge.step()
-            b = self.cloud.step()
-            if a == 0 and b == 0 and not self.edge.waiting and not self.cloud.waiting:
+            active = sum(eng.step() for eng in self.engines.values())
+            waiting = any(eng.waiting for eng in self.engines.values())
+            if active == 0 and not waiting:
                 break
             steps += 1
         now = time.monotonic()
-        for eng, tier in ((self.edge, "edge"), (self.cloud, "cloud")):
+        for tier, eng in self.engines.items():
             for st in eng.finished:
                 if st.rid not in self._meta:
                     continue
@@ -124,3 +181,17 @@ class EdgeCloudServer:
                     tokens=st.generated, latency_s=lat, wan_s=meta["wan_s"]))
             eng.finished.clear()
         return self.results
+
+
+class EdgeCloudServer(ClusterServer):
+    """Two-tier live serving (the paper's testbed) over ClusterServer."""
+
+    def __init__(self, edge_engine: TierEngine, cloud_engine: TierEngine,
+                 scheduler: Optional[MoAOffScheduler] = None,
+                 bandwidth_bps: float = 300e6, rtt_s: float = 0.02):
+        topo = two_tier_topology(bandwidth_bps=bandwidth_bps, rtt_s=rtt_s)
+        super().__init__({"edge": edge_engine, "cloud": cloud_engine},
+                         topology=topo, scheduler=scheduler,
+                         bandwidth_bps=bandwidth_bps, rtt_s=rtt_s)
+        self.edge = edge_engine
+        self.cloud = cloud_engine

@@ -3,7 +3,10 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dev dependency (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.config import ComplexityConfig, PolicyConfig
 from repro.core import (CLOUD, EDGE, MoAOffScheduler, ModalityInput,
