@@ -16,12 +16,12 @@ from repro.serving.cost_model import prefill_flops
 
 
 def _time(fn, *args, reps=5, **kw):
-    fn(*args, **kw)  # compile
+    jax.block_until_ready(fn(*args, **kw))  # compile
     t0 = time.perf_counter()
     for _ in range(reps):
-        out = fn(*args, **kw)
-    jax.block_until_ready(out["c_img"] if isinstance(out, dict) and "c_img"
-                          in out else out)
+        # sync INSIDE the loop: otherwise async dispatch overlaps reps and
+        # the mean under-reports true per-call latency
+        jax.block_until_ready(fn(*args, **kw))
     return (time.perf_counter() - t0) / reps
 
 

@@ -362,6 +362,30 @@ class ServingConfig:
     retry_limit: int = 2
     heartbeat_interval_s: float = 0.5
     heartbeat_timeout_s: float = 2.0
+    # --- device-resident hot path ---
+    # decode steps fused into ONE jitted lax.scan per host call: sampling,
+    # EOS/budget/cap masking and KV writes stay on device, the host sees one
+    # (B, fused_steps) token block. 1 = the legacy per-token path (host-side
+    # numpy sampling, one dispatch + transfer per token) kept for parity
+    # testing.
+    fused_steps: int = 8
+    # decode attention backend: "auto" = Pallas decode kernel where it
+    # compiles natively (TPU), XLA elsewhere; "pallas"/"xla" force one.
+    decode_impl: str = "auto"
+    # batch same-length-bucket waiting prompts into one prefill call (pad to
+    # power-of-two buckets) instead of one retraced prefill per request.
+    # Ignored (off) on the legacy fused_steps=1 path.
+    bucket_prefill: bool = True
+    # unroll the layer loop inside fused decode so each layer's K/V scatter
+    # updates the stacked cache leaf IN PLACE (the scanned form re-assembles
+    # — i.e. copies — the whole KV cache every token). O(L) HLO; only
+    # applied on the fused path.
+    unroll_decode_layers: bool = True
+    # fused decode attends a power-of-two cache VIEW just covering the
+    # longest active context (+ the fused block), instead of all of
+    # ``max_seq`` every token; the view is sliced/pasted once per K-token
+    # block. Off on the legacy path (which always pays full capacity).
+    context_buckets: bool = True
 
 
 @dataclass(frozen=True)

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import auto_interpret
+
 NEG_INF = -1e30
 
 
@@ -68,16 +70,38 @@ def decode_attention_pallas(q: jax.Array, k_cache: jax.Array,
                             pos_cache: jax.Array, *,
                             window: Optional[int] = None,
                             block_t: int = 512,
-                            interpret: bool = True) -> jax.Array:
+                            interpret: Optional[bool] = None) -> jax.Array:
     """q: (B,1,H,hd); k/v_cache: (B,T,K,hd); pos_q: (B,); pos_cache: (B,T).
 
-    Returns (B,1,H,hd).
+    Returns (B,1,H,hd). Ragged cache lengths (t % block_t != 0) are
+    handled copy-free when t has a decent power-of-two divisor (e.g. the
+    serving engine's 1.5*2^n context buckets) by shrinking block_t to it;
+    only pathological lengths fall back to padding a tail block whose
+    slots carry pos=-1 (the kernel's empty-slot masking ignores them).
+    ``interpret=None`` resolves per-backend (compiled on TPU, interpreted
+    elsewhere).
     """
+    if interpret is None:
+        interpret = auto_interpret()
     b, _, h, hd = q.shape
     t, kh = k_cache.shape[1], k_cache.shape[2]
     g = h // kh
     block_t = min(block_t, t)
-    assert t % block_t == 0, (t, block_t)
+    if t % block_t:
+        # largest power-of-two divisor of t, capped by the requested block
+        p2 = t & (-t)
+        bt = min(p2, 1 << (block_t.bit_length() - 1))
+        if bt >= 128:
+            block_t = bt  # divides t exactly: no copy
+        else:
+            tail = (-t) % block_t
+            zpad = [(0, 0)] * 4
+            zpad[1] = (0, tail)
+            k_cache = jnp.pad(k_cache, zpad)
+            v_cache = jnp.pad(v_cache, zpad)
+            pos_cache = jnp.pad(pos_cache, ((0, 0), (0, tail)),
+                                constant_values=-1)
+            t += tail
     n_t = t // block_t
     scale = hd ** -0.5
 

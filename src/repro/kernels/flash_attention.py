@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import auto_interpret
+
 NEG_INF = -1e30
 
 
@@ -80,8 +82,14 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                            causal: bool = True, window: Optional[int] = None,
                            block_q: int = 128, block_k: int = 128,
-                           interpret: bool = True) -> jax.Array:
-    """q: (B,S,H,hd); k/v: (B,S,K,hd). Self-attention (pos == index)."""
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """q: (B,S,H,hd); k/v: (B,S,K,hd). Self-attention (pos == index).
+
+    ``interpret=None`` resolves per-backend (compiled on TPU, interpreted
+    elsewhere) so direct callers get the fast mode by default off-CPU.
+    """
+    if interpret is None:
+        interpret = auto_interpret()
     b, s, h, hd = q.shape
     kh = k.shape[2]
     g = h // kh

@@ -16,10 +16,7 @@ from repro.config import ComplexityConfig
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.image_complexity import image_stats_pallas
-
-
-def _auto_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+from repro.kernels.runtime import auto_interpret as _auto_interpret
 
 
 def _pad_head(x: jax.Array, mult: int = 128):

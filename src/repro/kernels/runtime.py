@@ -1,0 +1,14 @@
+"""Backend-dependent kernel execution defaults.
+
+Lives in its own module (instead of ``ops``) so the kernel files can resolve
+``interpret`` without importing ``ops`` and creating a cycle: Pallas executes
+kernel bodies in Python on CPU (this container) and compiles natively on TPU.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def auto_interpret() -> bool:
+    """True when Pallas must run in interpret mode (any non-TPU backend)."""
+    return jax.default_backend() != "tpu"

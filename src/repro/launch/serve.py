@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import time
 
 import jax
 import numpy as np
@@ -43,12 +44,20 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fused-steps", type=int, default=8,
+                    help="decode steps fused per host call (1 = legacy "
+                         "per-token path)")
+    ap.add_argument("--decode-impl", default="auto",
+                    choices=["auto", "xla", "pallas"],
+                    help="decode attention backend (auto = Pallas on TPU)")
     ap.add_argument("--topology", default="edge-cloud",
                     choices=sorted(TOPOLOGIES),
                     help="cluster topology to serve (one engine per tier)")
     args = ap.parse_args()
 
-    sv = ServingConfig(max_batch=args.max_batch, max_seq=128)
+    sv = ServingConfig(max_batch=args.max_batch, max_seq=128,
+                       fused_steps=args.fused_steps,
+                       decode_impl=args.decode_impl)
     topo = get_topology(args.topology)
     if args.bandwidth is not None:
         topo = dataclasses.replace(topo, tiers=tuple(
@@ -65,13 +74,21 @@ def main() -> None:
                 + "and then explain why it matters. " * rng.integers(1, 12))
         server.submit(text, image=img, max_new=args.max_new)
 
+    t0 = time.perf_counter()
     results = server.run()
+    wall = time.perf_counter() - t0
     per_tier = {}
     for r in results:
         per_tier[r.tier] = per_tier.get(r.tier, 0) + 1
     lat = np.mean([r.latency_s for r in results])
+    ttft = np.mean([r.ttft_s for r in results])
     split = " ".join(f"{t}={n}" for t, n in sorted(per_tier.items()))
-    print(f"served {len(results)} requests | {split} | mean latency {lat:.3f}s")
+    print(f"served {len(results)} requests | {split} | mean latency "
+          f"{lat:.3f}s | mean ttft {ttft:.3f}s")
+    dec = sum(e.decode_tokens for e in server.engines.values())
+    pre = sum(e.prefill_tokens for e in server.engines.values())
+    print(f"engine throughput: {dec / max(wall, 1e-9):.1f} decode tok/s, "
+          f"{pre} prompt tokens prefilled (fused_steps={args.fused_steps})")
     for r in sorted(results, key=lambda r: r.rid)[:10]:
         print(f"  rid={r.rid} tier={r.tier:9s} routes={r.routes} "
               f"lat={r.latency_s:.3f}s")

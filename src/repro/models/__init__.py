@@ -9,22 +9,24 @@ from repro.config import ModelConfig, ShardingConfig
 def build_model(cfg: ModelConfig, mesh=None,
                 sharding: Optional[ShardingConfig] = None,
                 attn_impl: str = "auto", moe_impl: str = "auto",
-                param_dtype: str = ""):
+                param_dtype: str = "", decode_impl: str = "auto"):
     """Construct the family-appropriate model object.
 
     Returned object exposes the uniform API used by the trainer, the serving
     engine and the dry-run: ``specs() / init(rng) / param_shapes() /
     input_specs(shape) / loss(params,batch) / forward(...) /
     prefill(params,batch,capacity) / decode_step(params,cache,batch) /
-    init_cache(b,cap) / cache_specs(b,cap)``.
+    init_cache(b,cap) / cache_specs(b,cap) / cache_axes(b,cap)``.
     """
     sharding = sharding or ShardingConfig()
     if cfg.family == "encdec":
         from repro.models.encdec import EncDecLM
 
         return EncDecLM(cfg, mesh=mesh, sharding=sharding,
-                        attn_impl=attn_impl, param_dtype=param_dtype)
+                        attn_impl=attn_impl, param_dtype=param_dtype,
+                        decode_impl=decode_impl)
     from repro.models.transformer import DecoderLM
 
     return DecoderLM(cfg, mesh=mesh, sharding=sharding, attn_impl=attn_impl,
-                     moe_impl=moe_impl, param_dtype=param_dtype)
+                     moe_impl=moe_impl, param_dtype=param_dtype,
+                     decode_impl=decode_impl)

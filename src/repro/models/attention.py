@@ -205,19 +205,48 @@ def decode_attention_xla(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     q: (B, 1, H, hd); k/v_cache: (B, T, K, hd); pos_q: (B,) current absolute
     position; pos_cache: (B, T) absolute position per slot (-1 = empty).
     """
+    b, _, h, d = q.shape
     num_kv = k_cache.shape[2]
-    qg = _split_gqa(q, num_kv)  # (B,1,K,G,hd)
-    scale = q.shape[-1] ** -0.5
+    qg = q[:, 0].reshape(b, num_kv, h // num_kv, d)  # (B,K,G,hd), q dim dropped
+    scale = d ** -0.5
     # keep the (huge) cache in bf16 and accumulate in f32 — an explicit
-    # astype would materialize (and reshard) an f32 copy of the whole cache
-    s = jnp.einsum("bqkgd,btkd->bkgqt", qg.astype(k_cache.dtype), k_cache,
+    # astype would materialize (and reshard) an f32 copy of the whole cache.
+    # Contracting with the cache's native (B,T,K,hd) layout (no q axis)
+    # avoids the transposed-copy the previous bkgqt form paid per call.
+    s = jnp.einsum("bkgd,btkd->bkgt", qg.astype(k_cache.dtype), k_cache,
                    preferred_element_type=jnp.float32) * scale
-    bias = _mask_bias(pos_q[:, None], pos_cache, True, window)  # (B,1,T)
-    s = s + bias[:, None, None, :, :]
-    p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v_cache.dtype), v_cache,
+    dd = pos_q[:, None] - pos_cache  # (B,T)
+    ok = (pos_cache >= 0) & (dd >= 0)
+    if window is not None:
+        ok = ok & (dd < window)
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgt,btkd->bkgd",
+                   (p / jnp.maximum(l, 1e-30)).astype(v_cache.dtype), v_cache,
                    preferred_element_type=jnp.float32)
-    return _merge_gqa(o).astype(q.dtype)
+    return o.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos_q, pos_cache, *,
+                     window: Optional[int] = None, impl: str = "auto"):
+    """Decode dispatcher. impl: auto | xla | pallas.
+
+    "auto" picks the Pallas flash-decode kernel where it compiles natively
+    (TPU) and the fused XLA path elsewhere (interpret-mode Pallas would run
+    the kernel body in Python per block — far slower than XLA on CPU).
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.decode_attention(q, k_cache, v_cache, pos_q, pos_cache,
+                                     window=window)
+    if impl == "xla":
+        return decode_attention_xla(q, k_cache, v_cache, pos_q, pos_cache,
+                                    window=window)
+    raise ValueError(impl)
 
 
 def attention(q, k, v, pos_q, pos_kv, *, causal=True, window=None,

@@ -44,12 +44,14 @@ def _attn_proj_specs(cfg, ps, pa):
 class EncDecLM:
     def __init__(self, cfg: ModelConfig, mesh=None,
                  sharding: ShardingConfig = ShardingConfig(),
-                 attn_impl: str = "auto", param_dtype: str = ""):
+                 attn_impl: str = "auto", param_dtype: str = "",
+                 decode_impl: str = "auto"):
         assert cfg.family == "encdec"
         self.cfg = cfg
         self.mesh = mesh
         self.sharding = sharding
         self.attn_impl = attn_impl
+        self.decode_impl = decode_impl
         self.v_pad = pad_vocab(cfg.vocab_size)
         self.dtype = jnp.dtype(param_dtype or cfg.dtype)
 
@@ -140,11 +142,13 @@ class EncDecLM:
             bi = jnp.arange(b)
             kc = lcache["k"].at[bi, idx].set(k[:, 0].astype(lcache["k"].dtype))
             vc = lcache["v"].at[bi, idx].set(v[:, 0].astype(lcache["v"].dtype))
-            out = attn_mod.decode_attention_xla(q, kc, vc, pos_q[:, 0], pos_kv)
+            out = attn_mod.decode_attention(q, kc, vc, pos_q[:, 0], pos_kv,
+                                            impl=self.decode_impl)
             new_cache = {"k": kc, "v": vc}
         elif mode == "cross_cached":
-            out = attn_mod.decode_attention_xla(
-                q, k, v, jnp.full((b,), 10**9, jnp.int32), pos_kv)
+            out = attn_mod.decode_attention(
+                q, k, v, jnp.full((b,), 10**9, jnp.int32), pos_kv,
+                impl=self.decode_impl)
         else:
             out = attn_mod.attention(q, k, v, pos_q, pos_kv, causal=causal,
                                      impl=self.attn_impl)
@@ -264,7 +268,12 @@ class EncDecLM:
         x = embed(batch["tokens"], params["embed"]).astype(self.dtype)
         x, ys = self._decode_stack(params, x, enc, "prefill", None)
         b, s, _ = x.shape
-        logits = unembed(x[:, -1:].astype(jnp.float32), params["embed"],
+        if "lengths" in batch:  # bucketed right-padded prompts (see DecoderLM)
+            last = batch["lengths"].astype(jnp.int32) - 1
+            xl = x[jnp.arange(b), last][:, None]
+        else:
+            xl = x[:, -1:]
+        logits = unembed(xl.astype(jnp.float32), params["embed"],
                          cfg.vocab_size)[:, 0]
 
         def pad_full(kv):
@@ -320,7 +329,12 @@ class EncDecLM:
             cache["cross_pos"].shape)
         return cache
 
-    def decode_step(self, params, cache, batch):
+    def decode_step(self, params, cache, batch, ctx=None):
+        # ctx (context-bucket hint) is accepted for API parity with
+        # DecoderLM but unused: the cross-attention cache shares the "seq"
+        # layout at a different width, so slicing is not worth the special-
+        # casing here (the serving engine disables buckets for encdec).
+        del ctx
         cfg = self.cfg
         new_cache = dict(cache)
         idx = cache["index"]  # (B,)

@@ -74,13 +74,21 @@ class DecoderLM:
     def __init__(self, cfg: ModelConfig, mesh=None,
                  sharding: ShardingConfig = ShardingConfig(),
                  attn_impl: str = "auto", moe_impl: str = "auto",
-                 param_dtype: str = ""):
+                 param_dtype: str = "", decode_impl: str = "auto"):
         assert cfg.family in ("dense", "moe", "vlm", "ssm", "hybrid"), cfg.family
         self.cfg = cfg
         self.mesh = mesh
         self.sharding = sharding
         self.attn_impl = attn_impl
         self.moe_impl = moe_impl
+        self.decode_impl = decode_impl
+        # Unroll the layer loop in decode mode and scatter each layer's new
+        # K/V directly into the layer-stacked cache leaf. The default
+        # lax.scan over layers consumes the cache as a scanned input and
+        # re-assembles the stacked output (a full KV-cache copy per token);
+        # the unrolled form updates in place (under buffer donation), at the
+        # cost of O(L) HLO — serving engines opt in, training/dry-run don't.
+        self.decode_unroll = False
         self.v_pad = pad_vocab(cfg.vocab_size)
         self.dtype = jnp.dtype(param_dtype or cfg.dtype)
         # Megatron-style sequence parallelism: the residual stream (and thus
@@ -265,7 +273,8 @@ class DecoderLM:
         return logical_constraint(x, axes, self.mesh)
 
     def _attn_block(self, lp, x, cos, sin, pos_q, pos_kv, mode, window,
-                    lcache, idx, moe: bool):
+                    lcache, idx, moe: bool, layer: Optional[int] = None,
+                    ctx: Optional[int] = None):
         cfg = self.cfg
         b, s, d = x.shape
         h_, k_, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
@@ -284,10 +293,31 @@ class DecoderLM:
         if mode == "decode":
             # per-slot write position (continuous batching: slots independent)
             bi = jnp.arange(b)
-            kc = lcache["k"].at[bi, idx].set(k[:, 0].astype(lcache["k"].dtype))
-            vc = lcache["v"].at[bi, idx].set(v[:, 0].astype(lcache["v"].dtype))
-            out = attn_mod.decode_attention_xla(
-                q, kc, vc, pos_q[:, 0], pos_kv, window=window)
+            if layer is None:
+                kc = lcache["k"].at[bi, idx].set(
+                    k[:, 0].astype(lcache["k"].dtype))
+                vc = lcache["v"].at[bi, idx].set(
+                    v[:, 0].astype(lcache["v"].dtype))
+                kr, vr = kc, vc
+            else:
+                # unrolled decode: lcache leaves stay layer-stacked
+                # (L,B,T,K,hd); scatter THIS layer's row in place
+                kc = lcache["k"].at[layer, bi, idx].set(
+                    k[:, 0].astype(lcache["k"].dtype))
+                vc = lcache["v"].at[layer, bi, idx].set(
+                    v[:, 0].astype(lcache["v"].dtype))
+                kr, vr = kc[layer], vc[layer]
+            pr = pos_kv
+            if ctx is not None and ctx < kr.shape[1]:
+                # context hint: attend only the leading ctx cache entries
+                # (linear placement; caller guarantees every live position,
+                # including this token's write, sits below ctx). Static
+                # slices — XLA fuses them into the attention reads instead
+                # of copying the cache.
+                kr, vr, pr = kr[:, :ctx], vr[:, :ctx], pos_kv[:, :ctx]
+            out = attn_mod.decode_attention(q, kr, vr, pos_q[:, 0], pr,
+                                            window=window,
+                                            impl=self.decode_impl)
             new_cache = {"k": kc, "v": vc}
         else:
             out = attn_mod.attention(
@@ -330,7 +360,7 @@ class DecoderLM:
             return None, None
         return rope_freqs(positions, cfg.resolved_head_dim, cfg.rope_theta)
 
-    def _stack(self, params, x, positions, mode, cache):
+    def _stack(self, params, x, positions, mode, cache, ctx=None):
         cfg = self.cfg
         cos, sin = self._rope(positions)
         remat_on = mode == "train"
@@ -343,12 +373,17 @@ class DecoderLM:
             new_cache: Dict[str, Any] = {}
 
             def run_group(x, aux_total, gparams, gcache, moe_flag):
+                if mode == "decode" and self.decode_unroll and gcache is not None:
+                    return self._run_group_unrolled(
+                        x, aux_total, gparams, gcache, moe_flag, cos, sin,
+                        positions, pos_kv, idx, ctx)
+
                 def body(carry, xs):
                     xx, aux = carry
                     lp, lc = xs
                     xx, a, nc = self._attn_block(
                         lp, xx, cos, sin, positions, pos_kv, mode, None,
-                        lc, idx, moe_flag)
+                        lc, idx, moe_flag, ctx=ctx)
                     return (xx, aux + a), nc
                 bodyc = _remat(body, policy)
                 if gcache is None:
@@ -398,6 +433,21 @@ class DecoderLM:
             return self._hybrid_stack(params, x, positions, cos, sin, mode, cache)
 
         raise ValueError(cfg.family)
+
+    def _run_group_unrolled(self, x, aux_total, gparams, gcache, moe_flag,
+                            cos, sin, positions, pos_kv, idx, ctx=None):
+        """Decode-mode layer loop unrolled; the stacked KV leaves thread
+        through and receive one in-place (l, slot, idx) scatter per layer
+        (numerically identical to the scanned form, no per-token copy)."""
+        n_layers = jax.tree.leaves(gparams)[0].shape[0]
+        cache = gcache
+        for l in range(n_layers):
+            lp = jax.tree.map(lambda p: p[l], gparams)
+            x, a, cache = self._attn_block(
+                lp, x, cos, sin, positions, pos_kv, "decode", None,
+                cache, idx, moe_flag, layer=l, ctx=ctx)
+            aux_total = aux_total + a
+        return x, aux_total, cache
 
     def _hybrid_stack(self, params, x, positions, cos, sin, mode, cache):
         cfg = self.cfg
@@ -463,7 +513,7 @@ class DecoderLM:
             prefix = px.shape[1]
         return self._constrain(x, ("batch", self._seq, "embed")), prefix
 
-    def forward(self, params, batch, mode="train", cache=None):
+    def forward(self, params, batch, mode="train", cache=None, ctx=None):
         """Backbone -> final hidden states (B, S_total, D)."""
         x, prefix = self._embed_inputs(params, batch, mode)
         b, s, _ = x.shape
@@ -472,7 +522,7 @@ class DecoderLM:
         else:
             positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
                                          (b, s))
-        x, aux, new_cache = self._stack(params, x, positions, mode, cache)
+        x, aux, new_cache = self._stack(params, x, positions, mode, cache, ctx)
         x = rms_norm(x, params["ln_f"], self.cfg.norm_eps)
         return x, aux, new_cache, prefix
 
@@ -526,11 +576,24 @@ class DecoderLM:
         return total, {"ce": ce, "aux": aux}
 
     def prefill(self, params, batch, capacity: int):
-        """Run the prompt, return (last-token logits (B, V), cache)."""
+        """Run the prompt, return (last-token logits (B, V), cache).
+
+        With right-padded (length-bucketed) batches, ``batch["lengths"]``
+        (B,) gives each row's true token count; logits are then gathered at
+        each row's true last token instead of the shared final column. Pad
+        rows sit AFTER all real tokens, so causal attention leaves real-token
+        activations untouched; their stale cache entries are masked by the
+        caller via the absolute-position ``pos`` leaf.
+        """
         cfg = self.cfg
         hidden, _, layer_caches, prefix = self.forward(params, batch, "prefill")
         b, s, _ = hidden.shape
-        logits = unembed(hidden[:, -1:].astype(jnp.float32),
+        if "lengths" in batch:
+            last = prefix + batch["lengths"].astype(jnp.int32) - 1  # (B,)
+            hl = hidden[jnp.arange(b), last][:, None]
+        else:
+            hl = hidden[:, -1:]
+        logits = unembed(hl.astype(jnp.float32),
                          self._unembed_table(params).astype(jnp.float32),
                          cfg.vocab_size)[:, 0]
         cache = self._assemble_prefill_cache(layer_caches, b, s, capacity)
@@ -589,8 +652,15 @@ class DecoderLM:
             cache["index"] = jnp.full((b,), s % w, jnp.int32)
         return cache
 
-    def decode_step(self, params, cache, batch):
-        """One token. batch: tokens (B,1), positions (B,). Returns (logits, cache)."""
+    def decode_step(self, params, cache, batch, ctx=None):
+        """One token. batch: tokens (B,1), positions (B,). Returns (logits, cache).
+
+        ``ctx`` (static) hints that every live cache entry — including this
+        token's write — sits at an index below ``ctx``: attention then reads
+        only the leading ``ctx`` entries of the full-width cache (the
+        serving engine's context buckets). Bookkeeping (pos/index/scatter)
+        always stays full-width, so the cache layout is unchanged.
+        """
         cfg = self.cfg
         new_cache = dict(cache)
         if "pos" in cache:
@@ -602,7 +672,8 @@ class DecoderLM:
             new_cache["index"] = (idx + 1) % cap
             cache = dict(cache)
             cache["pos"] = new_cache["pos"]  # new token must see itself
-        hidden, _, layer_caches, _ = self.forward(params, batch, "decode", cache)
+        hidden, _, layer_caches, _ = self.forward(params, batch, "decode",
+                                                  cache, ctx)
         for key, val in layer_caches.items():
             new_cache[key] = val
         logits = unembed(hidden.astype(jnp.float32),

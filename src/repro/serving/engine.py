@@ -1,10 +1,34 @@
 """Live continuous-batching serving engine (runs real models).
 
 One engine per tier. Fixed-slot design: ``max_batch`` decode slots share a
-static-shaped KV cache (per-slot write indices — see models/*); prompts are
-prefilled one request at a time into a free slot, decode advances ALL active
-slots each step. Finished slots are freed and immediately refilled
-(continuous batching). Greedy or temperature sampling.
+static-shaped KV cache (per-slot write indices — see models/*); finished
+slots are freed and immediately refilled (continuous batching).
+
+The hot path is device-resident:
+
+* **Fused decode** — one jitted ``lax.scan`` runs ``fused_steps`` decode
+  steps per host call: on-device greedy/temperature sampling from a per-slot
+  ``jax.random`` key array, per-slot alive flags masking EOS / token-budget /
+  capacity, and in-place KV writes (the cache and key buffers are DONATED,
+  so XLA updates them in place instead of copying the whole cache every
+  step). The host receives a single ``(B, fused_steps)`` token block — one
+  transfer and one Python bookkeeping pass per K tokens instead of per
+  token.
+* **Bucketed prefill** — waiting prompts are right-padded to power-of-two
+  length buckets and all same-bucket requests prefill in ONE batched call;
+  a jitted ``at[...].set`` scatter (donated pool) inserts every admitted
+  row into its slot, replacing the per-request retrace and the full-tree
+  cache copy. Families whose cache embeds recurrent/ring state (ssm,
+  hybrid) or non-neutral pad tokens (moe) batch same-length groups instead
+  of padded buckets.
+
+``ServingConfig(fused_steps=1)`` keeps the legacy per-token path (host-side
+numpy sampling, one dispatch + ``np.asarray(logits)`` sync per token, one
+retraced prefill per request) for parity testing and as the perf baseline.
+Token-for-token parity is guaranteed for every family with the default MoE
+impl; a capacity-dropping MoE impl is batch-content-coupled by construction
+(which tokens drop depends on the other rows in flight), so under it any
+two scheduling policies — including legacy vs fused — may diverge.
 
 Fault tolerance: every mutation of engine state is journaled; ``snapshot()``/
 ``restore()`` allow a failed tier to be rebuilt on a standby (exercised in
@@ -13,6 +37,7 @@ heartbeat timeout.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import time
 from dataclasses import dataclass, field
@@ -23,6 +48,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig, ServingConfig
+
+# Families whose decode cache is a full-capacity absolute-position buffer:
+# right-padded bucket prefill is exact for them (pad entries are masked via
+# the ``pos`` leaf; causal attention keeps real-token activations identical).
+# ssm/hybrid carry recurrent/ring state that pads would shift — they batch
+# exact same-length groups instead. moe prefills per request: a capacity-
+# dropping MoE impl routes over the flattened batch, so ANY cross-request
+# batching (padded or not) would couple which tokens drop across requests.
+_PADDED_FAMILIES = ("dense", "vlm", "encdec")
+
+
+def _next_bucket(n: int, lo: int = 16) -> int:
+    """Smallest power-of-two >= n (floored at ``lo`` to bound trace count)."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
 
 
 @dataclass
@@ -40,6 +82,9 @@ class SeqState:
 class TierEngine:
     def __init__(self, model, params, serving: ServingConfig = ServingConfig(),
                  eos_id: int = 2, sample_temp: float = 0.0, seed: int = 0):
+        # shallow copy: the engine sets per-engine decode flags below and
+        # must not leak them into a model object shared with other engines
+        model = copy.copy(model)
         self.model = model
         self.cfg: ModelConfig = model.cfg
         self.params = params
@@ -47,6 +92,12 @@ class TierEngine:
         self.eos_id = eos_id
         self.temp = sample_temp
         self.rng = np.random.default_rng(seed)
+        self.fused_steps = max(1, serving.fused_steps)
+        if serving.decode_impl != "auto" and hasattr(model, "decode_impl"):
+            model.decode_impl = serving.decode_impl
+        if (self.fused_steps > 1 and serving.unroll_decode_layers
+                and hasattr(model, "decode_unroll")):
+            model.decode_unroll = True
 
         b, t = serving.max_batch, serving.max_seq
         self.cache = model.init_cache(b, t)
@@ -58,9 +109,126 @@ class TierEngine:
         self.healthy = True
         self.last_heartbeat = time.monotonic()
         self.steps = 0
+        # perf counters (read by benchmarks/serving_bench.py and launch/serve)
+        self.decode_tokens = 0
+        self.prefill_tokens = 0
 
         self._decode = jax.jit(model.decode_step)
         self._prefill1 = jax.jit(lambda p, batch: model.prefill(p, batch, t))
+        # per-slot sampling keys live on device across the engine's lifetime
+        self._keys = jax.random.split(jax.random.PRNGKey(seed), b)
+        # batch axis per cache leaf (hybrid rglru leaves carry batch at
+        # axis 2 — the generic scatter below follows the logical axes)
+        axes = model.cache_axes(b, t)
+        self._cache_batch_axis = jax.tree.map(
+            lambda a: a.index("batch"), axes,
+            is_leaf=lambda x: isinstance(x, tuple))
+        # context buckets need linear cache placement (pos == write index),
+        # which holds for the full-capacity-"pos" families only — ring
+        # windows (hybrid), recurrent state (ssm) and the encdec cross
+        # cache keep full-width attention
+        self._ctx_buckets = (serving.context_buckets
+                             and self.cfg.family in ("dense", "vlm", "moe"))
+        self._fused = jax.jit(self._make_fused(), donate_argnums=(1, 2),
+                              static_argnums=(6,))
+        self._prefill_insert = jax.jit(self._make_prefill_insert(),
+                                       donate_argnums=(1,))
+
+    # ------------------------------------------------------------------
+    # jitted hot-path builders
+    # ------------------------------------------------------------------
+
+    def _make_fused(self):
+        """K decode steps in one lax.scan: decode -> on-device sample ->
+        per-slot EOS/budget/cap masking. Cache + keys are donated by the
+        caller so the KV buffers update in place.
+
+        ``teff`` (static) is the context bucket: attention reads only the
+        leading ``teff`` cache entries (a static slice XLA fuses into the
+        attention loads — writes and bookkeeping stay full-width, so the
+        cache layout never changes). Valid because placement is linear for
+        the bucket-eligible families, every admit rewrites a slot's full
+        row (entries past a prompt carry pos=-1), and the engine picks
+        ``teff`` above the longest position reached inside the block.
+        """
+        model, K = self.model, self.fused_steps
+        temp, eos = float(self.temp), int(self.eos_id)
+        max_seq = int(self.serving.max_seq)
+
+        def fused(params, cache, keys, tokens, positions, budgets, teff):
+            ctx = teff if teff < max_seq else None
+
+            def body(carry, _):
+                cache, keys, tok, pos, alive, produced = carry
+                logits, cache2 = model.decode_step(
+                    params, cache, {"tokens": tok[:, None], "positions": pos},
+                    ctx=ctx)
+                if temp > 0:
+                    split = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
+                    keys2, sub = split[:, 0], split[:, 1]
+                    sampled = jax.vmap(jax.random.categorical)(
+                        sub, logits / temp)
+                else:
+                    keys2 = keys
+                    sampled = jnp.argmax(logits, axis=-1)
+                sampled = sampled.astype(jnp.int32)
+                produced = produced + alive.astype(jnp.int32)
+                pos2 = jnp.where(alive, pos + 1, pos)
+                # same stop rules the host applies per appended token
+                alive2 = (alive & (sampled != eos) & (produced < budgets)
+                          & (pos2 + 1 < max_seq))
+                tok2 = jnp.where(alive, sampled, tok)
+                if "pos" in cache2:
+                    # freeze write bookkeeping of dead slots: their KV writes
+                    # land on a slot whose pos stays -1 (masked), instead of
+                    # marching the ring index over live-looking entries
+                    cache2 = dict(cache2)
+                    cache2["pos"] = jnp.where(alive[:, None], cache2["pos"],
+                                              cache["pos"])
+                    cache2["index"] = jnp.where(alive, cache2["index"],
+                                                cache["index"])
+                return (cache2, keys2, tok2, pos2, alive2, produced), tok2
+
+            alive0 = budgets > 0
+            produced0 = jnp.zeros_like(budgets)
+            (cache, keys, *_), toks = jax.lax.scan(
+                body, (cache, keys, tokens, positions, alive0, produced0),
+                None, length=K)
+            return jnp.transpose(toks), cache, keys  # (B, K)
+
+        return fused
+
+    def _make_prefill_insert(self):
+        """Batched prefill + donated multi-row scatter into the slot pool.
+
+        ``slots`` (R,) are the destination slot ids (duplicates allowed only
+        for padded rows carrying identical values); ``total`` (R,) is each
+        row's true sequence length INCLUDING any vision prefix.
+        """
+        model = self.model
+        capacity = self.serving.max_seq
+        pad_ok = self.cfg.family in _PADDED_FAMILIES
+
+        def fn(params, pool, batch, slots, total):
+            logits, cache1 = model.prefill(params, batch, capacity)
+            if pad_ok and "pos" in cache1:
+                cache1 = dict(cache1)
+                cap = cache1["pos"].shape[1]
+                # pad entries carry absolute positions >= the row's true
+                # length -> mark empty; next write lands at the true end
+                cache1["pos"] = jnp.where(cache1["pos"] < total[:, None],
+                                          cache1["pos"], -1)
+                cache1["index"] = (jnp.minimum(total, cap) % cap).astype(
+                    jnp.int32)
+
+            def ins(pool_leaf, one, bax):
+                idx = (slice(None),) * bax + (slots,)
+                return pool_leaf.at[idx].set(one.astype(pool_leaf.dtype))
+
+            pool = jax.tree.map(ins, pool, cache1, self._cache_batch_axis)
+            return logits, pool
+
+        return fn
 
     # ------------------------------------------------------------------
 
@@ -80,16 +248,55 @@ class TierEngine:
         return None
 
     def _insert_cache(self, cache1, slot: int) -> None:
-        """Copy a batch-1 prefill cache into slot ``slot`` of the pool."""
-        def ins(pool, one):
-            if pool.ndim == one.ndim and pool.shape[0] == len(self.slots):
-                # batch-leading leaves: pos (B,T), index (B,)
-                return pool.at[slot].set(one[0])
-            # layer-stacked leaves: (L, B, ...) — batch is axis 1
-            return pool.at[:, slot].set(one[:, 0])
-        self.cache = jax.tree.map(ins, self.cache, cache1)
+        """Legacy path: copy a batch-1 prefill cache into slot ``slot``."""
+        def ins(pool, one, bax):
+            idx = (slice(None),) * bax + (slot,)
+            sel = (slice(None),) * bax + (0,)
+            return pool.at[idx].set(one[sel].astype(pool.dtype))
+        self.cache = jax.tree.map(ins, self.cache, cache1,
+                                  self._cache_batch_axis)
+
+    def _start_seq(self, job: Dict[str, Any], slot: int, prompt_len: int,
+                   first_logits: np.ndarray) -> None:
+        """Shared admit bookkeeping: first token, done-check, journal."""
+        st = SeqState(rid=job["rid"], prompt_len=prompt_len,
+                      max_new=job["max_new"], t_submit=job["t"])
+        first = self._sample(first_logits)
+        st.generated.append(int(first))
+        st.t_first_token = time.monotonic()
+        self.slots[slot] = st
+        self.positions[slot] = prompt_len
+        self.prefill_tokens += prompt_len
+        self.decode_tokens += 1
+        self.journal.append(("admit", {"rid": st.rid, "slot": slot}))
+        # a request may be complete straight out of prefill (EOS first
+        # token, max_new == 1, or a prompt already at capacity)
+        if (first == self.eos_id or len(st.generated) >= st.max_new
+                or prompt_len + 1 >= self.serving.max_seq):
+            self._finish_slot(slot, time.monotonic())
+
+    def _finish_slot(self, slot: int, now: float) -> None:
+        st = self.slots[slot]
+        st.done = True
+        st.t_done = now
+        self.finished.append(st)
+        self.journal.append(("finish", {"rid": st.rid}))
+        self.slots[slot] = None
+
+    def _prompt_prefix(self, extras: Dict[str, Any]) -> int:
+        if self.cfg.frontend == "vision_stub" and "patches" in extras:
+            return self.cfg.num_patches
+        return 0
+
+    # -- admission ----------------------------------------------------------
 
     def _admit(self) -> None:
+        if self.fused_steps <= 1 or not self.serving.bucket_prefill:
+            self._admit_legacy()
+        else:
+            self._admit_bucketed()
+
+    def _admit_legacy(self) -> None:
         while self.waiting:
             slot = self._free_slot()
             if slot is None:
@@ -101,17 +308,68 @@ class TierEngine:
                 batch[k] = jnp.asarray(v)[None]
             logits, cache1 = self._prefill1(self.params, batch)
             self._insert_cache(cache1, slot)
-            prefix = 0
-            if self.cfg.frontend == "vision_stub" and "patches" in batch:
-                prefix = self.cfg.num_patches
-            st = SeqState(rid=job["rid"], prompt_len=toks.shape[1] + prefix,
-                          max_new=job["max_new"], t_submit=job["t"])
-            first = self._sample(np.asarray(logits)[0])
-            st.generated.append(int(first))
-            st.t_first_token = time.monotonic()
-            self.slots[slot] = st
-            self.positions[slot] = st.prompt_len
-            self.journal.append(("admit", {"rid": st.rid, "slot": slot}))
+            prefix = self._prompt_prefix(batch)
+            self._start_seq(job, slot, toks.shape[1] + prefix,
+                            np.asarray(logits)[0])
+
+    def _admit_bucketed(self) -> None:
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free or not self.waiting:
+            return
+        jobs = self.waiting[:len(free)]
+        del self.waiting[:len(jobs)]
+        pad_ok = self.cfg.family in _PADDED_FAMILIES
+        groups: Dict[tuple, List[dict]] = {}
+        for j, job in enumerate(jobs):
+            n = len(job["tokens"])
+            prefix = self._prompt_prefix(job["extras"])
+            if pad_ok:
+                bucket = min(_next_bucket(n),
+                             max(n, self.serving.max_seq - prefix))
+            else:
+                bucket = n  # exact-length groups (ssm / hybrid)
+            sig = (bucket, tuple(sorted(
+                (k, np.asarray(v).shape, str(np.asarray(v).dtype))
+                for k, v in job["extras"].items())))
+            if self.cfg.family == "moe":
+                sig += (j,)  # one group per request (see _PADDED_FAMILIES)
+            groups.setdefault(sig, []).append(job)
+        for sig, grp in groups.items():
+            slots = [free.pop(0) for _ in grp]
+            self._admit_group(grp, slots, sig[0])
+
+    def _admit_group(self, jobs: List[dict], slots: List[int],
+                     bucket: int) -> None:
+        r = len(jobs)
+        # pad the row count to a power of two as well (bounds retraces to
+        # O(log buckets * log max_batch)); pad rows replicate row 0 and
+        # scatter to the same slot, so the duplicate writes are identical
+        rp = _next_bucket(r, lo=1)
+        toks = np.zeros((rp, bucket), np.int32)
+        lengths = np.zeros((rp,), np.int32)
+        for i in range(rp):
+            job = jobs[i] if i < r else jobs[0]
+            n = len(job["tokens"])
+            toks[i, :n] = job["tokens"]
+            lengths[i] = n
+        batch: Dict[str, Any] = {"tokens": jnp.asarray(toks)}
+        for k in jobs[0]["extras"]:
+            batch[k] = jnp.asarray(np.stack(
+                [np.asarray((jobs[i] if i < r else jobs[0])["extras"][k])
+                 for i in range(rp)]))
+        if int(lengths.min()) < bucket:  # any row right-padded
+            batch["lengths"] = jnp.asarray(lengths)
+        prefix = self._prompt_prefix(jobs[0]["extras"])
+        total = lengths + prefix
+        slots_arr = np.asarray(slots + [slots[0]] * (rp - r), np.int32)
+        logits, self.cache = self._prefill_insert(
+            self.params, self.cache, batch, jnp.asarray(slots_arr),
+            jnp.asarray(total))
+        logits = np.asarray(logits)  # one host sync per admitted group
+        for i, (job, slot) in enumerate(zip(jobs, slots)):
+            self._start_seq(job, slot, int(total[i]), logits[i])
+
+    # -- sampling / stepping ------------------------------------------------
 
     def _sample(self, logits: np.ndarray) -> int:
         if self.temp <= 0:
@@ -123,11 +381,55 @@ class TierEngine:
         return int(self.rng.choice(len(p), p=p))
 
     def step(self) -> int:
-        """Admit + one decode step for all active slots. Returns #active."""
+        """Admit + one decode block for all active slots. Returns #active."""
         self._admit()
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return 0
+        if self.fused_steps <= 1:
+            return self._step_legacy(active)
+        b = len(self.slots)
+        tokens = np.zeros((b,), np.int32)
+        positions = np.zeros((b,), np.int32)
+        budgets = np.zeros((b,), np.int32)
+        for i in active:
+            st = self.slots[i]
+            tokens[i] = st.generated[-1]
+            positions[i] = self.positions[i]
+            budgets[i] = max(0, st.max_new - len(st.generated))
+        teff = self.serving.max_seq
+        if self._ctx_buckets:
+            # smallest bucket covering every position the block can write;
+            # ladder = {2^n, 1.5*2^n} so the attended width tracks the live
+            # context within ~33% (each bucket is one cached trace)
+            needed = int(positions.max()) + self.fused_steps + 1
+            teff = 32
+            while teff < needed:
+                teff = teff * 3 // 2 if teff & (teff - 1) == 0 else teff * 4 // 3
+            teff = min(teff, self.serving.max_seq)
+        block, self.cache, self._keys = self._fused(
+            self.params, self.cache, self._keys, jnp.asarray(tokens),
+            jnp.asarray(positions), jnp.asarray(budgets), teff)
+        block = np.asarray(block)  # the ONLY host sync: (B, K) per K tokens
+        now = time.monotonic()
+        for i in active:
+            st = self.slots[i]
+            for j in range(self.fused_steps):
+                nxt = int(block[i, j])
+                st.generated.append(nxt)
+                self.decode_tokens += 1
+                self.positions[i] += 1
+                hit_cap = self.positions[i] + 1 >= self.serving.max_seq
+                if (nxt == self.eos_id or len(st.generated) >= st.max_new
+                        or hit_cap):
+                    self._finish_slot(i, now)
+                    break
+        self.steps += 1
+        self.last_heartbeat = now
+        return len(active)
+
+    def _step_legacy(self, active: List[int]) -> int:
+        """Per-token path: one dispatch + one logits transfer per token."""
         b = len(self.slots)
         tokens = np.zeros((b, 1), np.int32)
         positions = np.zeros((b,), np.int32)
@@ -145,14 +447,11 @@ class TierEngine:
             self.positions[i] += 1
             nxt = self._sample(logits[i])
             st.generated.append(nxt)
+            self.decode_tokens += 1
             hit_cap = self.positions[i] + 1 >= self.serving.max_seq
             if (nxt == self.eos_id or len(st.generated) >= st.max_new
                     or hit_cap):
-                st.done = True
-                st.t_done = now
-                self.finished.append(st)
-                self.journal.append(("finish", {"rid": st.rid}))
-                self.slots[i] = None
+                self._finish_slot(i, now)
         self.steps += 1
         self.last_heartbeat = now
         return len(active)
@@ -171,21 +470,30 @@ class TierEngine:
         self.healthy = dt <= self.serving.heartbeat_timeout_s or self.steps == 0
         return self.healthy
 
+    @staticmethod
+    def _copy_seq(s: Optional[SeqState]) -> Optional[SeqState]:
+        # generated must be deep-copied: a shallow replace() would alias the
+        # live list, letting post-snapshot tokens leak into the snapshot
+        return (dataclasses.replace(s, generated=list(s.generated))
+                if s else None)
+
     def snapshot(self) -> dict:
         return {
             "cache": jax.tree.map(np.asarray, self.cache),
-            "slots": [dataclasses.replace(s) if s else None for s in self.slots],
+            "slots": [self._copy_seq(s) for s in self.slots],
             "positions": self.positions.copy(),
             "waiting": list(self.waiting),
             "steps": self.steps,
+            "keys": np.asarray(self._keys),
         }
 
     def restore(self, snap: dict) -> None:
         self.cache = jax.tree.map(jnp.asarray, snap["cache"])
-        self.slots = [dataclasses.replace(s) if s else None
-                      for s in snap["slots"]]
+        self.slots = [self._copy_seq(s) for s in snap["slots"]]
         self.positions = snap["positions"].copy()
         self.waiting = list(snap["waiting"])
         self.steps = snap["steps"]
+        if "keys" in snap:
+            self._keys = jnp.asarray(snap["keys"])
         self.healthy = True
         self.last_heartbeat = time.monotonic()

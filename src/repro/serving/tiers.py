@@ -36,6 +36,7 @@ class ServedResult:
     tokens: List[int]
     latency_s: float
     wan_s: float
+    ttft_s: float = 0.0  # time to first token (incl. charged WAN delay)
 
 
 def _default_topology(engine_names, bandwidth_bps: float,
@@ -175,10 +176,13 @@ class ClusterServer:
                     continue
                 meta = self._meta.pop(st.rid)
                 lat = (st.t_done or now) - meta["t0"] + meta["wan_s"]
+                ttft = ((st.t_first_token or st.t_done or now) - meta["t0"]
+                        + meta["wan_s"])
                 self.scheduler.observe(latency_s=lat)
                 self.results.append(ServedResult(
                     rid=st.rid, tier=tier, routes=meta["routes"],
-                    tokens=st.generated, latency_s=lat, wan_s=meta["wan_s"]))
+                    tokens=st.generated, latency_s=lat, wan_s=meta["wan_s"],
+                    ttft_s=ttft))
             eng.finished.clear()
         return self.results
 

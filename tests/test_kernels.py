@@ -137,6 +137,46 @@ def test_decode_attention_ring_buffer_semantics():
     np.testing.assert_allclose(got, base, rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.parametrize("t", [80, 97, 640])
+def test_decode_attention_ragged_cache_length(t):
+    """t % block_t == 0 is no longer required: a ragged tail block is
+    padded with pos=-1 slots (97 is prime) instead of asserting."""
+    b, kh, hd = 2, 2, 32
+    q = _rand((b, 1, 4, hd))
+    kc = _rand((b, t, kh, hd))
+    vc = _rand((b, t, kh, hd))
+    pos = jnp.asarray(np.arange(t, dtype=np.int32)[None].repeat(b, 0))
+    pq = jnp.full((b,), t - 1, jnp.int32)
+    got = ops.decode_attention(q, kc, vc, pq, pos, block_t=64, interpret=True)
+    want = ref.decode_attention_ref(q, kc, vc, pq, pos)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_kernels_interpret_defaults_resolve():
+    """Direct kernel calls with interpret unset resolve via the backend
+    (interpret on CPU) instead of the old hardcoded interpret=True."""
+    from repro.kernels.decode_attention import decode_attention_pallas
+    from repro.kernels.flash_attention import flash_attention_pallas
+
+    b, t, kh, hd = 1, 64, 2, 128  # lane-aligned head dim, no ops.py padding
+    q = _rand((b, 1, 4, hd))
+    kc = _rand((b, t, kh, hd))
+    vc = _rand((b, t, kh, hd))
+    pos = jnp.asarray(np.arange(t, dtype=np.int32)[None])
+    pq = jnp.full((b,), t - 1, jnp.int32)
+    got = decode_attention_pallas(q, kc, vc, pq, pos, block_t=64)
+    want = ref.decode_attention_ref(q, kc, vc, pq, pos)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    sq = _rand((b, 64, 4, hd))
+    sk = _rand((b, 64, 2, hd))
+    sv = _rand((b, 64, 2, hd))
+    got = flash_attention_pallas(sq, sk, sv, causal=True, block_q=64,
+                                 block_k=64)
+    want = ref.flash_attention_ref(sq, sk, sv, causal=True)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
 def test_decode_attention_window():
     b, t, hd = 1, 256, 64
     q = _rand((b, 1, 4, hd))
