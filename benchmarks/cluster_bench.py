@@ -1,0 +1,196 @@
+"""End-to-end LIVE cluster benchmark: the unified runtime's LiveBackend
+under an open-loop arrival process.
+
+Drives ``ClusterServer`` (real reduced-model ``TierEngine`` per tier, the
+real MoA-Off scheduler, modeled WAN links, executed partial offload,
+EDF admission, optional hedging/fault injection) at a configurable request
+rate and reports, per policy:
+
+* p50 / p95 end-to-end latency and mean TTFT (streamed first token),
+* goodput (SLO-met completions per second) vs. raw throughput,
+* frac_local (fully-local routing fraction), hedge/retry/truncation rates,
+* aggregate engine decode tokens/s.
+
+This is the first end-to-end live-cluster number in the perf trajectory —
+the serving bench (``serving_bench.py``) measures one engine's hot path;
+this one measures the whole control plane. Emits ``BENCH_cluster.json`` at
+the repo root (CI uploads it as an artifact; ``--smoke`` shrinks the grid).
+
+    PYTHONPATH=src python benchmarks/cluster_bench.py            # full
+    PYTHONPATH=src python benchmarks/cluster_bench.py --smoke    # CI
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import time
+
+import jax
+import numpy as np
+
+from repro.config import TOPOLOGIES, ServingConfig, get_topology
+from repro.core.baselines import make_policy
+from repro.core.scheduler import MoAOffScheduler
+from repro.data.synthetic import make_image, make_text_meta
+from repro.serving.tiers import ClusterServer, build_cluster_engines
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(REPO_ROOT, "BENCH_cluster.json")
+
+
+def make_workload(n: int, rate: float, seed: int, hw: int = 48):
+    """(delay_s, text, image) tuples from a Poisson arrival process whose
+    content difficulty sweeps the scorer's range (same latent-knob scheme
+    as the simulator's RequestGenerator, with real payloads)."""
+    rng = np.random.default_rng(seed)
+    out, t = [], 0.0
+    for i in range(n):
+        t += rng.exponential(1.0 / rate)
+        u = float(rng.beta(1.6, 1.6))
+        if i % 4 == 3:
+            # easy image + entity-dense long text: routes the text out while
+            # the image stays local -> exercises executed partial offload
+            # (the routed tier encodes, embeddings ship to the fusion tier)
+            u = 0.05
+            text = (f"Request {i}: compare Table {i} against Report "
+                    f"{i + 1} and Figure {i + 2}. " * 10)
+        else:
+            meta = make_text_meta(rng, float(rng.beta(1.4, 2.2)))
+            words = max(4, min(60, meta["tokens"] // 4))
+            text = (f"Request {i}: describe the Scene. "
+                    + "and explain why the Detail matters. " * (words // 6))
+        out.append((t, text, make_image(rng, u, hw, hw)))
+    return out
+
+
+def run_policy(policy: str, topo, sv: ServingConfig, workload, args) -> dict:
+    topo = get_topology(topo) if isinstance(topo, str) else topo
+    server = ClusterServer(
+        build_cluster_engines(topo, sv), topology=topo,
+        scheduler=MoAOffScheduler(policy=make_policy(policy, topology=topo)),
+        hedge_after_s=args.hedge_after, fail_rate=args.fail_rate)
+    # warmup: drive all-local, all-remote and split requests over several
+    # prompt lengths with a long decode, so every engine's prefill buckets,
+    # context-bucket ladder and encode paths compile before timing
+    wrng = np.random.default_rng(1)
+    for cx in ({"image": 0.05, "text": 0.05}, {"image": 0.95, "text": 0.95},
+               {"image": 0.05, "text": 0.95}):
+        for words in (3, 12, 24):
+            server.submit("warm up the Compiler please. " * words,
+                          image=make_image(wrng, 0.5, 48, 48),
+                          max_new=max(args.max_new, 16), complexity=cx)
+    server.run(timeout_s=args.timeout)
+    n_warm = len(server.results)
+    # warmup latencies are compile-dominated; don't let them poison the
+    # adaptive-τ controller or the EWMA state for the timed run
+    server.scheduler = MoAOffScheduler(
+        policy=make_policy(policy, topology=topo))
+    server.runtime.scheduler = server.scheduler
+    tok0 = {t: (e.decode_tokens, e.encode_tokens)
+            for t, e in server.engines.items()}
+    off0 = server.backend.offloaded_encodes
+
+    for delay, text, img in workload:
+        server.submit(text, image=img, max_new=args.max_new,
+                      slo_s=args.slo, delay_s=delay)
+    t0 = time.perf_counter()
+    results = server.run(timeout_s=args.timeout)[n_warm:]
+    wall = time.perf_counter() - t0
+    lats = np.array([r.latency_s for r in results])
+    local = {t.name for t in topo.local_tiers}
+    frac_local = float(np.mean([
+        all(t in local for t in r.routes.values()) for r in results]))
+    dec = sum(e.decode_tokens - tok0[t][0]
+              for t, e in server.engines.items())
+    enc = sum(e.encode_tokens - tok0[t][1]
+              for t, e in server.engines.items())
+    return {
+        "n": len(results),
+        "wall_s": wall,
+        "p50_latency_s": float(np.percentile(lats, 50)),
+        "p95_latency_s": float(np.percentile(lats, 95)),
+        "mean_latency_s": float(lats.mean()),
+        "mean_ttft_s": float(np.mean([r.ttft_s for r in results])),
+        "goodput_rps": sum(r.on_time for r in results) / wall,
+        "throughput_rps": len(results) / wall,
+        "frac_local": frac_local,
+        "hedged": float(np.mean([r.hedged for r in results])),
+        "retries": float(np.mean([r.retries for r in results])),
+        "truncated": float(np.mean([r.truncated for r in results])),
+        "decode_tok_s": dec / wall,
+        "encode_tokens": enc,  # frontend patch tokens encoded (any tier)
+        # images genuinely encoded AWAY from their fusion tier — the
+        # executed-partial-offload count
+        "offloaded_encodes": server.backend.offloaded_encodes - off0,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--arrival-rate", type=float, default=4.0,
+                    help="open-loop Poisson arrival rate (req/s)")
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--slo", type=float, default=5.0)
+    ap.add_argument("--hedge-after", type=float, default=0.0)
+    ap.add_argument("--fail-rate", type=float, default=0.0)
+    ap.add_argument("--timeout", type=float, default=600.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--topology", default="edge-cloud",
+                    choices=sorted(TOPOLOGIES))
+    ap.add_argument("--policies", nargs="*",
+                    default=["moa-off", "edge-only", "cloud-only"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: tiny workload, two policies")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    if args.smoke:
+        args.requests = 6
+        args.arrival_rate = 8.0
+        args.max_new = 4
+        args.policies = ["moa-off", "cloud-only"]
+
+    sv = ServingConfig(max_batch=args.max_batch, max_seq=args.max_seq)
+    workload = make_workload(args.requests, args.arrival_rate, args.seed)
+    results = {}
+    for pol in args.policies:
+        print(f"[{pol}] serving {args.requests} requests at "
+              f"{args.arrival_rate:.1f} req/s on {args.topology}…",
+              flush=True)
+        m = run_policy(pol, args.topology, sv, workload, args)
+        results[pol] = m
+        print(f"  p50={m['p50_latency_s']:.3f}s p95={m['p95_latency_s']:.3f}s"
+              f" ttft={m['mean_ttft_s']:.3f}s goodput={m['goodput_rps']:.2f}"
+              f" rps frac_local={m['frac_local']:.2f}"
+              f" decode={m['decode_tok_s']:.1f} tok/s", flush=True)
+
+    payload = {
+        "bench": "cluster_live",
+        "meta": {
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+            "device": str(jax.devices()[0]),
+            "topology": args.topology,
+            "requests": args.requests,
+            "arrival_rate": args.arrival_rate,
+            "max_new": args.max_new,
+            "max_batch": args.max_batch,
+            "slo_s": args.slo,
+            "hedge_after_s": args.hedge_after,
+            "fail_rate": args.fail_rate,
+            "smoke": args.smoke,
+        },
+        "results": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--hedge-after", type=float, default=0.0,
+                    help="live straggler hedging threshold (seconds)")
+    ap.add_argument("--fail-rate", type=float, default=0.0,
+                    help="inject node faults recovered via snapshot/restore")
     args = ap.parse_args()
 
     print("building edge (Qwen2-VL-2B-reduced) and cloud "
@@ -32,7 +36,9 @@ def main():
     em, cm = build_model(ecfg), build_model(ccfg)
     edge = TierEngine(em, em.init(jax.random.PRNGKey(0)), sv)
     cloud = TierEngine(cm, cm.init(jax.random.PRNGKey(1)), sv)
-    server = EdgeCloudServer(edge, cloud, bandwidth_bps=300e6)
+    server = EdgeCloudServer(edge, cloud, bandwidth_bps=300e6,
+                             hedge_after_s=args.hedge_after,
+                             fail_rate=args.fail_rate)
 
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()

@@ -1,11 +1,30 @@
-"""Request/response dataclasses shared by the scheduler, engine and simulator."""
+"""Request/response dataclasses shared by the scheduler, engine and simulator.
+
+Also defines the request LIFECYCLE the cluster runtime drives — one state
+machine for the analytic simulator and the live server:
+
+    arrival -> routed -> [encode:<modality> per off-fusion modality]
+            -> [transfer per remote link] -> enqueue -> serve -> complete
+    (+ ``hedged`` / ``retry`` edges)
+
+``RequestRecord`` is the per-request ledger (shared by hedged twins — the
+single ``done`` cell guarantees exactly one Outcome per request);``Job`` is
+one serving *attempt* of a request on one tier (the hedge clone is a second
+Job pointing at the same record). Together they retire the ad-hoc job dict
+the simulator used to thread through its event handlers.
+"""
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Dict, FrozenSet, Optional
+from typing import Any, Dict, FrozenSet, List, Optional, Tuple
 
 MODALITIES = ("image", "text", "audio")
+
+#: canonical lifecycle states, identical across execution backends (the
+#: sim-vs-live parity test compares these traces, timing aside)
+LIFECYCLE = ("arrival", "routed", "encode", "transfer", "enqueue", "serve",
+             "hedged", "retry", "complete")
 
 
 @dataclass
@@ -59,6 +78,62 @@ class Decision:
 
 
 @dataclass
+class RequestRecord:
+    """Per-request lifecycle ledger, shared by every serving attempt.
+
+    ``events`` is the ordered (state, tier) trace — state names come from
+    :data:`LIFECYCLE`; per-token streaming is deliberately NOT an event so
+    analytic and live traces stay comparable. ``done`` is the single
+    completion cell: whichever hedged twin finishes first flips it, and the
+    loser's completion (or a replayed one after a fault restore) is dropped.
+    """
+
+    rid: int
+    done: bool = False
+    events: List[Tuple[str, str]] = field(default_factory=list)
+    ttft_s: float = 0.0
+    wan_s: float = 0.0  # time spent on WAN links before first enqueue
+    truncated: bool = False
+    tokens: List[int] = field(default_factory=list)  # live: streamed tokens
+    outcome: Optional["Outcome"] = None
+
+    def mark(self, state: str, tier: str = "") -> None:
+        self.events.append((state, tier))
+
+    def trace(self) -> Tuple[Tuple[str, str], ...]:
+        return tuple(self.events)
+
+
+@dataclass
+class Job:
+    """One serving attempt of a request on one tier.
+
+    ``payload`` is backend scratch (cached analytic costs / tokenized live
+    prompt+extras); the lifecycle fields themselves are typed. A hedge
+    clone copies the Job (including the already-paid ``transfer_bytes`` —
+    the single Outcome accounts for the original's WAN transfer even when
+    the clone wins) but shares the ``record``.
+    """
+
+    request: Request
+    decision: Decision
+    fusion: str  # planned fusion tier (partial-offload discounts anchor here)
+    tier: str  # serving tier of THIS attempt
+    t_start: float
+    record: RequestRecord
+    retries: int = 0
+    hedged: bool = False
+    in_service: bool = False
+    pending_transfers: int = 0
+    transfer_bytes: float = 0.0
+    payload: Dict[str, Any] = field(default_factory=dict)
+
+    def clone(self, tier: str) -> "Job":
+        return dataclasses.replace(self, tier=tier, in_service=False,
+                                   payload=dict(self.payload))
+
+
+@dataclass
 class Outcome:
     """Per-request result with per-tier resource attribution.
 
@@ -76,6 +151,9 @@ class Outcome:
     hedged: bool = False
     retries: int = 0
     served_tier: str = ""  # tier that ran the fused generation
+    ttft_s: float = 0.0  # time to first streamed token (live backends)
+    on_time: bool = True  # finished within the request's SLO
+    truncated: bool = False  # prompt clipped to the engine budget (live)
 
     @property
     def edge_flops(self) -> float:

@@ -9,6 +9,7 @@ and exposes ``route(request)`` to the serving engine / simulator.
 from __future__ import annotations
 
 import time
+import warnings
 from typing import Dict, Optional
 
 import numpy as np
@@ -82,19 +83,33 @@ class MoAOffScheduler:
         self.policy.update(st)
         return decision
 
-    # -- feedback from the engine/simulator ------------------------------------
+    # -- feedback from the runtime (simulator / live server) -------------------
 
-    def observe(self, *, edge_load: Optional[float] = None,
-                cloud_load: Optional[float] = None,
+    def observe(self, *, loads: Optional[Dict[str, float]] = None,
+                queue_depths: Optional[Dict[str, int]] = None,
+                bandwidths: Optional[Dict[str, float]] = None,
                 bandwidth_bps: Optional[float] = None,
                 latency_s: Optional[float] = None,
-                loads: Optional[Dict[str, float]] = None,
-                queue_depths: Optional[Dict[str, int]] = None,
-                bandwidths: Optional[Dict[str, float]] = None) -> None:
-        if edge_load is not None:
-            self.estimator.observe_edge_load(edge_load)
-        if cloud_load is not None:
-            self.estimator.observe_cloud_load(cloud_load)
+                edge_load: Optional[float] = None,
+                cloud_load: Optional[float] = None) -> None:
+        """Feed one batch of system observations into the EWMA estimator.
+
+        The API is dict-based and keyed by tier name: ``loads`` /
+        ``queue_depths`` / per-remote-tier ``bandwidths``, plus the scalar
+        Eq. 5 WAN ``bandwidth_bps`` and per-request ``latency_s`` feedback.
+        ``edge_load=`` / ``cloud_load=`` are a deprecated two-tier shim kept
+        for out-of-tree callers; they fold into ``loads``.
+        """
+        if edge_load is not None or cloud_load is not None:
+            warnings.warn(
+                "MoAOffScheduler.observe(edge_load=..., cloud_load=...) is "
+                "deprecated; pass loads={'edge': ..., 'cloud': ...} instead",
+                DeprecationWarning, stacklevel=2)
+            loads = dict(loads or {})
+            if edge_load is not None:
+                loads.setdefault("edge", edge_load)
+            if cloud_load is not None:
+                loads.setdefault("cloud", cloud_load)
         if loads:
             for tier, load in loads.items():
                 self.estimator.observe_load(tier, load)

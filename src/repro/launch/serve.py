@@ -1,12 +1,16 @@
 """Serving launcher: MoA-Off scheduler + live engines on reduced models,
-driven by a synthetic request stream.
+driven by a synthetic request stream through the unified cluster runtime.
 
 Default is the paper's two-tier edge/cloud pair; ``--topology`` selects any
 registered ``ClusterTopology`` (e.g. ``edge-regional-cloud``) and spins up
-one reduced-model engine per tier.
+one reduced-model engine per tier. ``--arrival-rate`` paces arrivals as an
+open-loop Poisson process, and ``--hedge-after`` / ``--fail-rate`` exercise
+straggler hedging and snapshot/restore fault recovery against the live
+engines (the same lifecycle the simulator models virtually).
 
 PYTHONPATH=src python -m repro.launch.serve --requests 16 --bandwidth 300e6
 PYTHONPATH=src python -m repro.launch.serve --topology edge-regional-cloud
+PYTHONPATH=src python -m repro.launch.serve --arrival-rate 4 --hedge-after 1
 """
 from __future__ import annotations
 
@@ -14,25 +18,13 @@ import argparse
 import dataclasses
 import time
 
-import jax
 import numpy as np
 
 from repro.config import TOPOLOGIES, ServingConfig, get_topology
-from repro.configs import reduced_config
 from repro.data.synthetic import make_image
-from repro.models import build_model
-from repro.serving.engine import TierEngine
-from repro.serving.tiers import ClusterServer
+from repro.serving.tiers import ClusterServer, build_cluster_engines
 
-
-def build_engines(topology, sv: ServingConfig) -> dict:
-    engines = {}
-    for i, tier in enumerate(topology.tiers):
-        cfg = reduced_config(tier.model).replace(dtype="float32")
-        model = build_model(cfg)
-        engines[tier.name] = TierEngine(
-            model, model.init(jax.random.PRNGKey(i)), sv)
-    return engines
+build_engines = build_cluster_engines  # legacy alias
 
 
 def main() -> None:
@@ -53,6 +45,19 @@ def main() -> None:
     ap.add_argument("--topology", default="edge-cloud",
                     choices=sorted(TOPOLOGIES),
                     help="cluster topology to serve (one engine per tier)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="open-loop Poisson arrival rate in req/s; 0 = "
+                         "submit everything immediately (closed batch)")
+    ap.add_argument("--hedge-after", type=float, default=0.0,
+                    help="clone a still-queued request onto the least-"
+                         "loaded other tier after this many seconds "
+                         "(first finisher wins, loser is cancelled)")
+    ap.add_argument("--fail-rate", type=float, default=0.0,
+                    help="probability an enqueued request kills its node; "
+                         "the engine is rebuilt from its last snapshot")
+    ap.add_argument("--slo", type=float, default=5.0,
+                    help="per-request SLO in seconds (drives EDF admission "
+                         "and the on-time/goodput accounting)")
     args = ap.parse_args()
 
     sv = ServingConfig(max_batch=args.max_batch, max_seq=128,
@@ -64,15 +69,21 @@ def main() -> None:
             dataclasses.replace(t, uplink_bps=args.bandwidth)
             if t.is_remote else t for t in topo.tiers))
     print(f"topology {topo.name}: tiers {', '.join(topo.names)}")
-    server = ClusterServer(build_engines(topo, sv), topology=topo)
+    server = ClusterServer(build_engines(topo, sv), topology=topo,
+                           hedge_after_s=args.hedge_after,
+                           fail_rate=args.fail_rate)
 
     rng = np.random.default_rng(args.seed)
+    delay = 0.0
     for i in range(args.requests):
         u = rng.beta(1.6, 1.6)
         img = make_image(rng, u, 64, 64)
         text = (f"Request {i}: describe the Scene {i * 3}. "
                 + "and then explain why it matters. " * rng.integers(1, 12))
-        server.submit(text, image=img, max_new=args.max_new)
+        if args.arrival_rate > 0:
+            delay += rng.exponential(1.0 / args.arrival_rate)
+        server.submit(text, image=img, max_new=args.max_new,
+                      slo_s=args.slo, delay_s=delay)
 
     t0 = time.perf_counter()
     results = server.run()
@@ -82,16 +93,30 @@ def main() -> None:
         per_tier[r.tier] = per_tier.get(r.tier, 0) + 1
     lat = np.mean([r.latency_s for r in results])
     ttft = np.mean([r.ttft_s for r in results])
+    on_time = sum(r.on_time for r in results)
     split = " ".join(f"{t}={n}" for t, n in sorted(per_tier.items()))
     print(f"served {len(results)} requests | {split} | mean latency "
-          f"{lat:.3f}s | mean ttft {ttft:.3f}s")
+          f"{lat:.3f}s | mean ttft {ttft:.3f}s | {on_time}/{len(results)} "
+          f"within SLO | goodput {on_time / max(wall, 1e-9):.2f} req/s")
+    hedged = sum(r.hedged for r in results)
+    retries = sum(r.retries for r in results)
+    trunc = sum(r.truncated for r in results)
+    if hedged or retries or trunc:
+        print(f"hedged={hedged} retries={retries} truncated={trunc} "
+              f"engine restores={server.backend.restores}")
     dec = sum(e.decode_tokens for e in server.engines.values())
     pre = sum(e.prefill_tokens for e in server.engines.values())
+    enc = sum(e.encode_tokens for e in server.engines.values())
     print(f"engine throughput: {dec / max(wall, 1e-9):.1f} decode tok/s, "
-          f"{pre} prompt tokens prefilled (fused_steps={args.fused_steps})")
+          f"{pre} prompt tokens prefilled, {enc} patch tokens encoded "
+          f"({server.backend.offloaded_encodes} images encoded off-fusion; "
+          f"fused_steps={args.fused_steps})")
     for r in sorted(results, key=lambda r: r.rid)[:10]:
+        flags = "".join(f" {f}" for f, on in
+                        (("hedged", r.hedged), ("truncated", r.truncated),
+                         (f"retries={r.retries}", r.retries)) if on)
         print(f"  rid={r.rid} tier={r.tier:9s} routes={r.routes} "
-              f"lat={r.latency_s:.3f}s")
+              f"lat={r.latency_s:.3f}s ttft={r.ttft_s:.3f}s{flags}")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,7 @@
 from repro.serving.accuracy_model import AccuracyModel, MMBENCH, VQAV2  # noqa
 from repro.serving.engine import SeqState, TierEngine  # noqa
+from repro.serving.runtime import (AnalyticBackend, ClusterRuntime,  # noqa
+                                   LiveBackend)
 from repro.serving.simulator import (ClusterSimulator,  # noqa
                                      EdgeCloudSimulator)
 from repro.serving.tiers import (ClusterServer, EdgeCloudServer,  # noqa

@@ -41,7 +41,7 @@ import copy
 import dataclasses
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -112,6 +112,12 @@ class TierEngine:
         # perf counters (read by benchmarks/serving_bench.py and launch/serve)
         self.decode_tokens = 0
         self.prefill_tokens = 0
+        self.encode_tokens = 0  # encode-only entry point (partial offload)
+        # cluster-runtime hooks: admission + per-token streaming callbacks
+        # (rid, t) and (rid, token, t); None = standalone engine
+        self.on_admit: Optional[Callable[[int, float], None]] = None
+        self.on_token: Optional[Callable[[int, int, float], None]] = None
+        self._encode_jits: Dict[tuple, Any] = {}
 
         self._decode = jax.jit(model.decode_step)
         self._prefill1 = jax.jit(lambda p, batch: model.prefill(p, batch, t))
@@ -233,13 +239,65 @@ class TierEngine:
     # ------------------------------------------------------------------
 
     def submit(self, rid: int, tokens: np.ndarray, max_new: int = 32,
-               extras: Optional[Dict[str, np.ndarray]] = None) -> None:
+               extras: Optional[Dict[str, np.ndarray]] = None,
+               deadline: Optional[float] = None) -> None:
+        """Queue a prompt. ``deadline`` (monotonic seconds) enables
+        EDF-ordered admission: the waiting queue is drained
+        earliest-deadline-first instead of FIFO."""
         self.journal.append(("submit", {"rid": rid, "tokens": tokens,
                                         "max_new": max_new,
-                                        "extras": extras}))
+                                        "extras": extras,
+                                        "deadline": deadline}))
         self.waiting.append({"rid": rid, "tokens": np.asarray(tokens),
                              "max_new": max_new, "extras": extras or {},
-                             "t": time.monotonic()})
+                             "deadline": deadline, "t": time.monotonic()})
+
+    def cancel(self, rid: int) -> bool:
+        """Abort a request wherever it is (waiting or mid-decode). The
+        cluster runtime uses this to retire the losing hedge twin; the freed
+        slot is refilled at the next admission."""
+        for i, j in enumerate(self.waiting):
+            if j["rid"] == rid:
+                del self.waiting[i]
+                self.journal.append(("cancel", {"rid": rid}))
+                return True
+        for i, s in enumerate(self.slots):
+            if s is not None and s.rid == rid:
+                self.slots[i] = None  # KV rows are overwritten on next admit
+                self.journal.append(("cancel", {"rid": rid}))
+                return True
+        return False
+
+    def encode_image(self, image: np.ndarray, num_patches: int = 0,
+                     frontend_dim: int = 0) -> np.ndarray:
+        """Encode-only entry point (executed partial offload): run the
+        vision frontend on THIS tier's device and return compact patch
+        embeddings in the target ``(num_patches, frontend_dim)`` geometry
+        (defaults to this engine's own model).
+
+        The stub frontend tiles the normalized pixels into the patch grid —
+        bit-identical to what a fusion-local prefill would compute, so
+        routing an image off the fusion tier never changes the generated
+        tokens; only the compact embeddings travel."""
+        img = np.asarray(image)
+        p = num_patches or self.cfg.num_patches
+        fd = frontend_dim or self.cfg.frontend_dim
+        key = (p, fd, int(img.size))
+        fn = self._encode_jits.get(key)
+        if fn is None:
+            need = p * fd
+            rep = max(1, int(np.ceil(need / max(img.size, 1))))
+
+            def _enc(x):
+                flat = x.reshape(-1).astype(jnp.float32) / 255.0
+                return jnp.tile(flat, rep)[:need].reshape(p, fd)
+
+            fn = jax.jit(_enc)
+            self._encode_jits[key] = fn
+        out = np.asarray(fn(jnp.asarray(img)))
+        self.encode_tokens += p
+        self.journal.append(("encode", {"patches": p}))
+        return out
 
     def _free_slot(self) -> Optional[int]:
         for i, s in enumerate(self.slots):
@@ -269,6 +327,10 @@ class TierEngine:
         self.prefill_tokens += prompt_len
         self.decode_tokens += 1
         self.journal.append(("admit", {"rid": st.rid, "slot": slot}))
+        if self.on_admit is not None:
+            self.on_admit(st.rid, st.t_first_token)
+        if self.on_token is not None:
+            self.on_token(st.rid, int(first), st.t_first_token)
         # a request may be complete straight out of prefill (EOS first
         # token, max_new == 1, or a prompt already at capacity)
         if (first == self.eos_id or len(st.generated) >= st.max_new
@@ -291,6 +353,12 @@ class TierEngine:
     # -- admission ----------------------------------------------------------
 
     def _admit(self) -> None:
+        if any(j.get("deadline") is not None for j in self.waiting):
+            # EDF admission: earliest deadline first, FIFO among ties /
+            # deadline-free requests (stable sort keeps submit order)
+            self.waiting.sort(key=lambda j: (
+                j["deadline"] if j.get("deadline") is not None
+                else float("inf"), j["t"]))
         if self.fused_steps <= 1 or not self.serving.bucket_prefill:
             self._admit_legacy()
         else:
@@ -414,11 +482,15 @@ class TierEngine:
         now = time.monotonic()
         for i in active:
             st = self.slots[i]
+            if st is None:
+                continue  # cancelled mid-block by an on_token callback
             for j in range(self.fused_steps):
                 nxt = int(block[i, j])
                 st.generated.append(nxt)
                 self.decode_tokens += 1
                 self.positions[i] += 1
+                if self.on_token is not None:
+                    self.on_token(st.rid, nxt, now)
                 hit_cap = self.positions[i] + 1 >= self.serving.max_seq
                 if (nxt == self.eos_id or len(st.generated) >= st.max_new
                         or hit_cap):
@@ -444,10 +516,14 @@ class TierEngine:
         now = time.monotonic()
         for i in active:
             st = self.slots[i]
+            if st is None:
+                continue  # cancelled mid-step
             self.positions[i] += 1
             nxt = self._sample(logits[i])
             st.generated.append(nxt)
             self.decode_tokens += 1
+            if self.on_token is not None:
+                self.on_token(st.rid, nxt, now)
             hit_cap = self.positions[i] + 1 >= self.serving.max_seq
             if (nxt == self.eos_id or len(st.generated) >= st.max_new
                     or hit_cap):

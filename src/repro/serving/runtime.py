@@ -1,0 +1,765 @@
+"""One event-driven cluster runtime behind the simulator AND the live server.
+
+``ClusterRuntime`` owns the request lifecycle the paper's control plane
+schedules (§3.2): arrival → score/route → per-remote-tier WAN transfer →
+remote modality encode → fusion enqueue → service/streaming decode →
+complete, plus the hedge / retry / failure edges. It is parameterized by an
+:class:`ExecutionBackend`, which decides what "executing" a stage means:
+
+* :class:`AnalyticBackend` — a virtual clock and the analytic cost model:
+  service times come from ``serving.cost_model`` over the real ModelConfigs,
+  stations are FIFO multi-server queues, failures are sampled.
+  ``ClusterSimulator`` is a thin shell over this backend and reproduces the
+  pre-refactor metric keys and values exactly.
+* :class:`LiveBackend` — the monotonic clock and one real ``TierEngine``
+  per tier: partial offload is *executed* (an image routed off-fusion is
+  encoded by the routed tier's engine and its compact embeddings ship to
+  the fusion tier's prefill extras), decode streams tokens with per-request
+  TTFT/SLO tracking and EDF-ordered admission, and hedging / fault recovery
+  (engine ``snapshot()``/``restore()``) run against live engines.
+  ``ClusterServer`` is a thin shell over this backend.
+
+Both backends share the WAN link model (per-remote-tier uplink stations,
+parallel transfers joined before service) and emit the same canonical
+lifecycle trace per request (``RequestRecord.events``), which the
+sim-vs-live parity test compares timing-aside.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Protocol, Tuple
+
+import numpy as np
+
+from repro.config import ClusterTopology, ModelConfig, TierSpec
+from repro.core.request import Job, Outcome, Request, RequestRecord
+from repro.core.scheduler import MoAOffScheduler
+from repro.serving import cost_model as cm
+
+
+@dataclass(order=True)
+class Event:
+    t: float
+    seq: int
+    kind: str = field(compare=False)
+    payload: dict = field(compare=False, default_factory=dict)
+
+
+class Station:
+    """FIFO multi-server station with failure injection + utilization stats."""
+
+    def __init__(self, name: str, servers: int, fail_rate: float = 0.0):
+        self.name = name
+        self.servers = servers
+        self.busy = 0
+        self.queue: List = []
+        self.fail_rate = fail_rate
+        self.busy_time = 0.0
+        self._last_t = 0.0
+        self.flops = 0.0
+        self.mem_byte_s = 0.0
+
+    def utilization_update(self, t: float):
+        self.busy_time += self.busy / max(self.servers, 1) * (t - self._last_t)
+        self._last_t = t
+
+    # a station "at capacity" = all servers busy + ~3 queued per server;
+    # ℓ = 0.8 (the Eq.5 gate) then corresponds to a ~2-deep queue
+    QUEUE_TOLERANCE = 4
+
+    @property
+    def load(self) -> float:
+        denom = max(self.servers, 1) * self.QUEUE_TOLERANCE
+        return min(1.0, (self.busy + len(self.queue)) / denom)
+
+
+class ExecutionBackend(Protocol):
+    """What 'executing' a lifecycle stage means (virtual vs. real)."""
+
+    #: True -> the runtime's clock jumps to each event's timestamp
+    #: (discrete-event simulation); False -> events fire when the monotonic
+    #: clock reaches them and ``advance`` drives real work in between.
+    virtual_clock: bool
+    #: scalar b fallback when the topology has no remote tier
+    fallback_bandwidth_bps: float
+
+    def bind(self, runtime: "ClusterRuntime") -> None: ...
+    def handlers(self) -> Dict[str, Callable[[Event], None]]: ...
+    def tier_loads(self) -> Dict[str, float]: ...
+    def queue_depths(self) -> Dict[str, int]: ...
+    def score_cost_s(self, policy_name: str) -> float: ...
+    def encode(self, t: float, job: Job) -> None: ...
+    def enqueue(self, t: float, job: Job) -> None: ...
+    def advance(self) -> bool: ...
+
+
+class ClusterRuntime:
+    """Backend-agnostic request lifecycle over a :class:`ClusterTopology`."""
+
+    def __init__(self, topology: ClusterTopology, scheduler: MoAOffScheduler,
+                 policy_name: str, backend, hedge_after_s: float = 0.0,
+                 observed_bandwidth_bps: Optional[float] = None):
+        self.topology = topology
+        self.scheduler = scheduler
+        self.policy_name = policy_name
+        self.backend = backend
+        self.hedge_after_s = hedge_after_s
+        self.observed_bandwidth_bps = observed_bandwidth_bps
+        self.specs: Dict[str, TierSpec] = {t.name: t for t in topology.tiers}
+        self.links: Dict[str, Station] = {
+            t.name: Station(f"link:{t.name}", 1)
+            for t in topology.tiers if t.is_remote}
+        self.events: List[Event] = []
+        self._seq = itertools.count()
+        self.records: Dict[int, RequestRecord] = {}
+        self.outcomes: List[Outcome] = []
+        self.t = 0.0
+        self.handlers: Dict[str, Callable[[Event], None]] = {
+            "arrival": self._on_arrival,
+            "transfer_done": self._on_transfer_done,
+            "hedge_check": self._on_hedge_check,
+        }
+        backend.bind(self)
+        self.handlers.update(backend.handlers())
+
+    # ------------------------------------------------------------------
+
+    def _push(self, t: float, kind: str, **payload):
+        heapq.heappush(self.events, Event(t, next(self._seq), kind, payload))
+
+    def submit(self, req: Request) -> None:
+        """Schedule a request's arrival (``req.arrival_s`` is on the
+        backend's clock: virtual seconds analytic, monotonic live)."""
+        self._push(req.arrival_s, "arrival", request=req)
+
+    # -- scheduler feedback ------------------------------------------------
+
+    def _observe(self):
+        remote = self.topology.remote_tiers
+        # the scalar b of Eq. 5 is the edge<->cloud WAN: the anchor remote
+        # tier's uplink unless the server pinned an observed value
+        wan = self.observed_bandwidth_bps
+        if wan is None:
+            wan = (self.topology.default_remote.uplink_bps if remote
+                   else self.backend.fallback_bandwidth_bps)
+        self.scheduler.observe(
+            loads=self.backend.tier_loads(),
+            bandwidth_bps=wan,
+            bandwidths={t.name: t.uplink_bps for t in remote},
+            queue_depths=self.backend.queue_depths())
+
+    # -- lifecycle: arrival ------------------------------------------------
+
+    def _on_arrival(self, ev: Event):
+        req: Request = ev.payload["request"]
+        rec = self.records.get(req.rid)
+        if rec is None:
+            rec = RequestRecord(rid=req.rid)
+            self.records[req.rid] = rec
+        rec.mark("arrival")
+        self._observe()
+        decision = self.scheduler.route(req)
+        # score cost: the modality-aware module runs on the edge CPU/NPU —
+        # orders of magnitude below model inference (§4.2.3). The analytic
+        # backend charges it as a fixed sub-millisecond virtual cost; live,
+        # the real scoring time just elapsed on the monotonic clock.
+        score_cost = self.backend.score_cost_s(self.policy_name)
+        fusion = self.topology.fusion_tier(decision.routes)
+        rec.mark("routed", fusion)
+        job = Job(request=req, decision=decision, fusion=fusion, tier=fusion,
+                  t_start=ev.t, record=rec)
+        # partial offload (§3.2): modalities routed off the fusion tier are
+        # encoded where they were routed — the runtime marks the stage, the
+        # backend executes it (analytic: charge encode FLOPs to the routed
+        # station; live: run the routed engine's frontend and stash the
+        # embeddings for the fusion prefill)
+        for name in sorted(req.modalities):
+            routed = decision.routes.get(name, fusion)
+            if routed != fusion:
+                rec.mark(f"encode:{name}", routed)
+        self.backend.encode(ev.t, job)
+        # bytes that must cross a WAN: payloads of remote-routed modalities,
+        # tallied per remote tier (their links transfer in parallel)
+        remote_bytes: Dict[str, float] = {}
+        for name, m in req.modalities.items():
+            routed = decision.routes.get(name, fusion)
+            if self.specs[routed].is_remote:
+                remote_bytes[routed] = (remote_bytes.get(routed, 0.0)
+                                        + m.size_bytes)
+        if self.specs[fusion].is_remote:
+            # the fusion tier's own link carries at minimum the text/prompt
+            remote_bytes[fusion] = remote_bytes.get(fusion, 0.0) or 2048.0
+        job.transfer_bytes = sum(remote_bytes.values())
+        if remote_bytes:
+            # each remote tier's payload crosses its OWN uplink; the links
+            # run in parallel and service starts when the last one lands
+            # (sorted for deterministic event order)
+            for tname, nbytes in sorted(remote_bytes.items()):
+                self._enqueue_link(ev.t + score_cost, tname, job, nbytes)
+        else:
+            self._enqueue_service(ev.t + score_cost, job)
+        if self.hedge_after_s > 0:
+            self._push(ev.t + self.hedge_after_s, "hedge_check", job=job)
+
+    # -- lifecycle: WAN links ----------------------------------------------
+
+    def _link_seconds(self, tier: str, num_bytes: float) -> float:
+        spec = self.specs[tier]
+        return cm.transfer_seconds(num_bytes, spec.uplink_bps, spec.rtt_s)
+
+    def _enqueue_link(self, t: float, tier: str, job: Job, num_bytes: float):
+        """Queue one transfer (a job may hold several, one per remote tier
+        its modalities route to); the job proceeds to service only once
+        every pending transfer has landed."""
+        job.record.mark("transfer", tier)
+        xfer = {"job": job, "tier": tier, "bytes": num_bytes}
+        job.pending_transfers += 1
+        link = self.links[tier]
+        link.utilization_update(t)
+        if link.busy < link.servers:
+            link.busy += 1
+            sec = self._link_seconds(tier, num_bytes)
+            self._push(t + sec, "transfer_done", xfer=xfer)
+        else:
+            link.queue.append(xfer)
+
+    def _on_transfer_done(self, ev: Event):
+        xfer = ev.payload["xfer"]
+        link = self.links[xfer["tier"]]
+        link.utilization_update(ev.t)
+        link.busy -= 1
+        if link.queue:
+            nxt = link.queue.pop(0)
+            link.busy += 1
+            sec = self._link_seconds(nxt["tier"], nxt["bytes"])
+            self._push(ev.t + sec, "transfer_done", xfer=nxt)
+        job: Job = xfer["job"]
+        job.pending_transfers -= 1
+        if job.pending_transfers == 0:
+            self._enqueue_service(ev.t, job)
+
+    # -- lifecycle: service ------------------------------------------------
+
+    def _enqueue_service(self, t: float, job: Job):
+        job.record.mark("enqueue", job.tier)
+        if "t_enqueue" not in job.payload:
+            job.payload["t_enqueue"] = t
+            job.record.wan_s = t - job.t_start
+        self.backend.enqueue(t, job)
+
+    # -- lifecycle: hedging ------------------------------------------------
+
+    def _on_hedge_check(self, ev: Event):
+        job: Job = ev.payload["job"]
+        # only genuinely queued/straggling jobs are hedged — a job already
+        # being served (or finished) is left alone
+        if job.record.done or job.in_service:
+            return
+        if not job.hedged:
+            others = [n for n in self.specs if n != job.tier]
+            if not others:
+                return
+            # duplicate to the least-loaded other tier; first copy wins
+            loads = self.backend.tier_loads()
+            alt = min(others, key=lambda n: (loads.get(n, 0.0), n))
+            clone = job.clone(tier=alt)
+            clone.hedged = True
+            job.hedged = True
+            job.record.mark("hedged", alt)
+            self._enqueue_service(ev.t, clone)
+
+    # -- lifecycle: completion ---------------------------------------------
+
+    def finish(self, job: Job, tier: str, latency_s: float, *,
+               correct: bool = True,
+               tier_flops: Optional[Dict[str, float]] = None,
+               tier_mem_bytes: Optional[Dict[str, float]] = None) -> Outcome:
+        """Retire a request: exactly one Outcome per record (the caller must
+        have won the ``record.done`` race before calling)."""
+        req = job.request
+        rec = job.record
+        rec.mark("complete", tier)
+        self.scheduler.observe(latency_s=latency_s)
+        out = Outcome(
+            rid=req.rid, latency_s=latency_s, routes=job.decision.routes,
+            correct=correct, tier_flops=tier_flops or {},
+            tier_mem_bytes=tier_mem_bytes or {},
+            transfer_bytes=job.transfer_bytes, hedged=job.hedged,
+            retries=job.retries, served_tier=tier, ttft_s=rec.ttft_s,
+            on_time=latency_s <= req.slo_s, truncated=rec.truncated)
+        rec.outcome = out
+        self.outcomes.append(out)
+        return out
+
+    # -- event loop --------------------------------------------------------
+
+    def _next_due(self) -> Optional[Event]:
+        if not self.events:
+            return None
+        if not self.backend.virtual_clock and \
+                self.events[0].t > time.monotonic():
+            return None
+        return heapq.heappop(self.events)
+
+    def run(self, max_wall_s: Optional[float] = None) -> List[Outcome]:
+        deadline = (time.monotonic() + max_wall_s
+                    if max_wall_s is not None else None)
+        while True:
+            if deadline is not None and time.monotonic() > deadline:
+                break
+            ev = self._next_due()
+            if ev is not None:
+                self.t = ev.t
+                self.handlers[ev.kind](ev)
+                continue
+            if not self.backend.advance():
+                break
+        return self.outcomes
+
+
+# ---------------------------------------------------------------------------
+# Analytic backend (virtual clock + cost model)
+# ---------------------------------------------------------------------------
+
+
+class AnalyticBackend:
+    """Discrete-event execution: service times from the analytic cost model
+    over the REAL model configs, FIFO multi-server stations per tier, fault
+    injection via heartbeat-detected retries, accuracy sampled from the
+    calibrated accuracy model."""
+
+    virtual_clock = True
+
+    def __init__(self, topology: ClusterTopology, acc_model, seed: int = 0,
+                 fail_rate: float = 0.0,
+                 fallback_bandwidth_bps: float = 300e6):
+        from repro.configs import get_config  # local import, no cycle
+
+        self.acc = acc_model
+        self.rng = np.random.default_rng(seed)
+        self.fallback_bandwidth_bps = fallback_bandwidth_bps
+        self.specs: Dict[str, TierSpec] = {t.name: t for t in topology.tiers}
+        self.models: Dict[str, ModelConfig] = {
+            t.name: get_config(t.model) for t in topology.tiers}
+        self.stations: Dict[str, Station] = {
+            t.name: Station(t.name, t.servers, fail_rate)
+            for t in topology.tiers}
+        self.encode_flops: Dict[str, float] = {}  # partial-offload side work
+        self.rt: Optional[ClusterRuntime] = None
+
+    def bind(self, runtime: ClusterRuntime) -> None:
+        self.rt = runtime
+
+    def handlers(self):
+        return {"service_done": self._on_service_done,
+                "service_failed": self._on_service_failed}
+
+    # -- state the scheduler observes --------------------------------------
+
+    def tier_loads(self) -> Dict[str, float]:
+        return {name: st.load for name, st in self.stations.items()}
+
+    def queue_depths(self) -> Dict[str, int]:
+        return {name: st.busy + len(st.queue)
+                for name, st in self.stations.items()}
+
+    def score_cost_s(self, policy_name: str) -> float:
+        return 5e-4 if policy_name.startswith("moa-off") else 0.0
+
+    # -- cost model ---------------------------------------------------------
+
+    def _service_request(self, job: Job) -> Tuple[float, float, float]:
+        """(service_seconds, flops, mem_byte_s) for one fused inference.
+
+        Pure function of (request, routes, serving tier) — all accounting
+        side effects live with the callers, so it can be re-evaluated (e.g.
+        for a hedged clone on another tier) without double charging.
+        """
+        req = job.request
+        tier = job.tier
+        mcfg = self.models[tier]
+        tcfg = self.specs[tier]
+        text_tokens = 0
+        image_tokens = 0
+        for m in req.modalities.values():
+            n = cm.modality_tokens(mcfg, m)
+            if m.kind == "image":
+                image_tokens += n
+            else:
+                text_tokens += n
+        # the paper's "severe latency tail typical of edge-only models
+        # struggling with difficult samples": a weak model rambles /
+        # re-derives on inputs beyond its capability knee -> decode length
+        # grows with difficulty, scaled by how far the tier sits from
+        # cloud-class capability (easy inputs run at full speed)
+        decode_tokens = req.decode_tokens
+        weakness = 1.0 - tcfg.capability
+        if weakness > 0:
+            decode_tokens = int(decode_tokens * (
+                1.0 + 14.0 * weakness * max(0.0, req.difficulty - 0.45)))
+        # PARTIAL offloading (§3.2): modalities routed to another tier of a
+        # fused request are ENCODED there — only their compact embeddings
+        # ride along, so the serving tier never spends prefill FLOPs on
+        # them. The discount belongs to the PLANNED fusion tier only: a
+        # hedged clone running elsewhere has no embeddings waiting for it
+        # and must prefill everything.
+        if tier == job.fusion:
+            routes = job.decision.routes
+            off_text = sum(cm.modality_tokens(mcfg, m)
+                           for nm, m in req.modalities.items()
+                           if m.kind != "image"
+                           and routes.get(nm, tier) != tier)
+            text_tokens = max(0, text_tokens - off_text)
+        costs = cm.request_phase_costs(mcfg, text_tokens, image_tokens,
+                                       decode_tokens, tcfg)
+        sec = costs["prefill"].seconds + costs["decode"].seconds
+        flops = costs["prefill"].flops + costs["decode"].flops
+        kv = cm._kv_bytes_per_token(mcfg) * (text_tokens + image_tokens
+                                             + req.decode_tokens)
+        mem_byte_s = (cm.weights_bytes(mcfg) / max(tcfg.servers, 1)
+                      + kv) * sec
+        return sec, flops, mem_byte_s
+
+    def encode(self, t: float, job: Job) -> None:
+        """Partial-offload encode work: every non-image modality routed away
+        from the fusion tier is charged ONCE, at arrival, to the encoding
+        tier's station counters (the virtual-clock analogue of running the
+        remote encoder)."""
+        req, fusion = job.request, job.fusion
+        routes = job.decision.routes
+        for nm, m in req.modalities.items():
+            routed = routes.get(nm, fusion)
+            if m.kind == "image" or routed == fusion:
+                continue
+            enc_cfg = self.models[routed]
+            spec = self.specs[routed]
+            toks = cm.modality_tokens(enc_cfg, m)
+            if toks <= 0:
+                continue
+            enc = cm.request_phase_costs(enc_cfg, toks, 0, 0, spec)["prefill"]
+            kv = cm._kv_bytes_per_token(enc_cfg) * toks
+            mem = (cm.weights_bytes(enc_cfg) / max(spec.servers, 1)
+                   + kv) * enc.seconds
+            st = self.stations[routed]
+            st.flops += enc.flops
+            st.mem_byte_s += mem
+            self.encode_flops[routed] = (self.encode_flops.get(routed, 0.0)
+                                         + enc.flops)
+
+    # -- stations ------------------------------------------------------------
+
+    def enqueue(self, t: float, job: Job) -> None:
+        st = self.stations[job.tier]
+        st.utilization_update(t)
+        if st.busy < st.servers:
+            self.start_service(t, st, job)
+        else:
+            st.queue.append(job)
+
+    def start_service(self, t: float, st: Station, job: Job) -> None:
+        st.busy += 1
+        job.in_service = True
+        job.record.mark("serve", job.tier)
+        # compute once per (job, tier) and cache — _on_service_done reads
+        # the cached values, so resources are charged exactly once
+        if job.payload.get("cost_tier") != job.tier:
+            sec, flops, mem = self._service_request(job)
+            job.payload.update(service_s=sec, service_flops=flops,
+                               service_mem=mem, cost_tier=job.tier)
+        sec = job.payload["service_s"]
+        # fault injection: the node serving this job dies mid-flight and the
+        # failure is detected after a heartbeat timeout, then retried
+        if st.fail_rate > 0 and self.rng.random() < st.fail_rate:
+            detect = 2.0  # heartbeat timeout
+            self.rt._push(t + detect, "service_failed", job=job,
+                          station=st.name)
+        else:
+            self.rt._push(t + sec, "service_done", job=job, station=st.name)
+
+    def _next_from_queue(self, t: float, st: Station):
+        st.utilization_update(t)
+        st.busy -= 1
+        if st.queue:
+            job = st.queue.pop(0)
+            self.start_service(t, st, job)
+
+    def _on_service_failed(self, ev: Event):
+        st = self.stations[ev.payload["station"]]
+        job: Job = ev.payload["job"]
+        self._next_from_queue(ev.t, st)
+        if job.record.done:
+            return
+        job.retries += 1
+        job.in_service = False
+        job.record.mark("retry", job.tier)
+        self.rt._enqueue_service(ev.t, job)  # retry (possibly behind queue)
+
+    def _on_service_done(self, ev: Event):
+        tier = ev.payload["station"]
+        st = self.stations[tier]
+        job: Job = ev.payload["job"]
+        self._next_from_queue(ev.t, st)
+        if job.record.done:
+            return  # the hedged twin finished first
+        job.record.done = True
+        req = job.request
+        flops = job.payload["service_flops"]
+        mem = job.payload["service_mem"]
+        st.flops += flops
+        st.mem_byte_s += mem
+        spec = self.specs[tier]
+        down = spec.rtt_s if spec.is_remote else 0.0
+        latency = ev.t + down - req.arrival_s
+        on_time = latency <= req.slo_s
+        correct = self.acc.sample(self.rng, req.difficulty, tier, on_time,
+                                  capability=spec.capability)
+        self.rt.finish(job, tier, latency, correct=correct,
+                       tier_flops={tier: flops}, tier_mem_bytes={tier: mem})
+
+    def advance(self) -> bool:
+        return False  # purely event-driven: no events left means done
+
+
+# ---------------------------------------------------------------------------
+# Live backend (monotonic clock + real TierEngines)
+# ---------------------------------------------------------------------------
+
+
+class LiveBackend:
+    """Real execution: one ``TierEngine`` per tier.
+
+    * **Executed partial offload** — an image routed off the fusion tier is
+      encoded by the routed tier's engine (``TierEngine.encode_image``, in
+      the fusion model's patch geometry so tokens are identical to a
+      fusion-local encode) and only the compact embeddings reach the fusion
+      prefill; the raw image never does.
+    * **Streaming + EDF admission** — requests carry an EDF deadline
+      (arrival + SLO) into the engine's admission queue; tokens stream back
+      through the engine's ``on_token`` hook, giving true per-request TTFT.
+    * **Hedging** — the runtime's shared hedge_check fires on the monotonic
+      clock; a clone runs on the least-loaded other tier's engine and the
+      loser is cancelled (``TierEngine.cancel``).
+    * **Fault recovery** — with ``fail_rate`` > 0, an enqueued request may
+      kill its node: after the heartbeat timeout the engine is rebuilt from
+      its last ``snapshot()`` and the submissions since are replayed
+      (``record.done`` drops any duplicate completions).
+    """
+
+    virtual_clock = False
+    fallback_bandwidth_bps = 300e6
+
+    def __init__(self, engines: Dict, topology: ClusterTopology,
+                 fail_rate: float = 0.0, seed: int = 0,
+                 snapshot_every: int = 4):
+        self.engines = dict(engines)
+        self.topology = topology
+        self.fail_rate = fail_rate
+        self.rng = np.random.default_rng(seed)
+        self.snapshot_every = snapshot_every
+        self.restores = 0  # fault-recovery counter (tests/benchmarks)
+        self.offloaded_encodes = 0  # images encoded away from their fusion
+        self._inflight: Dict[str, Dict[int, Job]] = {
+            t: {} for t in self.engines}
+        self._snapshots: Dict[str, dict] = {}
+        self._since_snap: Dict[str, List[Job]] = {t: [] for t in self.engines}
+        self.rt: Optional[ClusterRuntime] = None
+        for tier, eng in self.engines.items():
+            eng.on_admit = self._make_on_admit(tier)
+            eng.on_token = self._make_on_token(tier)
+
+    def bind(self, runtime: ClusterRuntime) -> None:
+        self.rt = runtime
+
+    def handlers(self):
+        return {"node_fault": self._on_node_fault}
+
+    # -- state the scheduler observes --------------------------------------
+
+    def tier_loads(self) -> Dict[str, float]:
+        loads = {}
+        for tier, eng in self.engines.items():
+            free = sum(s is None for s in eng.slots)
+            loads[tier] = 1.0 - free / len(eng.slots)
+        return loads
+
+    def queue_depths(self) -> Dict[str, int]:
+        return {t: len(e.waiting) for t, e in self.engines.items()}
+
+    def score_cost_s(self, policy_name: str) -> float:
+        return 0.0  # the real scoring time already elapsed on the clock
+
+    # -- engine callbacks ---------------------------------------------------
+
+    def _make_on_admit(self, tier: str):
+        def on_admit(rid: int, t: float):
+            job = self._inflight[tier].get(rid)
+            if job is not None and not job.in_service:
+                job.in_service = True
+                job.record.mark("serve", tier)
+        return on_admit
+
+    def _make_on_token(self, tier: str):
+        spec_rtt = {t.name: (t.rtt_s if t.is_remote else 0.0)
+                    for t in self.topology.tiers}
+
+        def on_token(rid: int, token: int, t: float):
+            job = self._inflight[tier].get(rid)
+            if job is None or job.record.done:
+                return
+            rec = job.record
+            if rec.ttft_s <= 0.0:
+                # first streamed token from ANY attempt; a remote tier's
+                # token must ride the downlink back to the user
+                rec.ttft_s = t - job.request.arrival_s + spec_rtt[tier]
+        return on_token
+
+    # -- partial offload ----------------------------------------------------
+
+    def encode(self, t: float, job: Job) -> None:
+        req, fusion = job.request, job.fusion
+        fus_eng = self.engines[fusion]
+        if fus_eng.cfg.frontend != "vision_stub":
+            return
+        for nm, m in req.modalities.items():
+            if m.kind != "image" or m.data is None:
+                continue
+            routed = job.decision.routes.get(nm, fusion)
+            if routed == fusion:
+                continue  # fusion prefill encodes its own image at enqueue
+            # EXECUTED partial offload: the routed tier's engine runs the
+            # frontend (device work, counted on that engine) and only the
+            # compact embeddings travel to the fusion prefill
+            emb = self.engines[routed].encode_image(
+                np.asarray(m.data), fus_eng.cfg.num_patches,
+                fus_eng.cfg.frontend_dim)
+            job.payload.setdefault("extras", {})["patches"] = emb
+            self.offloaded_encodes += 1
+
+    # -- admission ----------------------------------------------------------
+
+    def enqueue(self, t: float, job: Job) -> None:
+        tier = job.tier
+        eng = self.engines[tier]
+        if self.fail_rate > 0:
+            if job.retries < eng.serving.retry_limit \
+                    and self.rng.random() < self.fail_rate:
+                # node dies mid-flight; detected after a heartbeat timeout
+                self.rt._push(t + eng.serving.heartbeat_timeout_s,
+                              "node_fault", job=job, tier=tier)
+            # snapshot cadence (a full host copy of the KV pool) is only
+            # paid when faults can actually consume the snapshots
+            if len(self._since_snap[tier]) >= self.snapshot_every \
+                    or tier not in self._snapshots:
+                self._snapshots[tier] = eng.snapshot()
+                self._since_snap[tier] = []
+            self._since_snap[tier].append(job)
+        self._engine_submit(eng, tier, job)
+
+    def _engine_submit(self, eng, tier: str, job: Job) -> None:
+        req = job.request
+        tokens, extras, truncated = self._prepare_prompt(eng, job)
+        job.record.truncated |= truncated
+        self._inflight[tier][req.rid] = job
+        eng.submit(req.rid, tokens, max_new=req.decode_tokens, extras=extras,
+                   deadline=req.arrival_s + req.slo_s)
+
+    def _prepare_prompt(self, eng, job: Job):
+        """Tokens + extras for one engine, against its REAL budget.
+
+        The prompt budget is ``max_seq - max_new - vision_prefix`` — every
+        token past it is dropped WITH a recorded ``truncated`` flag (the
+        old server silently clipped at ``max_seq // 2``).
+
+        An attempt whose extras hold no usable embeddings — the image was
+        routed here, or this is a hedge clone with nothing shipped for it,
+        or shipped patches are in another model's geometry — encodes the
+        image on ITS OWN engine: like the analytic backend, a clone pays
+        the full prefill; the image is never silently dropped.
+        """
+        req = job.request
+        ids = np.asarray(req.modalities["text"].data, np.int32)
+        extras = dict(job.payload.get("extras", {}))
+        img = req.modalities.get("image")
+        if (eng.cfg.frontend == "vision_stub" and img is not None
+                and img.data is not None):
+            want = (eng.cfg.num_patches, eng.cfg.frontend_dim)
+            patches = extras.get("patches")
+            if patches is None or tuple(np.shape(patches)) != want:
+                extras["patches"] = eng.encode_image(np.asarray(img.data))
+        prefix = eng.cfg.num_patches if ("patches" in extras) else 0
+        budget = max(1, eng.serving.max_seq - req.decode_tokens - prefix)
+        truncated = len(ids) > budget
+        if truncated:
+            ids = ids[:budget]
+        return ids, extras, truncated
+
+    # -- fault recovery -----------------------------------------------------
+
+    def _on_node_fault(self, ev: Event):
+        job: Job = ev.payload["job"]
+        tier = ev.payload["tier"]
+        if job.record.done:
+            return
+        eng = self.engines[tier]
+        # rebuild the tier on a standby from its last snapshot, then replay
+        # the submissions the snapshot doesn't contain
+        eng.restore(self._snapshots[tier])
+        self.restores += 1
+        job.retries += 1
+        job.in_service = False
+        job.record.mark("retry", tier)
+        have = {w["rid"] for w in eng.waiting}
+        have |= {s.rid for s in eng.slots if s is not None}
+        replay, self._since_snap[tier] = self._since_snap[tier], []
+        for j in replay:
+            if j.record.done or j.request.rid in have:
+                continue
+            j.in_service = False
+            self._since_snap[tier].append(j)
+            self._engine_submit(eng, tier, j)
+
+    # -- driving the engines -----------------------------------------------
+
+    def _harvest(self, tier: str, eng) -> None:
+        if not eng.finished:
+            return
+        now = time.monotonic()
+        for st in eng.finished:
+            job = self._inflight[tier].pop(st.rid, None)
+            if job is None:
+                continue  # cancelled attempt / replayed duplicate
+            if job.record.done:
+                continue  # the hedged twin finished first
+            job.record.done = True
+            job.record.tokens = list(st.generated)
+            spec = self.rt.specs[tier]
+            down = spec.rtt_s if spec.is_remote else 0.0
+            latency = (st.t_done or now) + down - job.request.arrival_s
+            self.rt.finish(job, tier, latency)
+            # cancel the losing hedge twin wherever it is
+            for other, eng2 in self.engines.items():
+                if other != tier and st.rid in self._inflight[other]:
+                    eng2.cancel(st.rid)
+                    self._inflight[other].pop(st.rid, None)
+        eng.finished.clear()
+
+    def advance(self) -> bool:
+        any_active = False
+        for tier, eng in self.engines.items():
+            n = eng.step()
+            any_active |= bool(n) or bool(eng.waiting) \
+                or any(s is not None for s in eng.slots)
+            self._harvest(tier, eng)
+        if any_active:
+            return True
+        if self.rt.events:
+            # idle but future events are scheduled (paced arrivals, hedge
+            # checks, fault detections): wait for the earliest one
+            dt = self.rt.events[0].t - time.monotonic()
+            if dt > 0:
+                time.sleep(min(dt, 0.002))
+            return True
+        return any(self._inflight[t] for t in self._inflight)

@@ -1,74 +1,42 @@
 """Discrete-event simulation of an N-tier edge–cloud cluster (§4,
 generalized from the paper's two-tier testbed).
 
-Stations (one FIFO multi-server queue per tier, one WAN link per remote
-tier) take service times from the analytic cost model over the REAL model
-configs; the scheduler in the loop is the real MoA-Off implementation (same
-code path that serves the live engine). Fault tolerance is exercised
-in-simulation: nodes fail with a configurable rate (heartbeat-detected,
-requests retried) and slow stragglers are hedged to the least-loaded other
-tier.
+``ClusterSimulator`` is now a thin shell over the shared, event-driven
+:class:`~repro.serving.runtime.ClusterRuntime` driven by its
+:class:`~repro.serving.runtime.AnalyticBackend` — the SAME lifecycle state
+machine that powers the live ``ClusterServer``, executed against a virtual
+clock and the analytic cost model instead of real engines. Stations (one
+FIFO multi-server queue per tier, one WAN link per remote tier) take service
+times from the cost model over the REAL model configs; the scheduler in the
+loop is the real MoA-Off implementation (same code path that serves the live
+engine). Fault tolerance is exercised in-simulation: nodes fail with a
+configurable rate (heartbeat-detected, requests retried) and slow stragglers
+are hedged to the least-loaded other tier.
 
 The topology comes from ``ClusterTopology`` (config arg or ``--topology``
 name); with none given the paper's edge/cloud pair is built from the legacy
 ``SimConfig`` fields, reproducing the original behavior and metric keys
-exactly. Outputs per policy: latency distribution, accuracy, per-tier
-compute (FLOP·s used) and memory (byte·s) overheads — everything Table 1 /
-Fig. 3 / Fig. 4 need.
+exactly (regression-locked against pre-refactor golden values in
+``tests/test_runtime_parity.py``). Outputs per policy: latency distribution,
+accuracy, per-tier compute (FLOP·s used) and memory (byte·s) overheads —
+everything Table 1 / Fig. 3 / Fig. 4 need.
 """
 from __future__ import annotations
 
-import heapq
-import itertools
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.config import (ClusterTopology, ModelConfig, PolicyConfig,
                           SimConfig, TierSpec, two_tier_topology)
-from repro.configs import get_config
 from repro.core.baselines import make_policy
-from repro.core.request import Decision, ModalityInput, Outcome, Request
+from repro.core.request import Outcome, Request
 from repro.core.scheduler import MoAOffScheduler
-from repro.serving import cost_model as cm
 from repro.serving.accuracy_model import VQAV2, AccuracyModel
+from repro.serving.runtime import (AnalyticBackend, ClusterRuntime, Event,
+                                   Station)
 
-
-@dataclass(order=True)
-class Event:
-    t: float
-    seq: int
-    kind: str = field(compare=False)
-    payload: dict = field(compare=False, default_factory=dict)
-
-
-class Station:
-    """FIFO multi-server station with failure injection + utilization stats."""
-
-    def __init__(self, name: str, servers: int, fail_rate: float = 0.0):
-        self.name = name
-        self.servers = servers
-        self.busy = 0
-        self.queue: List[dict] = []
-        self.fail_rate = fail_rate
-        self.busy_time = 0.0
-        self._last_t = 0.0
-        self.flops = 0.0
-        self.mem_byte_s = 0.0
-
-    def utilization_update(self, t: float):
-        self.busy_time += self.busy / max(self.servers, 1) * (t - self._last_t)
-        self._last_t = t
-
-    # a station "at capacity" = all servers busy + ~3 queued per server;
-    # ℓ = 0.8 (the Eq.5 gate) then corresponds to a ~2-deep queue
-    QUEUE_TOLERANCE = 4
-
-    @property
-    def load(self) -> float:
-        denom = max(self.servers, 1) * self.QUEUE_TOLERANCE
-        return min(1.0, (self.busy + len(self.queue)) / denom)
+__all__ = ["ClusterSimulator", "EdgeCloudSimulator", "Event", "Station"]
 
 
 class ClusterSimulator:
@@ -92,329 +60,67 @@ class ClusterSimulator:
             sim_cfg.rtt_s, edge_servers=edge_servers,
             cloud_servers=cloud_servers)
         self.topology = topo
-        self.rng = np.random.default_rng(sim_cfg.seed)
         self.policy_name = policy_name
         self.scheduler = MoAOffScheduler(policy=make_policy(
             policy_name, policy_cfg, topology=topo))
         self.acc = acc_model
-        self.specs: Dict[str, TierSpec] = {t.name: t for t in topo.tiers}
-        self.models: Dict[str, ModelConfig] = {
-            t.name: get_config(t.model) for t in topo.tiers}
-        self.stations: Dict[str, Station] = {
-            t.name: Station(t.name, t.servers, fail_rate) for t in topo.tiers}
-        self.links: Dict[str, Station] = {
-            t.name: Station(f"link:{t.name}", 1)
-            for t in topo.tiers if t.is_remote}
+        self.backend = AnalyticBackend(
+            topo, acc_model, seed=sim_cfg.seed, fail_rate=fail_rate,
+            fallback_bandwidth_bps=sim_cfg.bandwidth_bps)
+        self.runtime = ClusterRuntime(topo, self.scheduler, policy_name,
+                                      self.backend,
+                                      hedge_after_s=hedge_after_s)
+        self.hedge_after_s = hedge_after_s
         # legacy attribute views (None when the topology lacks the name)
         self.edge = self.stations.get("edge")
         self.cloud = self.stations.get("cloud")
         self.link = self.links.get("cloud")
-        self.hedge_after_s = hedge_after_s
-        self.encode_flops: Dict[str, float] = {}  # partial-offload side work
-        self.events: List[Event] = []
-        self._seq = itertools.count()
-        self.outcomes: List[Outcome] = []
-        self.t = 0.0
 
-    # ------------------------------------------------------------------
+    # -- delegation views (legacy simulator surface) -----------------------
 
-    def _push(self, t: float, kind: str, **payload):
-        heapq.heappush(self.events, Event(t, next(self._seq), kind, payload))
+    @property
+    def rng(self) -> np.random.Generator:
+        return self.backend.rng
 
-    def _station(self, tier: str) -> Station:
-        return self.stations[tier]
+    @property
+    def specs(self) -> Dict[str, TierSpec]:
+        return self.backend.specs
 
-    def _model(self, tier: str) -> ModelConfig:
-        return self.models[tier]
+    @property
+    def models(self) -> Dict[str, ModelConfig]:
+        return self.backend.models
 
-    def _tier_cfg(self, tier: str) -> TierSpec:
-        return self.specs[tier]
+    @property
+    def stations(self) -> Dict[str, Station]:
+        return self.backend.stations
 
-    # ------------------------------------------------------------------
+    @property
+    def links(self) -> Dict[str, Station]:
+        return self.runtime.links
 
-    def _service_request(self, job: dict) -> Tuple[float, float, float]:
-        """(service_seconds, flops, mem_byte_s) for one fused inference.
+    @property
+    def encode_flops(self) -> Dict[str, float]:
+        return self.backend.encode_flops
 
-        Pure function of (request, routes, serving tier) — all accounting
-        side effects live with the callers, so it can be re-evaluated (e.g.
-        for a hedged clone on another tier) without double charging.
-        """
-        req: Request = job["request"]
-        tier = job["tier"]
-        mcfg = self._model(tier)
-        tcfg = self._tier_cfg(tier)
-        text_tokens = 0
-        image_tokens = 0
-        for m in req.modalities.values():
-            n = cm.modality_tokens(mcfg, m)
-            if m.kind == "image":
-                image_tokens += n
-            else:
-                text_tokens += n
-        # the paper's "severe latency tail typical of edge-only models
-        # struggling with difficult samples": a weak model rambles /
-        # re-derives on inputs beyond its capability knee -> decode length
-        # grows with difficulty, scaled by how far the tier sits from
-        # cloud-class capability (easy inputs run at full speed)
-        decode_tokens = req.decode_tokens
-        weakness = 1.0 - tcfg.capability
-        if weakness > 0:
-            decode_tokens = int(decode_tokens * (
-                1.0 + 14.0 * weakness * max(0.0, req.difficulty - 0.45)))
-        # PARTIAL offloading (§3.2): modalities routed to another tier of a
-        # fused request are ENCODED there — only their compact embeddings
-        # ride along, so the serving tier never spends prefill FLOPs on
-        # them. (This is MoA-Off's fine-grained scheduling; uniform policies
-        # ship the whole request.) The discount belongs to the PLANNED
-        # fusion tier only: a hedged clone running elsewhere has no
-        # embeddings waiting for it and must prefill everything.
-        if tier == job.get("fusion", tier):
-            routes = job["decision"].routes
-            off_text = sum(cm.modality_tokens(mcfg, m)
-                           for nm, m in req.modalities.items()
-                           if m.kind != "image"
-                           and routes.get(nm, tier) != tier)
-            text_tokens = max(0, text_tokens - off_text)
-        costs = cm.request_phase_costs(mcfg, text_tokens, image_tokens,
-                                       decode_tokens, tcfg)
-        sec = costs["prefill"].seconds + costs["decode"].seconds
-        flops = costs["prefill"].flops + costs["decode"].flops
-        kv = cm._kv_bytes_per_token(mcfg) * (text_tokens + image_tokens
-                                             + req.decode_tokens)
-        mem_byte_s = (cm.weights_bytes(mcfg) / max(tcfg.servers, 1)
-                      + kv) * sec
-        return sec, flops, mem_byte_s
+    @property
+    def events(self) -> List[Event]:
+        return self.runtime.events
 
-    def _encode_charges(self, req: Request, routes: Dict[str, str],
-                        fusion: str) -> List[Tuple[str, float, float]]:
-        """Partial-offload encode work: (tier, flops, mem_byte_s) for every
-        non-image modality encoded away from the fusion tier. Charged ONCE
-        per request, at arrival, to the encoding tier's station counters."""
-        charges = []
-        for nm, m in req.modalities.items():
-            routed = routes.get(nm, fusion)
-            if m.kind == "image" or routed == fusion:
-                continue
-            enc_cfg = self._model(routed)
-            spec = self._tier_cfg(routed)
-            toks = cm.modality_tokens(enc_cfg, m)
-            if toks <= 0:
-                continue
-            enc = cm.request_phase_costs(enc_cfg, toks, 0, 0, spec)["prefill"]
-            kv = cm._kv_bytes_per_token(enc_cfg) * toks
-            mem = (cm.weights_bytes(enc_cfg) / max(spec.servers, 1)
-                   + kv) * enc.seconds
-            charges.append((routed, enc.flops, mem))
-        return charges
+    @property
+    def outcomes(self) -> List[Outcome]:
+        return self.runtime.outcomes
+
+    @property
+    def t(self) -> float:
+        return self.runtime.t
 
     # ------------------------------------------------------------------
 
     def submit(self, req: Request):
-        self._push(req.arrival_s, "arrival", request=req)
-
-    def _observe(self):
-        remote = self.topology.remote_tiers
-        # the scalar b of Eq. 5 is the edge<->cloud WAN: the anchor remote
-        # tier's uplink (per-tier uplinks ride in the bandwidths dict)
-        wan = (self.topology.default_remote.uplink_bps if remote
-               else self.cfg.bandwidth_bps)
-        self.scheduler.observe(
-            loads={name: st.load for name, st in self.stations.items()},
-            bandwidth_bps=wan,
-            bandwidths={t.name: t.uplink_bps for t in remote})
-        self.scheduler.estimator.observe_queue_depths(
-            {name: st.busy + len(st.queue)
-             for name, st in self.stations.items()})
-
-    def _on_arrival(self, ev: Event):
-        req: Request = ev.payload["request"]
-        self._observe()
-        decision = self.scheduler.route(req)
-        # score cost: the modality-aware module runs on the edge CPU/NPU —
-        # orders of magnitude below model inference (§4.2.3); modelled as a
-        # fixed sub-millisecond cost on the request path.
-        score_cost = 5e-4 if self.policy_name.startswith("moa-off") else 0.0
-        fusion = self.topology.fusion_tier(decision.routes)
-        # "done" is a shared cell so a hedged clone finishing first also
-        # retires the original (and vice versa) — exactly one Outcome/request
-        job = {"request": req, "decision": decision, "tier": fusion,
-               "fusion": fusion, "t_start": ev.t, "retries": 0,
-               "hedged": False, "done": [False]}
-        for tier, enc_f, enc_m in self._encode_charges(req, decision.routes,
-                                                       fusion):
-            st = self.stations[tier]
-            st.flops += enc_f
-            st.mem_byte_s += enc_m
-            self.encode_flops[tier] = self.encode_flops.get(tier, 0.0) + enc_f
-        # bytes that must cross a WAN: payloads of remote-routed modalities,
-        # tallied per remote tier (their links transfer in parallel)
-        remote_bytes: Dict[str, float] = {}
-        for name, m in req.modalities.items():
-            routed = decision.routes.get(name, fusion)
-            if self.specs[routed].is_remote:
-                remote_bytes[routed] = (remote_bytes.get(routed, 0.0)
-                                        + m.size_bytes)
-        if self.specs[fusion].is_remote:
-            # the fusion tier's own link carries at minimum the text/prompt
-            remote_bytes[fusion] = remote_bytes.get(fusion, 0.0) or 2048.0
-        job["transfer_bytes"] = sum(remote_bytes.values())
-        if remote_bytes:
-            # each remote tier's payload crosses its OWN uplink; the links
-            # run in parallel and service starts when the last one lands
-            # (sorted for deterministic event order)
-            for tname, nbytes in sorted(remote_bytes.items()):
-                self._enqueue_link(ev.t + score_cost, tname, job, nbytes)
-        else:
-            self._enqueue_station(ev.t + score_cost, job)
-        if self.hedge_after_s > 0:
-            self._push(ev.t + self.hedge_after_s, "hedge_check", job=job)
-
-    # -- WAN links ---------------------------------------------------------
-
-    def _link_seconds(self, tier: str, num_bytes: float) -> float:
-        spec = self.specs[tier]
-        return cm.transfer_seconds(num_bytes, spec.uplink_bps, spec.rtt_s)
-
-    def _enqueue_link(self, t: float, tier: str, job: dict,
-                      num_bytes: float):
-        """Queue one transfer (a job may hold several, one per remote tier
-        its modalities route to); the job proceeds to its station only once
-        every pending transfer has landed."""
-        xfer = {"job": job, "tier": tier, "bytes": num_bytes}
-        job["pending_transfers"] = job.get("pending_transfers", 0) + 1
-        link = self.links[tier]
-        link.utilization_update(t)
-        if link.busy < link.servers:
-            link.busy += 1
-            sec = self._link_seconds(tier, num_bytes)
-            self._push(t + sec, "transfer_done", xfer=xfer)
-        else:
-            link.queue.append(xfer)
-
-    def _on_transfer_done(self, ev: Event):
-        xfer = ev.payload["xfer"]
-        link = self.links[xfer["tier"]]
-        link.utilization_update(ev.t)
-        link.busy -= 1
-        if link.queue:
-            nxt = link.queue.pop(0)
-            link.busy += 1
-            sec = self._link_seconds(nxt["tier"], nxt["bytes"])
-            self._push(ev.t + sec, "transfer_done", xfer=nxt)
-        job = xfer["job"]
-        job["pending_transfers"] -= 1
-        if job["pending_transfers"] == 0:
-            self._enqueue_station(ev.t, job)
-
-    # -- compute stations --------------------------------------------------
-
-    def _enqueue_station(self, t: float, job: dict):
-        st = self._station(job["tier"])
-        st.utilization_update(t)
-        if st.busy < st.servers:
-            self._start_service(t, st, job)
-        else:
-            st.queue.append(job)
-
-    def _start_service(self, t: float, st: Station, job: dict):
-        st.busy += 1
-        job["in_service"] = True
-        # compute once per (job, tier) and cache — _on_service_done reads
-        # the cached values, so resources are charged exactly once
-        if job.get("cost_tier") != job["tier"]:
-            sec, flops, mem = self._service_request(job)
-            job.update(service_s=sec, service_flops=flops, service_mem=mem,
-                       cost_tier=job["tier"])
-        sec = job["service_s"]
-        # fault injection: the node serving this job dies mid-flight and the
-        # failure is detected after a heartbeat timeout, then retried
-        if st.fail_rate > 0 and self.rng.random() < st.fail_rate:
-            detect = 2.0  # heartbeat timeout
-            self._push(t + detect, "service_failed", job=job, station=st.name)
-        else:
-            self._push(t + sec, "service_done", job=job, station=st.name)
-
-    def _next_from_queue(self, t: float, st: Station):
-        st.utilization_update(t)
-        st.busy -= 1
-        if st.queue:
-            job = st.queue.pop(0)
-            self._start_service(t, st, job)
-
-    def _on_service_failed(self, ev: Event):
-        st = self.stations[ev.payload["station"]]
-        job = ev.payload["job"]
-        self._next_from_queue(ev.t, st)
-        if job["done"][0]:
-            return
-        job["retries"] += 1
-        job["in_service"] = False
-        self._enqueue_station(ev.t, job)  # retry (possibly behind queue)
-
-    def _on_hedge_check(self, ev: Event):
-        job = ev.payload["job"]
-        # only genuinely queued/straggling jobs are hedged — a job already
-        # being served (or finished) is left alone
-        if job["done"][0] or job.get("in_service"):
-            return
-        if not job["hedged"]:
-            others = [n for n in self.stations if n != job["tier"]]
-            if not others:
-                return
-            # duplicate to the least-loaded other tier; first copy wins
-            alt = min(others, key=lambda n: (self.stations[n].load, n))
-            clone = dict(job)
-            clone["tier"] = alt
-            clone["hedged"] = True
-            job["hedged"] = True
-            # keep transfer_bytes: the original's WAN transfer already
-            # happened, and the single Outcome must account for it even
-            # when the clone wins
-            clone["in_service"] = False
-            self._enqueue_station(ev.t, clone)
-
-    def _on_service_done(self, ev: Event):
-        tier = ev.payload["station"]
-        st = self.stations[tier]
-        job = ev.payload["job"]
-        self._next_from_queue(ev.t, st)
-        if job["done"][0]:
-            return  # the hedged twin finished first
-        job["done"][0] = True
-        req: Request = job["request"]
-        sec = job["service_s"]
-        flops, mem = job["service_flops"], job["service_mem"]
-        st.flops += flops
-        st.mem_byte_s += mem
-        spec = self.specs[tier]
-        down = spec.rtt_s if spec.is_remote else 0.0
-        latency = ev.t + down - req.arrival_s
-        on_time = latency <= req.slo_s
-        correct = self.acc.sample(self.rng, req.difficulty, tier, on_time,
-                                  capability=spec.capability)
-        self.scheduler.observe(latency_s=latency)
-        self.outcomes.append(Outcome(
-            rid=req.rid, latency_s=latency, routes=job["decision"].routes,
-            correct=correct, tier_flops={tier: flops},
-            tier_mem_bytes={tier: mem},
-            transfer_bytes=job["transfer_bytes"], hedged=job["hedged"],
-            retries=job["retries"], served_tier=tier))
-
-    # ------------------------------------------------------------------
+        self.runtime.submit(req)
 
     def run(self) -> List[Outcome]:
-        handlers = {
-            "arrival": self._on_arrival,
-            "transfer_done": self._on_transfer_done,
-            "service_done": self._on_service_done,
-            "service_failed": self._on_service_failed,
-            "hedge_check": self._on_hedge_check,
-        }
-        while self.events:
-            ev = heapq.heappop(self.events)
-            self.t = ev.t
-            handlers[ev.kind](ev)
-        return self.outcomes
+        return self.runtime.run()
 
     # ------------------------------------------------------------------
 

@@ -1,11 +1,25 @@
 """N-tier live serving: the MoA-Off scheduler in front of real engines.
 
-``ClusterServer`` is the end-to-end driver over a ``ClusterTopology``:
-requests carry real payloads (images as arrays, text as strings through the
-toy tokenizer); the scheduler scores them with the kernel-backed complexity
-module, routes per modality (Eq. 6 over the tier set), and the fusion tier's
-continuous-batching engine generates tokens. A simulated WAN delay
-(per-tier uplink bandwidth + RTT) is charged on remote-routed bytes.
+``ClusterServer`` is now a thin shell over the shared event-driven
+:class:`~repro.serving.runtime.ClusterRuntime` driven by its
+:class:`~repro.serving.runtime.LiveBackend` — the SAME lifecycle state
+machine as the discrete-event ``ClusterSimulator``, executed on the
+monotonic clock against one real ``TierEngine`` per tier. That buys the
+live path everything that used to be sim-only fiction:
+
+* **Executed partial offload** — an image routed off the fusion tier is
+  genuinely encoded by the routed tier's engine and only its compact patch
+  embeddings ship into the fusion prefill (previously the image was
+  silently skipped and a latency adder charged).
+* **Modeled WAN with queueing** — remote-routed payloads cross their tier's
+  uplink through a real link station (parallel links, join before service)
+  as elapsed wall time, not a post-hoc latency adder.
+* **Streaming decode** — per-request TTFT and SLO (``on_time``) tracking via
+  the engine's token stream, with EDF-ordered admission into engine slots.
+* **Hedging and fault recovery** — ``hedge_after_s`` clones stragglers onto
+  the least-loaded other tier (first finisher wins, loser cancelled) and
+  ``fail_rate`` injects node faults recovered through engine
+  ``snapshot()``/``restore()``.
 
 ``EdgeCloudServer`` is the original two-tier entry point, now a thin
 wrapper building the legacy edge/cloud topology.
@@ -17,15 +31,15 @@ import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
+import jax
 import numpy as np
 
-from repro.config import (ClusterTopology, ServingConfig, TierSpec,
-                          two_tier_topology)
+from repro.config import ClusterTopology, ServingConfig, two_tier_topology
 from repro.core.request import ModalityInput, Request
 from repro.core.scheduler import MoAOffScheduler
 from repro.data.tokenizer import ToyTokenizer
-from repro.serving.cost_model import transfer_seconds
 from repro.serving.engine import TierEngine
+from repro.serving.runtime import ClusterRuntime, LiveBackend
 
 
 @dataclass
@@ -36,7 +50,29 @@ class ServedResult:
     tokens: List[int]
     latency_s: float
     wan_s: float
-    ttft_s: float = 0.0  # time to first token (incl. charged WAN delay)
+    ttft_s: float = 0.0  # time to first streamed token (incl. WAN delay)
+    on_time: bool = True  # finished within the request's SLO
+    truncated: bool = False  # prompt clipped to the engine budget
+    hedged: bool = False
+    retries: int = 0
+
+
+def build_cluster_engines(topology: ClusterTopology,
+                          serving: ServingConfig,
+                          dtype: str = "float32") -> Dict[str, TierEngine]:
+    """One reduced-model ``TierEngine`` per topology tier (deterministic
+    per-tier param seeds) — the canonical construction shared by the
+    launcher, the cluster benchmark and the tests."""
+    from repro.configs import reduced_config  # local imports, no cycle
+    from repro.models import build_model
+
+    engines = {}
+    for i, tier in enumerate(topology.tiers):
+        cfg = reduced_config(tier.model).replace(dtype=dtype)
+        model = build_model(cfg)
+        engines[tier.name] = TierEngine(
+            model, model.init(jax.random.PRNGKey(i)), serving)
+    return engines
 
 
 def _default_topology(engine_names, bandwidth_bps: float,
@@ -58,7 +94,9 @@ class ClusterServer:
     def __init__(self, engines: Dict[str, TierEngine],
                  topology: Optional[ClusterTopology] = None,
                  scheduler: Optional[MoAOffScheduler] = None,
-                 bandwidth_bps: Optional[float] = None, rtt_s: float = 0.02):
+                 bandwidth_bps: Optional[float] = None, rtt_s: float = 0.02,
+                 hedge_after_s: float = 0.0, fail_rate: float = 0.0,
+                 seed: int = 0):
         self.engines = dict(engines)
         self.topology = topology or _default_topology(
             self.engines, bandwidth_bps if bandwidth_bps is not None
@@ -71,28 +109,33 @@ class ClusterServer:
         self.scheduler = scheduler or MoAOffScheduler(
             policy=make_policy("moa-off", topology=self.topology))
         self.tok = ToyTokenizer()
-        # the scheduler's observed scalar b defaults to the topology's own
-        # anchor WAN uplink, so Eq. 5 gating and charged WAN cost agree
-        self.bandwidth = (bandwidth_bps if bandwidth_bps is not None
-                          else self.topology.default_remote.uplink_bps)
-        self.rtt = rtt_s
+        self.backend = LiveBackend(self.engines, self.topology,
+                                   fail_rate=fail_rate, seed=seed)
+        self.runtime = ClusterRuntime(
+            self.topology, self.scheduler,
+            getattr(self.scheduler.policy, "name", "moa-off"), self.backend,
+            hedge_after_s=hedge_after_s,
+            observed_bandwidth_bps=bandwidth_bps)
         self._rid = 0
-        self._meta: Dict[int, dict] = {}
+        self._reported = 0  # outcomes already converted to ServedResults
         self.results: List[ServedResult] = []
 
     def _engine(self, tier: str) -> TierEngine:
         return self.engines[tier]
 
-    def _wan_seconds(self, spec: TierSpec, num_bytes: int) -> float:
-        if not spec.is_remote:
-            return 0.0
-        return transfer_seconds(num_bytes, spec.uplink_bps, spec.rtt_s)
+    # ------------------------------------------------------------------
 
-    def submit(self, text: str, image: Optional[np.ndarray] = None,
-               max_new: int = 16) -> int:
+    def build_request(self, text: str, image: Optional[np.ndarray] = None,
+                      max_new: int = 16, slo_s: float = 5.0,
+                      delay_s: float = 0.0,
+                      complexity: Optional[Dict[str, float]] = None
+                      ) -> Request:
+        """Tokenize/score-prepare one request without submitting it (the
+        sim-vs-live parity test feeds the same payloads to both backends).
+        ``complexity`` pins per-modality scores, bypassing the scorer."""
         rid = self._rid
         self._rid += 1
-        mods = {}
+        mods: Dict[str, ModalityInput] = {}
         if image is not None:
             mods["image"] = ModalityInput("image", data=image,
                                           size_bytes=image.size // 2)
@@ -103,87 +146,44 @@ class ClusterServer:
             meta={"tokens": len(ids),
                   "entities": int(self.tok.is_entity(arr).sum()),
                   "sentences": max(1, int(self.tok.is_sentence_end(arr).sum()))})
-        req = Request(rid=rid, arrival_s=time.monotonic(), modalities=mods)
+        if complexity:
+            for name, c in complexity.items():
+                if name in mods:
+                    mods[name].complexity = float(c)
+        return Request(rid=rid, arrival_s=time.monotonic() + delay_s,
+                       modalities=mods, decode_tokens=max_new, slo_s=slo_s)
 
-        # live per-tier load + queue feedback into the scheduler state (the
-        # cost-model argmin reads queue depths; engine backlog = waiting list)
-        loads = {}
-        for tier, eng in self.engines.items():
-            loads[tier] = 1.0 - sum(s is None for s in eng.slots) / len(eng.slots)
-        self.scheduler.observe(
-            loads=loads, bandwidth_bps=self.bandwidth,
-            queue_depths={t: len(e.waiting)
-                          for t, e in self.engines.items()},
-            bandwidths={t.name: t.uplink_bps
-                        for t in self.topology.remote_tiers})
+    def submit(self, text: str, image: Optional[np.ndarray] = None,
+               max_new: int = 16, slo_s: float = 5.0,
+               delay_s: float = 0.0,
+               complexity: Optional[Dict[str, float]] = None) -> int:
+        """Queue one request; ``delay_s`` paces its arrival into the future
+        (the runtime processes it when the monotonic clock reaches it), so a
+        caller can model an arrival process instead of a closed batch."""
+        req = self.build_request(text, image, max_new=max_new, slo_s=slo_s,
+                                 delay_s=delay_s, complexity=complexity)
+        return self.submit_request(req)
 
-        decision = self.scheduler.route(req)
-        tier = self.topology.fusion_tier(decision.routes)
-        spec = self.topology.tier(tier)
-        # every modality routed to a remote tier crosses that tier's uplink
-        # (even when the fusion runs locally); distinct links transfer in
-        # parallel, so the slowest one bounds the WAN delay. A remote fusion
-        # with no remote-routed payload still pays its RTT for the prompt.
-        remote_bytes: Dict[str, int] = {}
-        for n, m in mods.items():
-            routed = decision.routes.get(n, tier)
-            if self.topology.tier(routed).is_remote:
-                remote_bytes[routed] = (remote_bytes.get(routed, 0)
-                                        + m.size_bytes)
-        if spec.is_remote and tier not in remote_bytes:
-            remote_bytes[tier] = 0
-        wan_s = max((self._wan_seconds(self.topology.tier(t), b)
-                     for t, b in remote_bytes.items()), default=0.0)
+    def submit_request(self, req: Request) -> int:
+        self.runtime.submit(req)
+        return req.rid
 
-        eng = self._engine(tier)
-        extras = {}
-        mcfg = eng.cfg
-        # the serving engine sees raw patches only when the image is routed
-        # to it (a locally-fused request always encodes its own image);
-        # images encoded on another tier ride along as compact embeddings
-        if image is not None and (decision.routes.get("image") == tier
-                                  or not spec.is_remote):
-            if mcfg.frontend == "vision_stub":
-                extras["patches"] = self._patchify(image, mcfg)
-        tokens = self.tok.pad(ids, min(len(ids), eng.serving.max_seq // 2))
-        eng.submit(rid, tokens, max_new=max_new, extras=extras)
-        self._meta[rid] = {"tier": tier, "routes": decision.routes,
-                           "wan_s": wan_s, "t0": req.arrival_s}
-        return rid
+    # ------------------------------------------------------------------
 
-    @staticmethod
-    def _patchify(image: np.ndarray, mcfg) -> np.ndarray:
-        """Stub frontend: average-pool the image into num_patches embeddings."""
-        p, fd = mcfg.num_patches, mcfg.frontend_dim
-        flat = image.reshape(-1).astype(np.float32) / 255.0
-        need = p * fd
-        rep = int(np.ceil(need / flat.size))
-        return np.tile(flat, rep)[:need].reshape(p, fd)
-
-    def run(self, max_steps: int = 10_000) -> List[ServedResult]:
-        """Drive every engine until all submitted requests finish."""
-        steps = 0
-        while steps < max_steps:
-            active = sum(eng.step() for eng in self.engines.values())
-            waiting = any(eng.waiting for eng in self.engines.values())
-            if active == 0 and not waiting:
-                break
-            steps += 1
-        now = time.monotonic()
-        for tier, eng in self.engines.items():
-            for st in eng.finished:
-                if st.rid not in self._meta:
-                    continue
-                meta = self._meta.pop(st.rid)
-                lat = (st.t_done or now) - meta["t0"] + meta["wan_s"]
-                ttft = ((st.t_first_token or st.t_done or now) - meta["t0"]
-                        + meta["wan_s"])
-                self.scheduler.observe(latency_s=lat)
-                self.results.append(ServedResult(
-                    rid=st.rid, tier=tier, routes=meta["routes"],
-                    tokens=st.generated, latency_s=lat, wan_s=meta["wan_s"],
-                    ttft_s=ttft))
-            eng.finished.clear()
+    def run(self, timeout_s: float = 300.0) -> List[ServedResult]:
+        """Drive the runtime until every submitted request completes (or
+        ``timeout_s`` of wall clock elapses)."""
+        self.runtime.run(max_wall_s=timeout_s)
+        outcomes = self.runtime.outcomes
+        for out in outcomes[self._reported:]:
+            rec = self.runtime.records[out.rid]
+            self.results.append(ServedResult(
+                rid=out.rid, tier=out.served_tier, routes=out.routes,
+                tokens=list(rec.tokens), latency_s=out.latency_s,
+                wan_s=rec.wan_s, ttft_s=out.ttft_s, on_time=out.on_time,
+                truncated=out.truncated, hedged=out.hedged,
+                retries=out.retries))
+        self._reported = len(outcomes)
         return self.results
 
 
@@ -192,10 +192,12 @@ class EdgeCloudServer(ClusterServer):
 
     def __init__(self, edge_engine: TierEngine, cloud_engine: TierEngine,
                  scheduler: Optional[MoAOffScheduler] = None,
-                 bandwidth_bps: float = 300e6, rtt_s: float = 0.02):
+                 bandwidth_bps: float = 300e6, rtt_s: float = 0.02,
+                 hedge_after_s: float = 0.0, fail_rate: float = 0.0):
         topo = two_tier_topology(bandwidth_bps=bandwidth_bps, rtt_s=rtt_s)
         super().__init__({"edge": edge_engine, "cloud": cloud_engine},
                          topology=topo, scheduler=scheduler,
-                         bandwidth_bps=bandwidth_bps, rtt_s=rtt_s)
+                         bandwidth_bps=bandwidth_bps, rtt_s=rtt_s,
+                         hedge_after_s=hedge_after_s, fail_rate=fail_rate)
         self.edge = edge_engine
         self.cloud = cloud_engine

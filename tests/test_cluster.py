@@ -10,6 +10,7 @@ from repro.config import (ClusterTopology, PolicyConfig, ServingConfig,
                           two_tier_topology)
 from repro.configs import reduced_config
 from repro.core import SystemState, make_policy
+from repro.core.request import Job, RequestRecord
 from repro.data.synthetic import RequestGenerator
 from repro.models import build_model
 from repro.serving.engine import TierEngine
@@ -172,10 +173,11 @@ def test_service_request_is_side_effect_free():
                              edge_servers=1)
     req = RequestGenerator(seed=3, arrival_rate=1.0).generate(1)[0]
     decision = sim.scheduler.route(req)
-    job = {"request": req, "decision": decision, "tier": "cloud"}
+    job = Job(request=req, decision=decision, fusion="cloud", tier="cloud",
+              t_start=0.0, record=RequestRecord(rid=req.rid))
     before = {n: (st.flops, st.mem_byte_s) for n, st in sim.stations.items()}
-    a = sim._service_request(job)
-    b = sim._service_request(job)
+    a = sim.backend._service_request(job)
+    b = sim.backend._service_request(job)
     assert a == b  # deterministic
     after = {n: (st.flops, st.mem_byte_s) for n, st in sim.stations.items()}
     assert before == after  # no accounting side effects
@@ -200,21 +202,19 @@ def test_encode_charges_applied_once():
 def test_hedge_skips_jobs_already_in_service():
     sim = EdgeCloudSimulator(SimConfig(seed=0), hedge_after_s=1.0,
                              cloud_servers=1, edge_servers=1)
-    job = {"request": RequestGenerator(seed=1).generate(1)[0],
-           "decision": sim.scheduler.route(
-               RequestGenerator(seed=1).generate(1)[0]),
-           "tier": "edge", "retries": 0, "hedged": False, "done": [False],
-           "transfer_bytes": 0}
-    sim._start_service(0.0, sim.stations["edge"], job)
-    assert job["in_service"]
+    req = RequestGenerator(seed=1).generate(1)[0]
+    job = Job(request=req, decision=sim.scheduler.route(req), fusion="edge",
+              tier="edge", t_start=0.0, record=RequestRecord(rid=req.rid))
+    sim.backend.start_service(0.0, sim.stations["edge"], job)
+    assert job.in_service
     n_events = len(sim.events)
 
     class Ev:
         payload = {"job": job}
         t = 1.0
 
-    sim._on_hedge_check(Ev())
-    assert not job["hedged"]  # in-service job is left alone
+    sim.runtime._on_hedge_check(Ev())
+    assert not job.hedged  # in-service job is left alone
     assert len(sim.events) == n_events
 
 

@@ -1,0 +1,277 @@
+"""The unified cluster runtime: pre-refactor golden-metric regression for
+the analytic backend, sim-vs-live lifecycle parity, and the live-only
+capabilities the runtime brings (executed partial offload, streaming
+TTFT/EDF admission, hedging, snapshot/restore fault recovery, prompt
+truncation accounting)."""
+import copy
+import json
+import os
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import (PolicyConfig, ServingConfig, SimConfig,
+                          two_tier_topology)
+from repro.configs import reduced_config
+from repro.core.baselines import make_policy
+from repro.core.scheduler import MoAOffScheduler
+from repro.data.synthetic import RequestGenerator, make_image
+from repro.models import build_model
+from repro.serving.engine import TierEngine
+from repro.serving.simulator import ClusterSimulator, EdgeCloudSimulator
+from repro.serving.tiers import ClusterServer, build_cluster_engines
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "data",
+                      "golden_sim_metrics.json")
+
+
+# ---------------------------------------------------------------------------
+# analytic backend: pre-refactor golden values (exact regression)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("key", ["moa-off", "cloud-only", "edge-only-hedge",
+                                 "moa-off-fail"])
+def test_simulator_matches_prerefactor_golden(key):
+    """ClusterSimulator metric keys AND values are unchanged for the default
+    two-tier config — captured at the pre-refactor commit, including the
+    hedged and fault-injected configurations (locks the rng stream too)."""
+    entry = json.load(open(GOLDEN))[key]
+    cfg = dict(entry["config"])
+    policy, n, rate = cfg.pop("policy"), cfg.pop("n"), cfg.pop("rate")
+    sim = EdgeCloudSimulator(SimConfig(bandwidth_bps=300e6, seed=0),
+                             policy_name=policy, cloud_servers=1,
+                             edge_servers=1, **cfg)
+    for r in RequestGenerator(seed=0, arrival_rate=rate).generate(n):
+        sim.submit(r)
+    sim.run()
+    m = sim.metrics()
+    assert set(m) == set(entry["metrics"])  # keys exactly preserved
+    for k, want in entry["metrics"].items():
+        assert m[k] == pytest.approx(want, rel=1e-12, abs=1e-12), k
+
+
+def test_simulator_records_lifecycle_traces():
+    sim = EdgeCloudSimulator(SimConfig(seed=0), cloud_servers=1,
+                             edge_servers=1)
+    reqs = RequestGenerator(seed=0, arrival_rate=2.0).generate(30)
+    for r in reqs:
+        sim.submit(r)
+    sim.run()
+    for r in reqs:
+        trace = sim.runtime.records[r.rid].trace()
+        states = [s for s, _ in trace]
+        assert states[0] == "arrival" and states[1] == "routed"
+        assert states[-1] == "complete"
+        assert "enqueue" in states and "serve" in states
+
+
+# ---------------------------------------------------------------------------
+# live engines fixture
+# ---------------------------------------------------------------------------
+
+
+def _make_server(max_batch=2, max_seq=64, sv=None, **server_kw):
+    sv = sv or ServingConfig(max_batch=max_batch, max_seq=max_seq)
+    topo = two_tier_topology()
+    return ClusterServer(build_cluster_engines(topo, sv), topology=topo,
+                         **server_kw)
+
+
+# ---------------------------------------------------------------------------
+# sim-vs-live parity: same workload, same decisions, same lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_sim_and_live_agree_on_routing_and_lifecycle():
+    """The same workload through the AnalyticBackend and the LiveBackend
+    produces identical scoring + routing decisions and the same lifecycle
+    event sequence per request (timing aside)."""
+    pol_cfg = PolicyConfig(adaptive_tau=False)
+    topo = two_tier_topology()
+    server = _make_server(scheduler=MoAOffScheduler(
+        policy=make_policy("moa-off", pol_cfg, topology=topo)))
+    sim = ClusterSimulator(SimConfig(seed=0), policy_cfg=pol_cfg,
+                           topology=two_tier_topology())
+    rng = np.random.default_rng(0)
+    live_reqs, sim_reqs = [], []
+    for i, u in enumerate([0.05, 0.95, 0.4, 0.8, 0.15]):
+        req = server.build_request(
+            f"Describe scene {i}. " + "and explain the Details here. "
+            * int(u * 20), image=make_image(rng, u, 48, 48), max_new=4)
+        sim_req = copy.deepcopy(req)
+        sim_req.arrival_s = 1000.0 * (i + 1)  # idle at every virtual arrival
+        live_reqs.append(req)
+        sim_reqs.append(sim_req)
+        # live requests run one at a time so both backends see an idle
+        # cluster at each arrival (identical EWMA state => decisions are
+        # comparable rather than load-path-dependent)
+        server.submit_request(req)
+        server.run()
+    for r in sim_reqs:
+        sim.submit(r)
+    sim.run()
+
+    assert len(server.results) == len(sim.outcomes) == 5
+    sim_out = {o.rid: o for o in sim.outcomes}
+    for res in server.results:
+        assert res.routes == sim_out[res.rid].routes  # identical decisions
+        assert res.tier == sim_out[res.rid].served_tier
+    for r in live_reqs:
+        live_trace = server.runtime.records[r.rid].trace()
+        sim_trace = sim.runtime.records[r.rid].trace()
+        assert live_trace == sim_trace  # identical lifecycle, timing aside
+    # streaming bookkeeping exists on the live side
+    assert all(res.ttft_s > 0 for res in server.results)
+    assert {r.tier for r in server.results} == {"edge", "cloud"}
+
+
+# ---------------------------------------------------------------------------
+# live-only capabilities
+# ---------------------------------------------------------------------------
+
+
+def test_live_partial_offload_executes_remote_encode():
+    """An image routed off the fusion tier is REALLY encoded by the routed
+    tier's engine and its embeddings feed the fusion prefill — generated
+    tokens are identical to encoding on the fusion tier itself."""
+    # A: image stays on edge, text forces cloud fusion -> edge encodes,
+    # cloud fuses with shipped embeddings
+    srv_a = _make_server()
+    img = make_image(np.random.default_rng(0), 0.5, 48, 48)
+    srv_a.submit("Analyze the Chart now please.", image=img, max_new=4,
+                 complexity={"image": 0.05, "text": 0.95})
+    (res_a,) = srv_a.run()
+    assert res_a.routes == {"image": "edge", "text": "cloud"}
+    assert res_a.tier == "cloud"
+    assert srv_a.engines["edge"].encode_tokens > 0  # encode ran on edge
+    assert ("encode:image", "edge") in srv_a.runtime.records[0].trace()
+    # the fusion prefill consumed the vision prefix (patches + prompt)
+    ncloud = srv_a.engines["cloud"].cfg.num_patches
+    assert srv_a.engines["cloud"].prefill_tokens > ncloud
+    assert srv_a.engines["cloud"].encode_tokens == 0
+
+    # B: everything on cloud -> fusion-local encode; tokens must match A
+    srv_b = _make_server()
+    srv_b.submit("Analyze the Chart now please.", image=img, max_new=4,
+                 complexity={"image": 0.95, "text": 0.95})
+    (res_b,) = srv_b.run()
+    assert res_b.routes == {"image": "cloud", "text": "cloud"}
+    assert res_b.tokens == res_a.tokens  # embeddings shipped bit-exact
+
+
+def test_live_hedging_clones_stragglers_and_single_result():
+    srv = _make_server(max_batch=1, hedge_after_s=0.01)
+    img = make_image(np.random.default_rng(3), 0.2, 48, 48)
+    for i in range(3):
+        srv.submit(f"please describe this {i}", image=img, max_new=24,
+                   complexity={"image": 0.05, "text": 0.05})  # all -> edge
+    res = srv.run()
+    rids = [r.rid for r in res]
+    assert len(rids) == len(set(rids)) == 3  # exactly one result/request
+    assert any(r.hedged for r in res)  # queued jobs were hedged
+    hedged_rids = [r.rid for r in res if r.hedged]
+    for rid in hedged_rids:
+        trace = srv.runtime.records[rid].trace()
+        assert any(s == "hedged" for s, _ in trace)
+    # the losing twin was cancelled (or never ran), not double-reported
+    assert all(len(r.tokens) >= 1 for r in res)
+    # a hedge clone must NOT drop the image: every engine-side submission of
+    # these image-carrying requests carries patch embeddings (a clone with
+    # nothing shipped re-encodes on its own engine, like the analytic
+    # backend's full-prefill clone accounting)
+    for eng in srv.engines.values():
+        for op, payload in eng.journal:
+            if op == "submit":
+                assert "patches" in payload["extras"]
+
+
+def test_live_fault_recovery_restores_engine_snapshot():
+    sv = ServingConfig(max_batch=2, max_seq=64, heartbeat_timeout_s=0.0)
+    srv = _make_server(sv=sv, fail_rate=1.0)
+    for i in range(2):
+        srv.submit(f"hello there {i}", max_new=4,
+                   complexity={"text": 0.05})
+    res = srv.run()
+    assert len(res) == 2
+    assert all(r.retries >= 1 for r in res)  # every node died once
+    assert srv.backend.restores >= 1  # recovered via snapshot()/restore()
+    assert all(len(r.tokens) >= 1 for r in res)
+    for r in res:
+        assert any(s == "retry" for s, _ in srv.runtime.records[r.rid].trace())
+
+
+def test_live_prompt_truncation_is_recorded_not_silent():
+    srv = _make_server(max_batch=1, max_seq=48)
+    long_text = "word " * 200  # way past the 48-token budget
+    srv.submit(long_text, max_new=8, complexity={"text": 0.05})
+    srv.submit("short prompt", max_new=8, complexity={"text": 0.05})
+    res = {r.rid: r for r in srv.run()}
+    assert res[0].truncated and not res[1].truncated
+    # the kept prompt uses the REAL budget (max_seq - max_new), not the old
+    # silent max_seq // 2 clip
+    eng = srv.engines["edge"]
+    admitted = [p for op, p in eng.journal if op == "submit"]
+    assert len(admitted[0]["tokens"]) == 48 - 8
+
+
+def test_engine_edf_admission_order():
+    cfg = reduced_config("qwen3-0.6b").replace(dtype="float32")
+    model = build_model(cfg)
+    eng = TierEngine(model, model.init(jax.random.PRNGKey(0)),
+                     ServingConfig(max_batch=1, max_seq=64))
+    prompt = (np.arange(8) % 50 + 4).astype(np.int32)
+    eng.submit(0, prompt, max_new=2, deadline=3.0)
+    eng.submit(1, prompt, max_new=2, deadline=1.0)
+    eng.submit(2, prompt, max_new=2, deadline=2.0)
+    eng.run_until_drained()
+    admits = [p["rid"] for op, p in eng.journal if op == "admit"]
+    assert admits == [1, 2, 0]  # earliest deadline first
+
+
+def test_engine_cancel_frees_waiting_and_slot():
+    cfg = reduced_config("qwen3-0.6b").replace(dtype="float32")
+    model = build_model(cfg)
+    eng = TierEngine(model, model.init(jax.random.PRNGKey(0)),
+                     ServingConfig(max_batch=1, max_seq=64))
+    prompt = (np.arange(8) % 50 + 4).astype(np.int32)
+    eng.submit(0, prompt, max_new=32)
+    eng.submit(1, prompt, max_new=32)
+    eng.step()  # admits rid 0 into the slot; rid 1 waits
+    assert eng.cancel(1)  # waiting
+    assert eng.cancel(0)  # mid-decode slot
+    assert not eng.cancel(7)
+    assert eng.waiting == [] and all(s is None for s in eng.slots)
+    assert eng.run_until_drained() == []  # nothing resurrects
+
+
+# ---------------------------------------------------------------------------
+# scheduler.observe: dict API + deprecated scalar shim
+# ---------------------------------------------------------------------------
+
+
+def test_observe_scalar_shim_is_deprecated_but_equivalent():
+    new = MoAOffScheduler()
+    old = MoAOffScheduler()
+    new.observe(loads={"edge": 0.6, "cloud": 0.2}, bandwidth_bps=2e8)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        old.observe(edge_load=0.6, cloud_load=0.2, bandwidth_bps=2e8)
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    sn, so = new.estimator.snapshot(), old.estimator.snapshot()
+    assert sn.loads == so.loads
+    assert sn.bandwidth_bps == so.bandwidth_bps
+
+
+def test_observe_dict_api_feeds_all_estimator_fields():
+    s = MoAOffScheduler()
+    s.observe(loads={"edge": 1.0, "regional": 0.5},
+              queue_depths={"edge": 3},
+              bandwidths={"cloud": 1e8}, bandwidth_bps=2e8, latency_s=0.5)
+    st = s.estimator.snapshot()
+    assert st.loads["edge"] > 0 and st.loads["regional"] > 0
+    assert st.queue_depth("edge") == 3
+    assert st.bandwidths["cloud"] == pytest.approx(1e8)
+    assert s.estimator.p95_latency() == pytest.approx(0.5)

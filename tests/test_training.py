@@ -55,8 +55,17 @@ def test_grad_accum_matches_full_batch():
     p1, _, m1 = make_train_step(model, ocfg, accum=1)(params, opt, batch)
     p4, _, m4 = make_train_step(model, ocfg, accum=4)(params, opt, batch)
     np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]), rtol=1e-4)
+    # gradients agree to fp32 reduction-order noise (a full-batch backprop
+    # sums dW inside one matmul; accumulation sums 4 partial matmuls)...
+    np.testing.assert_allclose(float(m1["grad_norm"]),
+                               float(m4["grad_norm"]), rtol=1e-4)
+    # ...but step-1 Adam normalizes each update toward lr*sign(g), so for
+    # eps-scale gradient entries that fp noise is amplified to a few percent
+    # of the update. Compare params with atol = 10% of one lr-sized step
+    # instead of a bare rtol — tight enough to catch any real accumulation
+    # bug (wrong scaling is a >=25% error), immune to reduction order.
     for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
-        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-5)
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
 
 
 # ---------------------------------------------------------------------------
