@@ -11,6 +11,13 @@ rate and reports, per policy:
 * frac_local (fully-local routing fraction), hedge/retry/truncation rates,
 * aggregate engine decode tokens/s.
 
+It also runs a **hedge-path migration comparison** on the twin-edge
+topology: the same speculative-hedged long-prompt workload, once with
+re-prefilling clones (baseline) and once with cross-tier KV migration
+(hedged in-service stragglers ship their slot and the donor is retired) —
+reporting p50/p95 and the receiving tiers' prefill-token deltas, which
+prove migrated requests never prefill twice.
+
 This is the first end-to-end live-cluster number in the perf trajectory —
 the serving bench (``serving_bench.py``) measures one engine's hot path;
 this one measures the whole control plane. Emits ``BENCH_cluster.json`` at
@@ -127,6 +134,82 @@ def run_policy(policy: str, topo, sv: ServingConfig, workload, args) -> dict:
     }
 
 
+def run_hedge_migration(args) -> dict:
+    """The hedge path with and without migration, on edge-edge-cloud
+    (edge/edge1 serve the SAME model -> migration-compatible).
+
+    Both modes run the SAME speculative hedging policy (queued requests AND
+    mid-decode stragglers are hedged after ``hedge_after``); the ONLY
+    difference is the clone mechanism — baseline clones re-prefill from
+    token 0 and race their donor, migrated clones receive the donor's cache
+    rows over the wire and retire it (preemption stays off so the delta is
+    attributable to the hedge path alone). The receiving tiers'
+    prefill-token deltas prove migrated work is never prefilled twice."""
+    from repro.config import PolicyConfig
+
+    topo = get_topology("edge-edge-cloud")
+    n = 4 if args.smoke else 6
+    sv = ServingConfig(max_batch=n, max_seq=256)
+    # a tight burst of uniform long-prompt, long-decode requests: everyone
+    # is admitted (no queue) and still decoding when the hedge fires, so
+    # EVERY hedge is an in-service backup — the path migration changes
+    workload = [(0.05 * i, f"Request {i}: summarize the Report. "
+                 + "and weigh every Detail carefully. " * 12)
+                for i in range(n)]
+    out = {}
+    for mode in ("baseline", "migrate"):
+        server = ClusterServer(
+            build_cluster_engines(topo, sv), topology=topo,
+            scheduler=MoAOffScheduler(policy=make_policy(
+                "moa-off", PolicyConfig(adaptive_tau=False), topology=topo)),
+            hedge_after_s=0.5, hedge_in_service=True,
+            migrate=(mode == "migrate"))
+        # warm every engine out-of-band: the fused-decode context ladder up
+        # to max_seq AND every (length-bucket, row-count) prefill trace the
+        # burst can hit, so the timed region measures serving, not XLA
+        for i, (tier, eng) in enumerate(server.engines.items()):
+            rid = 90_000 + 1_000 * i
+            for rows in (1, 2, n):
+                for r in range(rows):
+                    eng.submit(rid, (np.arange(100) % 300 + 4)
+                               .astype(np.int32), max_new=4)
+                    rid += 1
+                eng.run_until_drained()
+            eng.submit(rid, (np.arange(128) % 300 + 4).astype(np.int32),
+                       max_new=120)  # context ladder through max_seq
+            eng.run_until_drained()
+        prefill0 = {t_: e.prefill_tokens for t_, e in server.engines.items()}
+        for delay, text in workload:
+            # pinned local: the whole burst decodes on the edge tier and
+            # straggles into the hedge window together
+            server.submit(text, max_new=96, slo_s=args.slo, delay_s=delay,
+                          complexity={"text": 0.05})
+        results = server.run(timeout_s=args.timeout)
+        lats = np.array([r.latency_s for r in results])
+        out[mode] = {
+            "n": len(results),
+            "p50_latency_s": float(np.percentile(lats, 50)),
+            "p95_latency_s": float(np.percentile(lats, 95)),
+            "mean_latency_s": float(lats.mean()),
+            "hedged": float(np.mean([r.hedged for r in results])),
+            "migrated": float(np.mean([r.migrated for r in results])),
+            "migrations": server.runtime.migrations,
+            "migration_mb": float(sum(r.migration_bytes
+                                      for r in results) / 1e6),
+            # prefill tokens spent per tier during the timed run: with
+            # migration the receiving twin decodes shipped slots instead of
+            # re-prefilling them
+            "prefill_tokens": {t_: e.prefill_tokens - prefill0[t_]
+                               for t_, e in server.engines.items()},
+        }
+        print(f"  [hedge/{mode}] p50={out[mode]['p50_latency_s']:.3f}s "
+              f"p95={out[mode]['p95_latency_s']:.3f}s "
+              f"hedged={out[mode]['hedged']:.2f} "
+              f"migrations={out[mode]['migrations']} "
+              f"prefill={out[mode]['prefill_tokens']}", flush=True)
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=24)
@@ -167,6 +250,10 @@ def main() -> None:
               f" ttft={m['mean_ttft_s']:.3f}s goodput={m['goodput_rps']:.2f}"
               f" rps frac_local={m['frac_local']:.2f}"
               f" decode={m['decode_tok_s']:.1f} tok/s", flush=True)
+
+    print("[hedge migration] re-prefill clones vs cross-tier KV migration "
+          "on edge-edge-cloud…", flush=True)
+    results["hedge_migration"] = run_hedge_migration(args)
 
     payload = {
         "bench": "cluster_live",

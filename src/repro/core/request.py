@@ -5,7 +5,7 @@ machine for the analytic simulator and the live server:
 
     arrival -> routed -> [encode:<modality> per off-fusion modality]
             -> [transfer per remote link] -> enqueue -> serve -> complete
-    (+ ``hedged`` / ``retry`` edges)
+    (+ ``hedged`` / ``retry`` / ``preempt``+``migrate`` edges)
 
 ``RequestRecord`` is the per-request ledger (shared by hedged twins — the
 single ``done`` cell guarantees exactly one Outcome per request);``Job`` is
@@ -24,7 +24,7 @@ MODALITIES = ("image", "text", "audio")
 #: canonical lifecycle states, identical across execution backends (the
 #: sim-vs-live parity test compares these traces, timing aside)
 LIFECYCLE = ("arrival", "routed", "encode", "transfer", "enqueue", "serve",
-             "hedged", "retry", "complete")
+             "hedged", "retry", "preempt", "migrate", "complete")
 
 
 @dataclass
@@ -94,6 +94,8 @@ class RequestRecord:
     ttft_s: float = 0.0
     wan_s: float = 0.0  # time spent on WAN links before first enqueue
     truncated: bool = False
+    migrated: bool = False  # some attempt's KV cache moved across tiers
+    migration_bytes: float = 0.0  # total slot-payload bytes shipped
     tokens: List[int] = field(default_factory=list)  # live: streamed tokens
     outcome: Optional["Outcome"] = None
 
@@ -128,9 +130,17 @@ class Job:
     transfer_bytes: float = 0.0
     payload: Dict[str, Any] = field(default_factory=dict)
 
+    #: backend-internal migration bookkeeping that must never leak into a
+    #: hedge clone (a stale ``preempted`` marker would swallow the clone's
+    #: own completion event)
+    _NO_CLONE_KEYS = ("preempted", "migration_wire", "migration_donor",
+                      "migration_nbytes")
+
     def clone(self, tier: str) -> "Job":
+        payload = {k: v for k, v in self.payload.items()
+                   if k not in self._NO_CLONE_KEYS}
         return dataclasses.replace(self, tier=tier, in_service=False,
-                                   payload=dict(self.payload))
+                                   payload=payload)
 
 
 @dataclass
@@ -154,6 +164,8 @@ class Outcome:
     ttft_s: float = 0.0  # time to first streamed token (live backends)
     on_time: bool = True  # finished within the request's SLO
     truncated: bool = False  # prompt clipped to the engine budget (live)
+    migrated: bool = False  # KV cache moved across tiers mid-flight
+    migration_bytes: float = 0.0  # slot-payload bytes shipped for this request
 
     @property
     def edge_flops(self) -> float:

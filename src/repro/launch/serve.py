@@ -55,6 +55,21 @@ def main() -> None:
     ap.add_argument("--fail-rate", type=float, default=0.0,
                     help="probability an enqueued request kills its node; "
                          "the engine is rebuilt from its last snapshot")
+    ap.add_argument("--migrate", action="store_true",
+                    help="cross-tier KV migration: hedged clones of "
+                         "in-service stragglers receive the donor's "
+                         "extracted cache slot instead of re-prefilling, "
+                         "and fault recovery re-homes in-flight slots onto "
+                         "surviving compatible tiers")
+    ap.add_argument("--hedge-in-service", action="store_true",
+                    help="hedge mid-decode stragglers too (speculative "
+                         "backup clones; with --migrate they receive the "
+                         "donor's cache rows instead of re-prefilling)")
+    ap.add_argument("--migrate-threshold", type=int, default=0,
+                    help="preempt-migrate the in-service request with the "
+                         "most remaining decode work when a tier's "
+                         "occupancy (active + queued) reaches this value "
+                         "(0 = off; implies --migrate)")
     ap.add_argument("--slo", type=float, default=5.0,
                     help="per-request SLO in seconds (drives EDF admission "
                          "and the on-time/goodput accounting)")
@@ -71,7 +86,9 @@ def main() -> None:
     print(f"topology {topo.name}: tiers {', '.join(topo.names)}")
     server = ClusterServer(build_engines(topo, sv), topology=topo,
                            hedge_after_s=args.hedge_after,
-                           fail_rate=args.fail_rate)
+                           fail_rate=args.fail_rate, migrate=args.migrate,
+                           migrate_threshold=args.migrate_threshold,
+                           hedge_in_service=args.hedge_in_service)
 
     rng = np.random.default_rng(args.seed)
     delay = 0.0
@@ -104,6 +121,11 @@ def main() -> None:
     if hedged or retries or trunc:
         print(f"hedged={hedged} retries={retries} truncated={trunc} "
               f"engine restores={server.backend.restores}")
+    if server.runtime.migrate:
+        mig = sum(r.migrated for r in results)
+        mb = sum(r.migration_bytes for r in results)
+        print(f"migrated={mig} requests ({server.runtime.migrations} slot "
+              f"moves, {mb / 1e6:.2f} MB of cache rows shipped)")
     dec = sum(e.decode_tokens for e in server.engines.values())
     pre = sum(e.prefill_tokens for e in server.engines.values())
     enc = sum(e.encode_tokens for e in server.engines.values())

@@ -117,6 +117,43 @@ def transfer_seconds(num_bytes: float, bandwidth_bps: float,
     return rtt_s + 8.0 * num_bytes / max(bandwidth_bps, 1.0)
 
 
+# -- cross-tier KV migration -------------------------------------------------
+
+#: tier-to-tier fabric when neither side sits behind a WAN uplink (two edge
+#: boxes on the same LAN segment)
+LAN_BPS = 10e9
+LAN_RTT_S = 0.001
+
+
+def slot_payload_bytes(cfg: ModelConfig, context_tokens: int) -> float:
+    """Analytic size of one migrated slot (``TierEngine.extract_slot``):
+    per-token KV rows for the attended context plus any O(1) recurrent state,
+    plus a small header/SeqState overhead. Mirrors the live wire format's
+    accounting without materializing it."""
+    tokens = context_tokens
+    state = 0.0
+    if cfg.family == "ssm":
+        state = (cfg.num_layers * cfg.ssm_heads * cfg.ssm_head_dim
+                 * cfg.ssm_state * 4.0)
+    elif cfg.family == "hybrid":
+        tokens = min(tokens, cfg.local_window)  # ring window rows only
+        state = cfg.num_layers * (cfg.lru_width or cfg.d_model) * 4.0
+    return _kv_bytes_per_token(cfg) * tokens + state + 2048.0
+
+
+def migration_seconds(payload_bytes: float, src, dst) -> float:
+    """Seconds to ship a slot payload from tier ``src`` to tier ``dst``
+    (TierSpec-likes). The payload rides the remote party's WAN uplink —
+    preferring the destination's, matching how the runtime routes migration
+    transfers through its per-remote-tier link stations — or a LAN hop when
+    both tiers are local."""
+    if getattr(dst, "is_remote", False):
+        return transfer_seconds(payload_bytes, dst.uplink_bps, dst.rtt_s)
+    if getattr(src, "is_remote", False):
+        return transfer_seconds(payload_bytes, src.uplink_bps, src.rtt_s)
+    return transfer_seconds(payload_bytes, LAN_BPS, LAN_RTT_S)
+
+
 def modality_tokens(cfg: ModelConfig, mod: ModalityInput) -> int:
     """How many backbone tokens a modality contributes."""
     if mod.kind == "image":

@@ -34,11 +34,19 @@ Fault tolerance: every mutation of engine state is journaled; ``snapshot()``/
 ``restore()`` allow a failed tier to be rebuilt on a standby (exercised in
 tests), and a watchdog marks the engine unhealthy if a step exceeds the
 heartbeat timeout.
+
+Cross-tier KV migration: ``extract_slot(rid)`` serializes ONE request's
+cache rows (the same axis-aware leaf walk the prefill scatter uses), its
+``SeqState`` and its sampling key into a :class:`SlotPayload` with a
+versioned, dtype/shape-tagged wire format; ``inject_slot(payload)`` resumes
+it in a free slot of a compatible engine without re-prefilling.
 """
 from __future__ import annotations
 
 import copy
 import dataclasses
+import json
+import struct
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
@@ -77,6 +85,145 @@ class SeqState:
     t_submit: float = 0.0
     t_first_token: Optional[float] = None
     t_done: Optional[float] = None
+
+
+# ---------------------------------------------------------------------------
+# cross-tier KV migration: per-slot cache wire format
+# ---------------------------------------------------------------------------
+
+#: bump when the on-wire layout changes; injectors reject other versions
+MIGRATION_WIRE_VERSION = 1
+_WIRE_MAGIC = b"MOAKV"
+
+
+class MigrationError(RuntimeError):
+    """A slot payload cannot be extracted or injected: unknown wire version,
+    wrong model/family, mismatched cache geometry, or no free slot. Raised
+    BEFORE any engine state is mutated, so a failed injection leaves the
+    target engine untouched (callers fall back to a fresh prefill)."""
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve a dtype tag, including the ml_dtypes extras jax uses. An
+    unknown tag (corrupt header, sender with newer dtypes) raises
+    MigrationError so callers keep their re-prefill fallback."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        try:
+            import ml_dtypes  # ships with jax
+
+            return np.dtype(getattr(ml_dtypes, name))
+        except (AttributeError, TypeError) as e:
+            raise MigrationError(
+                f"unknown dtype tag {name!r} in slot payload") from e
+
+
+@dataclass
+class SlotPayload:
+    """One request's migratable state: its per-slot cache rows (every leaf
+    sliced along that leaf's logical batch axis — dense/vlm/moe KV, ssm
+    conv+state, hybrid ring/rglru leaves), its ``SeqState``, the absolute
+    next position, and the per-slot sampling key. ``to_bytes``/``from_bytes``
+    are the versioned, dtype/shape-tagged wire format the live backend
+    actually ships across tiers."""
+
+    version: int
+    model: str
+    family: str
+    max_seq: int
+    seq: SeqState
+    position: int
+    key: np.ndarray  # per-slot jax.random key data
+    leaves: Dict[str, np.ndarray]  # keystr(cache path) -> per-slot row
+    _wire: Optional[bytes] = field(default=None, repr=False, compare=False)
+
+    @property
+    def nbytes(self) -> int:
+        """Exact on-wire size (serialized lazily, cached)."""
+        return len(self.to_bytes())
+
+    def to_bytes(self) -> bytes:
+        if self._wire is not None:
+            return self._wire
+        seq = self.seq
+        names = sorted(self.leaves)
+        head = {
+            "version": self.version,
+            "model": self.model,
+            "family": self.family,
+            "max_seq": self.max_seq,
+            "position": self.position,
+            "seq": {
+                "rid": seq.rid, "prompt_len": seq.prompt_len,
+                "generated": list(seq.generated), "max_new": seq.max_new,
+                "done": seq.done, "t_submit": seq.t_submit,
+                "t_first_token": seq.t_first_token, "t_done": seq.t_done,
+            },
+            "key": {"dtype": str(self.key.dtype),
+                    "shape": list(self.key.shape)},
+            "leaves": [{"name": n, "dtype": str(self.leaves[n].dtype),
+                        "shape": list(self.leaves[n].shape)} for n in names],
+        }
+        blob = json.dumps(head).encode("utf-8")
+        parts = [_WIRE_MAGIC, struct.pack("<HI", self.version, len(blob)),
+                 blob, np.ascontiguousarray(self.key).tobytes()]
+        parts += [np.ascontiguousarray(self.leaves[n]).tobytes()
+                  for n in names]
+        self._wire = b"".join(parts)
+        return self._wire
+
+    @classmethod
+    def from_bytes(cls, wire: bytes) -> "SlotPayload":
+        m = len(_WIRE_MAGIC)
+        if wire[:m] != _WIRE_MAGIC:
+            raise MigrationError("not a slot payload (bad magic)")
+        if len(wire) < m + struct.calcsize("<HI"):
+            raise MigrationError("truncated slot payload")
+        version, hlen = struct.unpack_from("<HI", wire, m)
+        if version != MIGRATION_WIRE_VERSION:
+            raise MigrationError(
+                f"wire format version {version} != supported "
+                f"{MIGRATION_WIRE_VERSION}")
+        off = m + struct.calcsize("<HI")
+
+        def pull(dtype_s: str, shape) -> np.ndarray:
+            nonlocal off
+            dt = _np_dtype(dtype_s)
+            if any(int(d) < 0 for d in shape):
+                raise MigrationError(f"corrupt leaf shape {shape}")
+            n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+            end = off + n * dt.itemsize
+            if end > len(wire):
+                raise MigrationError("truncated slot payload")
+            arr = np.frombuffer(wire[off:end], dtype=dt).reshape(shape).copy()
+            off = end
+            return arr
+
+        # any malformation beyond this point (bad json, missing header
+        # fields, bogus shapes) is a corrupt wire, never a crash: callers
+        # rely on MigrationError to fall back to a fresh prefill
+        try:
+            head = json.loads(wire[off:off + hlen].decode("utf-8"))
+            off += hlen
+            key = pull(head["key"]["dtype"], head["key"]["shape"])
+            leaves = {d["name"]: pull(d["dtype"], d["shape"])
+                      for d in head["leaves"]}
+            s = head["seq"]
+            seq = SeqState(rid=s["rid"], prompt_len=s["prompt_len"],
+                           generated=list(s["generated"]),
+                           max_new=s["max_new"], done=s["done"],
+                           t_submit=s["t_submit"],
+                           t_first_token=s["t_first_token"],
+                           t_done=s["t_done"])
+            return cls(version=version, model=head["model"],
+                       family=head["family"], max_seq=head["max_seq"],
+                       seq=seq, position=head["position"], key=key,
+                       leaves=leaves, _wire=bytes(wire))
+        except MigrationError:
+            raise
+        except (KeyError, ValueError, TypeError, OverflowError) as e:
+            raise MigrationError(f"corrupt slot payload: {e!r}") from e
 
 
 class TierEngine:
@@ -267,6 +414,92 @@ class TierEngine:
                 self.journal.append(("cancel", {"rid": rid}))
                 return True
         return False
+
+    # -- cross-tier KV migration -------------------------------------------
+
+    def _leaf_rows(self):
+        """Yield ``(name, leaf, batch_axis)`` per cache leaf — the same
+        axis-aware walk the prefill scatter uses (``cache_axes``-driven, so
+        hybrid rglru leaves with batch at axis 2 come out right)."""
+        flat = jax.tree_util.tree_leaves_with_path(self.cache)
+        axes = jax.tree.leaves(self._cache_batch_axis)
+        for (path, leaf), bax in zip(flat, axes):
+            yield jax.tree_util.keystr(path), leaf, bax
+
+    def extract_slot(self, rid: int, *, remove: bool = False) -> SlotPayload:
+        """Serialize one request's migratable state (see ``SlotPayload``).
+        ``remove=True`` frees the slot (preemption / re-homing); the default
+        keeps the donor decoding (hedged clone races the original)."""
+        slot = next((i for i, s in enumerate(self.slots)
+                     if s is not None and s.rid == rid), None)
+        if slot is None:
+            raise MigrationError(
+                f"rid {rid} holds no decode slot on this engine")
+        leaves = {name: np.asarray(jnp.take(leaf, slot, axis=bax))
+                  for name, leaf, bax in self._leaf_rows()}
+        payload = SlotPayload(
+            version=MIGRATION_WIRE_VERSION, model=self.cfg.name,
+            family=self.cfg.family, max_seq=self.serving.max_seq,
+            seq=self._copy_seq(self.slots[slot]),
+            position=int(self.positions[slot]),
+            key=np.asarray(self._keys[slot]), leaves=leaves)
+        if remove:
+            self.slots[slot] = None  # KV rows overwritten on the next admit
+        self.journal.append(("extract", {"rid": rid, "removed": remove}))
+        return payload
+
+    def inject_slot(self, payload: SlotPayload) -> int:
+        """Install a migrated request into a free slot and resume its decode
+        exactly where the donor left off (no prefill — ``prefill_tokens``
+        does not move). Validates the wire version, model spec and every
+        leaf's shape/dtype BEFORE touching the cache; any mismatch raises
+        :class:`MigrationError` and leaves this engine unchanged."""
+        if payload.version != MIGRATION_WIRE_VERSION:
+            raise MigrationError(
+                f"wire format version {payload.version} != supported "
+                f"{MIGRATION_WIRE_VERSION}")
+        if payload.model != self.cfg.name or payload.family != self.cfg.family:
+            raise MigrationError(
+                f"payload from {payload.model!r} ({payload.family}) cannot be "
+                f"injected into {self.cfg.name!r} ({self.cfg.family}): KV "
+                f"caches are model-specific")
+        if any(s is not None and s.rid == payload.seq.rid for s in self.slots):
+            raise MigrationError(
+                f"rid {payload.seq.rid} already occupies a slot here")
+        slot = self._free_slot()
+        if slot is None:
+            raise MigrationError("no free decode slot to inject into")
+        rows = dict(payload.leaves)
+        expect = {name: (leaf, bax) for name, leaf, bax in self._leaf_rows()}
+        if set(expect) != set(rows):
+            raise MigrationError(
+                f"cache leaf mismatch: payload has {sorted(rows)}, engine "
+                f"expects {sorted(expect)}")
+        for name, (leaf, bax) in expect.items():
+            want = leaf.shape[:bax] + leaf.shape[bax + 1:]
+            row = rows[name]
+            if tuple(row.shape) != tuple(want):
+                raise MigrationError(
+                    f"leaf {name}: payload row shape {tuple(row.shape)} != "
+                    f"engine row shape {tuple(want)} (max_seq "
+                    f"{payload.max_seq} vs {self.serving.max_seq}?)")
+            if str(row.dtype) != str(leaf.dtype):
+                raise MigrationError(
+                    f"leaf {name}: payload dtype {row.dtype} != engine "
+                    f"dtype {leaf.dtype}")
+
+        def put(path, leaf, bax):
+            row = rows[jax.tree_util.keystr(path)]
+            idx = (slice(None),) * bax + (slot,)
+            return leaf.at[idx].set(jnp.asarray(row))
+
+        self.cache = jax.tree_util.tree_map_with_path(
+            put, self.cache, self._cache_batch_axis)
+        self.slots[slot] = self._copy_seq(payload.seq)
+        self.positions[slot] = payload.position
+        self._keys = self._keys.at[slot].set(jnp.asarray(payload.key))
+        self.journal.append(("inject", {"rid": payload.seq.rid, "slot": slot}))
+        return slot
 
     def encode_image(self, image: np.ndarray, num_patches: int = 0,
                      frontend_dim: int = 0) -> np.ndarray:

@@ -30,7 +30,7 @@ import heapq
 import itertools
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Protocol, Tuple
+from typing import Callable, Dict, List, Optional, Protocol
 
 import numpy as np
 
@@ -38,6 +38,7 @@ from repro.config import ClusterTopology, ModelConfig, TierSpec
 from repro.core.request import Job, Outcome, Request, RequestRecord
 from repro.core.scheduler import MoAOffScheduler
 from repro.serving import cost_model as cm
+from repro.serving.engine import MigrationError, SlotPayload
 
 
 @dataclass(order=True)
@@ -94,6 +95,13 @@ class ExecutionBackend(Protocol):
     def encode(self, t: float, job: Job) -> None: ...
     def enqueue(self, t: float, job: Job) -> None: ...
     def advance(self) -> bool: ...
+    # -- cross-tier KV migration (the runtime decides WHEN, backends HOW) --
+    def occupancy(self) -> Dict[str, int]: ...
+    def can_migrate(self, src: str, dst: str) -> bool: ...
+    def preempt_candidate(self, tier: str, t: float) -> Optional[Job]: ...
+    def migrate_extract(self, t: float, donor: Job, carrier: Job, dst: str,
+                        *, remove: bool = False) -> Optional[float]: ...
+    def migrate_inject(self, t: float, carrier: Job) -> None: ...
 
 
 class ClusterRuntime:
@@ -101,13 +109,28 @@ class ClusterRuntime:
 
     def __init__(self, topology: ClusterTopology, scheduler: MoAOffScheduler,
                  policy_name: str, backend, hedge_after_s: float = 0.0,
-                 observed_bandwidth_bps: Optional[float] = None):
+                 observed_bandwidth_bps: Optional[float] = None,
+                 migrate: bool = False, migrate_threshold: int = 0,
+                 hedge_in_service: bool = False):
         self.topology = topology
         self.scheduler = scheduler
         self.policy_name = policy_name
         self.backend = backend
         self.hedge_after_s = hedge_after_s
         self.observed_bandwidth_bps = observed_bandwidth_bps
+        # cross-tier KV migration: ``migrate`` turns the migrate edge on for
+        # hedged clones and fault re-homing; ``migrate_threshold`` > 0
+        # additionally preempt-migrates when a tier's occupancy crosses it
+        # (and implies ``migrate``). Disabled, every code path is identical
+        # to the pre-migration runtime (golden-locked).
+        self.migrate_threshold = int(migrate_threshold)
+        self.migrate = bool(migrate) or self.migrate_threshold > 0
+        # hedge mid-decode stragglers too (speculative backup-task style).
+        # Without migration the clone re-prefills from token 0 and races the
+        # donor; with migration it receives the donor's cache rows instead —
+        # the benchmark's "hedge path with vs without migration" comparison.
+        self.hedge_in_service = bool(hedge_in_service) or self.migrate
+        self.migrations = 0  # successful cross-tier slot migrations
         self.specs: Dict[str, TierSpec] = {t.name: t for t in topology.tiers}
         self.links: Dict[str, Station] = {
             t.name: Station(f"link:{t.name}", 1)
@@ -121,6 +144,7 @@ class ClusterRuntime:
             "arrival": self._on_arrival,
             "transfer_done": self._on_transfer_done,
             "hedge_check": self._on_hedge_check,
+            "migrate_done": self._on_migrate_done,
         }
         backend.bind(self)
         self.handlers.update(backend.handlers())
@@ -203,6 +227,7 @@ class ClusterRuntime:
             self._enqueue_service(ev.t + score_cost, job)
         if self.hedge_after_s > 0:
             self._push(ev.t + self.hedge_after_s, "hedge_check", job=job)
+        self._maybe_preempt(ev.t)
 
     # -- lifecycle: WAN links ----------------------------------------------
 
@@ -210,12 +235,17 @@ class ClusterRuntime:
         spec = self.specs[tier]
         return cm.transfer_seconds(num_bytes, spec.uplink_bps, spec.rtt_s)
 
-    def _enqueue_link(self, t: float, tier: str, job: Job, num_bytes: float):
+    def _enqueue_link(self, t: float, tier: str, job: Job, num_bytes: float,
+                      migrate: bool = False):
         """Queue one transfer (a job may hold several, one per remote tier
         its modalities route to); the job proceeds to service only once
-        every pending transfer has landed."""
-        job.record.mark("transfer", tier)
-        xfer = {"job": job, "tier": tier, "bytes": num_bytes}
+        every pending transfer has landed. Migration transfers ride the SAME
+        link stations (queueing behind modality uploads) but resolve into a
+        slot injection instead of a service enqueue."""
+        if not migrate:
+            job.record.mark("transfer", tier)
+        xfer = {"job": job, "tier": tier, "bytes": num_bytes,
+                "migrate": migrate}
         job.pending_transfers += 1
         link = self.links[tier]
         link.utilization_update(t)
@@ -239,7 +269,10 @@ class ClusterRuntime:
         job: Job = xfer["job"]
         job.pending_transfers -= 1
         if job.pending_transfers == 0:
-            self._enqueue_service(ev.t, job)
+            if xfer["migrate"]:
+                self.backend.migrate_inject(ev.t, job)
+            else:
+                self._enqueue_service(ev.t, job)
 
     # -- lifecycle: service ------------------------------------------------
 
@@ -254,22 +287,122 @@ class ClusterRuntime:
 
     def _on_hedge_check(self, ev: Event):
         job: Job = ev.payload["job"]
-        # only genuinely queued/straggling jobs are hedged — a job already
-        # being served (or finished) is left alone
-        if job.record.done or job.in_service:
+        if job.record.done or job.hedged:
             return
-        if not job.hedged:
-            others = [n for n in self.specs if n != job.tier]
-            if not others:
+        # by default only genuinely queued jobs are hedged — a job already
+        # being served would pay a full second prefill elsewhere. With
+        # ``hedge_in_service`` a mid-decode straggler is hedged too: its
+        # clone re-prefills and races (speculative backup task), or — with
+        # migration — receives the donor's prefilled slot instead.
+        if job.in_service and not self.hedge_in_service:
+            return
+        others = [n for n in self.specs if n != job.tier]
+        if not others:
+            return
+        loads = self.backend.tier_loads()
+        if job.in_service:
+            if job.record.migrated:
+                return  # already moved once (e.g. preempted): no ping-pong
+            cands = [n for n in others
+                     if self.backend.can_migrate(job.tier, n)] \
+                if self.migrate else []
+            if cands:
+                alt = min(cands, key=lambda n: (loads.get(n, 0.0), n))
+                clone = job.clone(tier=alt)
+                clone.hedged = True
+                job.hedged = True
+                job.record.mark("hedged", alt)
+                if not self._try_migrate(ev.t, job, clone, alt):
+                    # donor died between the decision and the extract: the
+                    # clone falls back to a fresh prefill on that tier
+                    self._enqueue_service(ev.t, clone)
                 return
-            # duplicate to the least-loaded other tier; first copy wins
-            loads = self.backend.tier_loads()
-            alt = min(others, key=lambda n: (loads.get(n, 0.0), n))
-            clone = job.clone(tier=alt)
-            clone.hedged = True
-            job.hedged = True
-            job.record.mark("hedged", alt)
-            self._enqueue_service(ev.t, clone)
+            if self.migrate:
+                return  # no compatible tier to ship the slot to
+        # duplicate to the least-loaded other tier; first copy wins
+        alt = min(others, key=lambda n: (loads.get(n, 0.0), n))
+        clone = job.clone(tier=alt)
+        clone.hedged = True
+        job.hedged = True
+        job.record.mark("hedged", alt)
+        self._enqueue_service(ev.t, clone)
+
+    # -- lifecycle: cross-tier KV migration --------------------------------
+
+    def _try_migrate(self, t: float, donor: Job, carrier: Job, dst: str, *,
+                     remove: bool = False, pre: str = "") -> bool:
+        """Extract ``donor``'s slot state and ship it to ``dst``, where
+        ``carrier`` (the hedge clone, or ``donor`` itself when moving)
+        resumes without a second prefill. The payload crosses the remote
+        party's WAN link station (queueing like any transfer) or a LAN hop
+        when both tiers are local. Returns False — with no state mutated —
+        when the backend cannot extract (dead donor, incompatible tiers).
+
+        Unlike a re-prefill hedge clone, an injected copy resumes from the
+        donor's EXACT position, so the donor is redundant the moment the
+        injection lands: the backend retires it then (the donor still wins
+        if it finishes during the transport window; an injection that fails
+        falls back to a re-prefill clone and the race survives)."""
+        src = donor.tier
+        nbytes = self.backend.migrate_extract(t, donor, carrier, dst,
+                                              remove=remove)
+        if nbytes is None:
+            return False
+        if carrier is not donor:
+            carrier.payload["migration_donor"] = donor
+        # migrated/migration_bytes/migrations are committed only when the
+        # injection lands (commit_migration) — a transport that ends in the
+        # re-prefill fallback must not report a migration
+        carrier.payload["migration_nbytes"] = nbytes
+        rec = carrier.record
+        if pre:
+            rec.mark(pre, src)
+        carrier.tier = dst
+        rec.mark("migrate", dst)
+        spec_s, spec_d = self.specs[src], self.specs[dst]
+        if spec_d.is_remote:
+            self._enqueue_link(t, dst, carrier, nbytes, migrate=True)
+        elif spec_s.is_remote:
+            self._enqueue_link(t, src, carrier, nbytes, migrate=True)
+        else:
+            self._push(t + cm.migration_seconds(nbytes, spec_s, spec_d),
+                       "migrate_done", job=carrier)
+        return True
+
+    def _on_migrate_done(self, ev: Event):
+        self.backend.migrate_inject(ev.t, ev.payload["job"])
+
+    def commit_migration(self, carrier: Job) -> None:
+        """Called by the backend when an injection actually lands."""
+        nbytes = carrier.payload.pop("migration_nbytes", 0.0)
+        carrier.record.migrated = True
+        carrier.record.migration_bytes += nbytes
+        self.migrations += 1
+
+    def _maybe_preempt(self, t: float):
+        """Load-triggered preemption: when a tier's occupancy (in-service +
+        queued requests) reaches ``migrate_threshold``, move the in-service
+        request with the most remaining decode work to the least-occupied
+        compatible tier — shipping its cache rows, not re-running its
+        prefill. Checked at every arrival (when fresh load lands)."""
+        if self.migrate_threshold <= 0:
+            return
+        occ = self.backend.occupancy()
+        if not occ:
+            return
+        src = max(occ, key=lambda n: (occ[n], n))
+        if occ[src] < self.migrate_threshold:
+            return
+        cands = [n for n in self.specs
+                 if n != src and occ.get(n, 0) < occ[src]
+                 and self.backend.can_migrate(src, n)]
+        if not cands:
+            return
+        dst = min(cands, key=lambda n: (occ.get(n, 0), n))
+        victim = self.backend.preempt_candidate(src, t)
+        if victim is None:
+            return
+        self._try_migrate(t, victim, victim, dst, remove=True, pre="preempt")
 
     # -- lifecycle: completion ---------------------------------------------
 
@@ -289,7 +422,8 @@ class ClusterRuntime:
             tier_mem_bytes=tier_mem_bytes or {},
             transfer_bytes=job.transfer_bytes, hedged=job.hedged,
             retries=job.retries, served_tier=tier, ttft_s=rec.ttft_s,
-            on_time=latency_s <= req.slo_s, truncated=rec.truncated)
+            on_time=latency_s <= req.slo_s, truncated=rec.truncated,
+            migrated=rec.migrated, migration_bytes=rec.migration_bytes)
         rec.outcome = out
         self.outcomes.append(out)
         return out
@@ -348,6 +482,8 @@ class AnalyticBackend:
             t.name: Station(t.name, t.servers, fail_rate)
             for t in topology.tiers}
         self.encode_flops: Dict[str, float] = {}  # partial-offload side work
+        self.active: Dict[str, List[Job]] = {t.name: [] for t in topology.tiers}
+        self.fault_draws = 0  # fault-rng draws (one per service start)
         self.rt: Optional[ClusterRuntime] = None
 
     def bind(self, runtime: ClusterRuntime) -> None:
@@ -366,17 +502,124 @@ class AnalyticBackend:
         return {name: st.busy + len(st.queue)
                 for name, st in self.stations.items()}
 
+    def occupancy(self) -> Dict[str, int]:
+        # in-service + queued, the preemption trigger (same composition the
+        # live backend reports: occupied slots + waiting)
+        return self.queue_depths()
+
     def score_cost_s(self, policy_name: str) -> float:
         return 5e-4 if policy_name.startswith("moa-off") else 0.0
 
+    # -- cross-tier KV migration --------------------------------------------
+
+    def can_migrate(self, src: str, dst: str) -> bool:
+        """KV rows only make sense between tiers serving the SAME model."""
+        return (src != dst and src in self.models and dst in self.models
+                and self.models[src].name == self.models[dst].name)
+
+    def preempt_candidate(self, tier: str, t: float) -> Optional[Job]:
+        """In-service job with the most remaining service time (never one
+        already hedged or previously migrated)."""
+        best, best_key = None, None
+        for job in self.active.get(tier, ()):
+            if job.record.done or job.record.migrated or job.hedged:
+                continue
+            rem = job.payload["t_serve"] + job.payload["service_s"] - t
+            if rem <= 0:
+                continue
+            key = (rem, -job.request.rid)
+            if best is None or key > best_key:
+                best, best_key = job, key
+        return best
+
+    def migrate_extract(self, t: float, donor: Job, carrier: Job, dst: str,
+                        *, remove: bool = False) -> Optional[float]:
+        """Virtual extract: size the payload from the donor's attended
+        context and reprice the carrier as decode-remainder-only on ``dst``
+        (the shipped rows replace the prefill AND the already-generated
+        fraction of the decode)."""
+        if not self.can_migrate(donor.tier, dst):
+            return None
+        p = donor.payload
+        if "t_serve" not in p or p.get("cost_tier") != donor.tier:
+            return None  # not in service here: nothing prefilled to ship
+        total, pre = p["service_s"], p["service_prefill_s"]
+        elapsed = max(0.0, t - p["t_serve"])
+        if elapsed < pre:
+            # still mid-prefill: there are no cache rows to ship yet (the
+            # live engine can only extract an admitted, post-prefill slot)
+            return None
+        frac = min(1.0, max(0.0, (elapsed - pre) / max(total - pre, 1e-9)))
+        req = donor.request
+        ctx = int(p.get("service_context", 0.0)
+                  + frac * req.decode_tokens)
+        nbytes = cm.slot_payload_bytes(self.models[donor.tier], ctx)
+        if remove:
+            # preemption: release the donor's server NOW and drop its stale
+            # completion event when it fires
+            self._release_in_service(t, donor)
+        # price the carrier's service on dst: decode remainder only
+        tier0 = carrier.tier
+        carrier.tier = dst
+        c = self._service_request(carrier)
+        carrier.tier = tier0
+        scale = 1.0 - frac
+        sec = c["decode_s"] * scale
+        carrier.payload.update(
+            service_s=sec, service_flops=c["decode_flops"] * scale,
+            service_mem=c["mem_byte_s"] * sec / max(c["seconds"], 1e-9),
+            service_prefill_s=0.0,
+            service_decode_flops=c["decode_flops"] * scale,
+            service_context=ctx, cost_tier=dst)
+        carrier.in_service = False
+        return float(nbytes)
+
+    def _release_in_service(self, t: float, job: Job) -> None:
+        """Free the server a genuinely-in-service job occupies, charge its
+        tier for the work expended so far, and drop its stale completion
+        event. A no-op when the job is no longer in service there (e.g. a
+        fault retried it mid-transport), so the station's ``busy`` count
+        can never be corrupted by a stale retirement."""
+        if job not in self.active.get(job.tier, ()):
+            return
+        p = job.payload
+        st = self.stations[job.tier]
+        total, pre = p["service_s"], p["service_prefill_s"]
+        elapsed = max(0.0, t - p["t_serve"])
+        frac = min(1.0, max(0.0, (elapsed - pre) / max(total - pre, 1e-9)))
+        # work done before moving: the WHOLE prefill (migration only happens
+        # post-prefill) plus the decoded fraction
+        dec_f = p.get("service_decode_flops", 0.0)
+        st.flops += (p["service_flops"] - dec_f) + dec_f * frac
+        st.mem_byte_s += p["service_mem"] * (
+            (pre + frac * (total - pre)) / max(total, 1e-9))
+        p.setdefault("preempted", []).append(job.tier)
+        self._active_remove(job.tier, job)
+        self._next_from_queue(t, st)
+
+    def migrate_inject(self, t: float, carrier: Job) -> None:
+        donor = carrier.payload.pop("migration_donor", None)
+        if carrier.record.done:
+            carrier.payload.pop("migration_nbytes", None)
+            return  # the donor finished during the transport window
+        if donor is not None and not donor.record.done:
+            # the injected copy resumes at the donor's exact position on a
+            # fresher tier: retire the donor now (release its server, drop
+            # its stale completion) instead of decoding the tail twice
+            self._release_in_service(t, donor)
+        self.rt.commit_migration(carrier)
+        self.rt._enqueue_service(t, carrier)
+
     # -- cost model ---------------------------------------------------------
 
-    def _service_request(self, job: Job) -> Tuple[float, float, float]:
-        """(service_seconds, flops, mem_byte_s) for one fused inference.
+    def _service_request(self, job: Job) -> Dict[str, float]:
+        """Phase-split cost of one fused inference on ``job.tier``.
 
         Pure function of (request, routes, serving tier) — all accounting
         side effects live with the callers, so it can be re-evaluated (e.g.
-        for a hedged clone on another tier) without double charging.
+        for a hedged clone on another tier) without double charging. The
+        prefill/decode split lets the migration path price a clone that
+        receives the donor's cache rows (decode remainder only).
         """
         req = job.request
         tier = job.tier
@@ -421,7 +664,11 @@ class AnalyticBackend:
                                              + req.decode_tokens)
         mem_byte_s = (cm.weights_bytes(mcfg) / max(tcfg.servers, 1)
                       + kv) * sec
-        return sec, flops, mem_byte_s
+        return {"seconds": sec, "flops": flops, "mem_byte_s": mem_byte_s,
+                "prefill_s": costs["prefill"].seconds,
+                "decode_s": costs["decode"].seconds,
+                "decode_flops": costs["decode"].flops,
+                "context_tokens": float(text_tokens + image_tokens)}
 
     def encode(self, t: float, job: Job) -> None:
         """Partial-offload encode work: every non-image modality routed away
@@ -466,13 +713,24 @@ class AnalyticBackend:
         # compute once per (job, tier) and cache — _on_service_done reads
         # the cached values, so resources are charged exactly once
         if job.payload.get("cost_tier") != job.tier:
-            sec, flops, mem = self._service_request(job)
-            job.payload.update(service_s=sec, service_flops=flops,
-                               service_mem=mem, cost_tier=job.tier)
+            c = self._service_request(job)
+            job.payload.update(service_s=c["seconds"],
+                               service_flops=c["flops"],
+                               service_mem=c["mem_byte_s"],
+                               service_prefill_s=c["prefill_s"],
+                               service_decode_flops=c["decode_flops"],
+                               service_context=c["context_tokens"],
+                               cost_tier=job.tier)
+        job.payload["t_serve"] = t
+        self.active[job.tier].append(job)
         sec = job.payload["service_s"]
         # fault injection: the node serving this job dies mid-flight and the
         # failure is detected after a heartbeat timeout, then retried
-        if st.fail_rate > 0 and self.rng.random() < st.fail_rate:
+        fail = False
+        if st.fail_rate > 0:
+            self.fault_draws += 1  # every service start re-draws the fault
+            fail = self.rng.random() < st.fail_rate
+        if fail:
             detect = 2.0  # heartbeat timeout
             self.rt._push(t + detect, "service_failed", job=job,
                           station=st.name)
@@ -486,9 +744,31 @@ class AnalyticBackend:
             job = st.queue.pop(0)
             self.start_service(t, st, job)
 
+    def _active_remove(self, tier: str, job: Job) -> None:
+        try:
+            self.active[tier].remove(job)
+        except ValueError:
+            pass
+
+    @staticmethod
+    def _drop_stale(job: Job, station: str) -> bool:
+        """True if this completion event belongs to a service the job was
+        migrated away from (one marker per release, so releasing twice —
+        preempt then hedge-retire — drops exactly the two stale events)."""
+        stale = job.payload.get("preempted", [])
+        if station in stale:
+            stale.remove(station)
+            return True
+        return False
+
     def _on_service_failed(self, ev: Event):
         st = self.stations[ev.payload["station"]]
         job: Job = ev.payload["job"]
+        if self._drop_stale(job, ev.payload["station"]):
+            # migrated away mid-service; this station was released at
+            # migration time and the stale completion event is dropped
+            return
+        self._active_remove(ev.payload["station"], job)
         self._next_from_queue(ev.t, st)
         if job.record.done:
             return
@@ -501,6 +781,9 @@ class AnalyticBackend:
         tier = ev.payload["station"]
         st = self.stations[tier]
         job: Job = ev.payload["job"]
+        if self._drop_stale(job, tier):
+            return  # stale event: see _on_service_failed
+        self._active_remove(tier, job)
         self._next_from_queue(ev.t, st)
         if job.record.done:
             return  # the hedged twin finished first
@@ -561,6 +844,7 @@ class LiveBackend:
         self.snapshot_every = snapshot_every
         self.restores = 0  # fault-recovery counter (tests/benchmarks)
         self.offloaded_encodes = 0  # images encoded away from their fusion
+        self.fault_draws = 0  # fault-rng draws (one per engine submission)
         self._inflight: Dict[str, Dict[int, Job]] = {
             t: {} for t in self.engines}
         self._snapshots: Dict[str, dict] = {}
@@ -640,15 +924,26 @@ class LiveBackend:
 
     # -- admission ----------------------------------------------------------
 
+    def _maybe_fault(self, t: float, job: Job, tier: str) -> None:
+        """EVERY submission below the retry limit re-draws the fault rng —
+        including retried ones, which reach this path again through the
+        runtime (they used to be replayed engine-side without a draw,
+        diverging from the analytic backend's per-retry draws), and
+        migrated injections (the analytic carrier re-enters start_service
+        and draws there)."""
+        eng = self.engines[tier]
+        if self.fail_rate > 0 and job.retries < eng.serving.retry_limit:
+            self.fault_draws += 1
+            if self.rng.random() < self.fail_rate:
+                # node dies mid-flight; detected after heartbeat timeout
+                self.rt._push(t + eng.serving.heartbeat_timeout_s,
+                              "node_fault", job=job, tier=tier)
+
     def enqueue(self, t: float, job: Job) -> None:
         tier = job.tier
         eng = self.engines[tier]
         if self.fail_rate > 0:
-            if job.retries < eng.serving.retry_limit \
-                    and self.rng.random() < self.fail_rate:
-                # node dies mid-flight; detected after a heartbeat timeout
-                self.rt._push(t + eng.serving.heartbeat_timeout_s,
-                              "node_fault", job=job, tier=tier)
+            self._maybe_fault(t, job, tier)
             # snapshot cadence (a full host copy of the KV pool) is only
             # paid when faults can actually consume the snapshots
             if len(self._since_snap[tier]) >= self.snapshot_every \
@@ -711,15 +1006,147 @@ class LiveBackend:
         job.retries += 1
         job.in_service = False
         job.record.mark("retry", tier)
+        moved: set = set()
+        if self.rt.migrate:
+            # re-home the snapshot's in-flight slots onto surviving tiers:
+            # their prefilled cache rows ship instead of re-running on the
+            # (likely unhealthy) standby; jobs with no compatible target
+            # stay put
+            for s in list(eng.slots):
+                if s is None:
+                    continue
+                j2 = self._inflight[tier].get(s.rid)
+                if j2 is None or j2 is job or j2.record.done \
+                        or j2.record.migrated:
+                    continue
+                dst = self._rehome_target(tier)
+                if dst is None:
+                    break
+                if self.rt._try_migrate(ev.t, j2, j2, dst, remove=True):
+                    moved.add(s.rid)
         have = {w["rid"] for w in eng.waiting}
         have |= {s.rid for s in eng.slots if s is not None}
+        have |= moved
+        frid = job.request.rid
         replay, self._since_snap[tier] = self._since_snap[tier], []
         for j in replay:
-            if j.record.done or j.request.rid in have:
+            rid = j.request.rid
+            if j.record.done or rid in have or rid == frid:
                 continue
+            have.add(rid)
             j.in_service = False
             self._since_snap[tier].append(j)
             self._engine_submit(eng, tier, j)
+        # the faulted submission itself re-enters through the runtime so the
+        # fault rng is re-drawn for the retry (draw-per-submission parity
+        # with the analytic backend)
+        self.rt._enqueue_service(ev.t, job)
+
+    def _rehome_target(self, src: str) -> Optional[str]:
+        cands = [n for n, e in self.engines.items()
+                 if n != src and self.can_migrate(src, n)
+                 and e._free_slot() is not None]
+        if not cands:
+            return None
+        occ = self.occupancy()
+        return min(cands, key=lambda n: (occ.get(n, 0), n))
+
+    # -- cross-tier KV migration --------------------------------------------
+
+    def can_migrate(self, src: str, dst: str) -> bool:
+        es, ed = self.engines.get(src), self.engines.get(dst)
+        return (src != dst and es is not None and ed is not None
+                and es.cfg.name == ed.cfg.name
+                and es.serving.max_seq == ed.serving.max_seq)
+
+    def occupancy(self) -> Dict[str, int]:
+        return {t: len(e.waiting) + sum(s is not None for s in e.slots)
+                for t, e in self.engines.items()}
+
+    def preempt_candidate(self, tier: str, t: float) -> Optional[Job]:
+        """Decoding slot with the most remaining token budget (never one
+        already hedged or previously migrated)."""
+        eng = self.engines[tier]
+        best, best_key = None, None
+        for s in eng.slots:
+            if s is None:
+                continue
+            j = self._inflight[tier].get(s.rid)
+            if j is None or j.record.done or j.record.migrated or j.hedged:
+                continue
+            rem = s.max_new - len(s.generated)
+            if rem < 2:
+                continue  # about to finish: not worth shipping
+            key = (rem, -s.rid)
+            if best is None or key > best_key:
+                best, best_key = j, key
+        return best
+
+    def migrate_extract(self, t: float, donor: Job, carrier: Job, dst: str,
+                        *, remove: bool = False) -> Optional[float]:
+        """REAL extract: serialize the donor slot through the versioned wire
+        format and ship the actual bytes (the same payload is deserialized
+        and injected on arrival)."""
+        eng = self.engines.get(donor.tier)
+        if eng is None or not eng.healthy:
+            return None
+        try:
+            payload = eng.extract_slot(donor.request.rid, remove=remove)
+        except MigrationError:
+            return None
+        wire = payload.to_bytes()
+        carrier.payload["migration_wire"] = wire
+        if remove:
+            self._inflight[donor.tier].pop(donor.request.rid, None)
+        return float(len(wire))
+
+    def migrate_inject(self, t: float, carrier: Job) -> None:
+        wire = carrier.payload.pop("migration_wire", None)
+        donor = carrier.payload.pop("migration_donor", None)
+        if carrier.record.done:
+            carrier.payload.pop("migration_nbytes", None)
+            return  # the donor finished during the transport window
+        tier = carrier.tier
+        eng = self.engines[tier]
+        try:
+            if wire is None:
+                raise MigrationError("no payload shipped")
+            eng.inject_slot(SlotPayload.from_bytes(wire))
+        except MigrationError:
+            # target full / died mid-transfer: fall back to a fresh prefill
+            # submission on the same tier (still completes, just slower —
+            # the donor keeps decoding so the race survives, and the
+            # request is NOT reported as migrated)
+            carrier.payload.pop("migration_nbytes", None)
+            self.rt._enqueue_service(t, carrier)
+            return
+        self.rt.commit_migration(carrier)
+        if donor is not None:
+            # the injected copy resumes at the donor's exact position on a
+            # fresher tier: retire the donor instead of decoding the tail
+            # twice (it already won if it finished during transport, above)
+            deng = self.engines.get(donor.tier)
+            if deng is not None:
+                deng.cancel(donor.request.rid)
+            self._inflight[donor.tier].pop(donor.request.rid, None)
+        rec = carrier.record
+        rec.mark("enqueue", tier)
+        rec.mark("serve", tier)
+        carrier.in_service = True
+        self._inflight[tier][carrier.request.rid] = carrier
+        if self.fail_rate > 0:
+            # same fault/snapshot discipline as enqueue: make sure this
+            # tier has a snapshot (taken AFTER the injection, so recovery
+            # restores the migrated slot), register the carrier for replay
+            # in case a later fault restores an older snapshot, and let the
+            # migrated service fault like any other submission (the
+            # analytic carrier draws in start_service too)
+            if len(self._since_snap[tier]) >= self.snapshot_every \
+                    or tier not in self._snapshots:
+                self._snapshots[tier] = eng.snapshot()
+                self._since_snap[tier] = []
+            self._since_snap[tier].append(carrier)
+            self._maybe_fault(t, carrier, tier)
 
     # -- driving the engines -----------------------------------------------
 

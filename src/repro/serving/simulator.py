@@ -47,7 +47,9 @@ class ClusterSimulator:
                  acc_model: AccuracyModel = VQAV2,
                  fail_rate: float = 0.0, hedge_after_s: float = 0.0,
                  cloud_servers: int = 4, edge_servers: int = 1,
-                 topology: Optional[ClusterTopology] = None):
+                 topology: Optional[ClusterTopology] = None,
+                 migrate: bool = False, migrate_threshold: int = 0,
+                 hedge_in_service: bool = False):
         self.cfg = sim_cfg
         topo = topology or sim_cfg.topology
         if topo is not None and (edge_servers != 1 or cloud_servers != 4):
@@ -69,7 +71,10 @@ class ClusterSimulator:
             fallback_bandwidth_bps=sim_cfg.bandwidth_bps)
         self.runtime = ClusterRuntime(topo, self.scheduler, policy_name,
                                       self.backend,
-                                      hedge_after_s=hedge_after_s)
+                                      hedge_after_s=hedge_after_s,
+                                      migrate=migrate,
+                                      migrate_threshold=migrate_threshold,
+                                      hedge_in_service=hedge_in_service)
         self.hedge_after_s = hedge_after_s
         # legacy attribute views (None when the topology lacks the name)
         self.edge = self.stations.get("edge")
@@ -151,6 +156,13 @@ class ClusterSimulator:
             "hedged": float(np.mean([o.hedged for o in self.outcomes])),
             "retries": float(np.mean([o.retries for o in self.outcomes])),
         }
+        if self.runtime.migrate:
+            # migration metrics only when the edge is on: the golden
+            # pre-refactor metric KEY SET must stay exact otherwise
+            out["migrated"] = float(np.mean(
+                [o.migrated for o in self.outcomes]))
+            out["migration_bytes"] = float(sum(
+                o.migration_bytes for o in self.outcomes))
         for name, st in self.stations.items():
             out[f"{name}_flops"] = per_flops[name]
             out[f"{name}_mem_byte_s"] = per_mem[name]

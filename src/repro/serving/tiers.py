@@ -55,6 +55,8 @@ class ServedResult:
     truncated: bool = False  # prompt clipped to the engine budget
     hedged: bool = False
     retries: int = 0
+    migrated: bool = False  # KV cache moved across tiers mid-flight
+    migration_bytes: float = 0.0  # slot-payload bytes shipped
 
 
 def build_cluster_engines(topology: ClusterTopology,
@@ -96,7 +98,9 @@ class ClusterServer:
                  scheduler: Optional[MoAOffScheduler] = None,
                  bandwidth_bps: Optional[float] = None, rtt_s: float = 0.02,
                  hedge_after_s: float = 0.0, fail_rate: float = 0.0,
-                 seed: int = 0):
+                 seed: int = 0, migrate: bool = False,
+                 migrate_threshold: int = 0, hedge_in_service: bool = False,
+                 snapshot_every: int = 4):
         self.engines = dict(engines)
         self.topology = topology or _default_topology(
             self.engines, bandwidth_bps if bandwidth_bps is not None
@@ -110,12 +114,15 @@ class ClusterServer:
             policy=make_policy("moa-off", topology=self.topology))
         self.tok = ToyTokenizer()
         self.backend = LiveBackend(self.engines, self.topology,
-                                   fail_rate=fail_rate, seed=seed)
+                                   fail_rate=fail_rate, seed=seed,
+                                   snapshot_every=snapshot_every)
         self.runtime = ClusterRuntime(
             self.topology, self.scheduler,
             getattr(self.scheduler.policy, "name", "moa-off"), self.backend,
             hedge_after_s=hedge_after_s,
-            observed_bandwidth_bps=bandwidth_bps)
+            observed_bandwidth_bps=bandwidth_bps, migrate=migrate,
+            migrate_threshold=migrate_threshold,
+            hedge_in_service=hedge_in_service)
         self._rid = 0
         self._reported = 0  # outcomes already converted to ServedResults
         self.results: List[ServedResult] = []
@@ -182,7 +189,8 @@ class ClusterServer:
                 tokens=list(rec.tokens), latency_s=out.latency_s,
                 wan_s=rec.wan_s, ttft_s=out.ttft_s, on_time=out.on_time,
                 truncated=out.truncated, hedged=out.hedged,
-                retries=out.retries))
+                retries=out.retries, migrated=out.migrated,
+                migration_bytes=out.migration_bytes))
         self._reported = len(outcomes)
         return self.results
 

@@ -4,5 +4,63 @@ import os
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+# one reduced arch per serving-capable model family (encdec is exercised via
+# its own audio pipeline tests) — shared by the migration round-trip suite
+FAMILY_ARCHS = {
+    "dense": "qwen3-0.6b",
+    "vlm": "qwen2-vl-2b",
+    "moe": "qwen3-moe-235b-a22b",
+    "ssm": "mamba2-2.7b",
+    "hybrid": "recurrentgemma-9b",
+}
+
+
+def make_twin_edge_server(sv=None, **kw):
+    """edge-edge-cloud live server: edge/edge1 serve the SAME model
+    (migration-compatible) while cloud serves another (incompatible).
+    Every engine is pre-warmed (prefill bucket + the fused-decode context
+    ladder) so migration timing in tests isn't compile-dominated. Shared by
+    the migration and runtime-parity suites."""
+    import numpy as np
+
+    from repro.config import PolicyConfig, ServingConfig, get_topology
+    from repro.core.baselines import make_policy
+    from repro.core.scheduler import MoAOffScheduler
+    from repro.serving.tiers import ClusterServer, build_cluster_engines
+
+    topo = get_topology("edge-edge-cloud")
+    sv = sv or ServingConfig(max_batch=2, max_seq=192)
+    server = ClusterServer(
+        build_cluster_engines(topo, sv), topology=topo,
+        scheduler=MoAOffScheduler(policy=make_policy(
+            "moa-off", PolicyConfig(adaptive_tau=False), topology=topo)),
+        **kw)
+    for i, eng in enumerate(server.engines.values()):
+        eng.submit(90_000 + i, (np.arange(24) % 300 + 4).astype(np.int32),
+                   max_new=120)
+        eng.run_until_drained()
+    return server
+
+
+@pytest.fixture(scope="session")
+def family_model():
+    """``family -> (cfg, params)`` factory with a session-wide cache, so a
+    family's reduced model is built and initialized at most once per run."""
+    from repro.configs import reduced_config
+    from repro.models import build_model
+
+    cache = {}
+
+    def get(family):
+        if family not in cache:
+            cfg = reduced_config(FAMILY_ARCHS[family]).replace(
+                dtype="float32")
+            model = build_model(cfg)
+            cache[family] = (cfg, model.init(jax.random.PRNGKey(0)))
+        return cache[family]
+
+    return get

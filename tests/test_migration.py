@@ -1,0 +1,435 @@
+"""Cross-tier KV migration: per-slot extract/inject round trips for every
+model family, the versioned wire format's negative paths, and the three
+runtime migrate edges (hedged clones, load-triggered preemption, fault
+re-homing) against live engines — plus the fault-rng redraw regression."""
+import numpy as np
+import pytest
+
+from repro.config import (PolicyConfig, ServingConfig, SimConfig,
+                          get_topology, two_tier_topology)
+from repro.models import build_model
+from repro.serving.engine import (MIGRATION_WIRE_VERSION, MigrationError,
+                                  SlotPayload, TierEngine)
+from repro.serving.simulator import ClusterSimulator, EdgeCloudSimulator
+from repro.serving.tiers import ClusterServer, build_cluster_engines
+
+FAMILIES = ("dense", "vlm", "moe", "ssm", "hybrid")
+
+
+def make_engine(cfg, params, max_batch=3, max_seq=64, fused=8, eos=2):
+    sv = ServingConfig(max_batch=max_batch, max_seq=max_seq,
+                       fused_steps=fused)
+    return TierEngine(build_model(cfg), params, sv, eos_id=eos)
+
+
+def family_jobs(cfg, n=3, max_new=20, seed=0):
+    """n jobs with staggered prompt lengths (bucket-prefill groups them);
+    VLM jobs alternate patch extras to exercise the vision prefix."""
+    rng = np.random.default_rng(seed)
+    jobs = []
+    for rid in range(n):
+        toks = (np.arange(4 + 3 * rid) % 300 + 4).astype(np.int32)
+        extras = {}
+        if cfg.frontend == "vision_stub" and rid % 2 == 0:
+            extras["patches"] = rng.standard_normal(
+                (cfg.num_patches, cfg.frontend_dim)).astype(np.float32)
+        jobs.append((rid, toks, max_new, extras))
+    return jobs
+
+
+def run_reference(cfg, params, jobs, **kw):
+    eng = make_engine(cfg, params, **kw)
+    for rid, toks, max_new, extras in jobs:
+        eng.submit(rid, toks, max_new=max_new, extras=extras)
+    return {s.rid: s.generated for s in eng.run_until_drained()}
+
+
+def roundtrip_tokens(cfg, params, jobs, rid, steps=1, via_bytes=True, **kw):
+    """Admit ``jobs`` on a donor engine (bucket prefill), run ``steps``
+    decode blocks, extract ``rid``'s slot, inject it into a FRESH engine and
+    drain. Returns (continued tokens, donor payload)."""
+    donor = make_engine(cfg, params, **kw)
+    for j, toks, max_new, extras in jobs:
+        donor.submit(j, toks, max_new=max_new, extras=extras)
+    for _ in range(steps):
+        donor.step()
+    payload = donor.extract_slot(rid)
+    if via_bytes:
+        wire = payload.to_bytes()
+        assert payload.nbytes == len(wire)
+        payload = SlotPayload.from_bytes(wire)
+    target = make_engine(cfg, params, **kw)
+    target.inject_slot(payload)
+    done = {s.rid: s.generated for s in target.run_until_drained()}
+    assert target.prefill_tokens == 0  # no second prefill: rows shipped
+    return done[rid], payload
+
+
+# ---------------------------------------------------------------------------
+# round trips: every family, token-for-token identical continued decode
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", [
+    "dense",
+    # the heavier families ride the slow mark to keep the smoke lane fast
+    pytest.param("vlm", marks=pytest.mark.slow),
+    pytest.param("moe", marks=pytest.mark.slow),
+    pytest.param("ssm", marks=pytest.mark.slow),
+    pytest.param("hybrid", marks=pytest.mark.slow),
+])
+def test_roundtrip_every_family(family, family_model):
+    """extract -> wire bytes -> inject into a fresh engine continues the
+    decode token-for-token at temp=0, for a slot that was bucket-prefilled
+    alongside neighbours (dense/vlm pad buckets, ssm/hybrid exact-length
+    groups, moe per-request groups)."""
+    cfg, params = family_model(family)
+    jobs = family_jobs(cfg, n=3)
+    ref = run_reference(cfg, params, jobs)
+    toks, payload = roundtrip_tokens(cfg, params, jobs, rid=1)
+    assert toks == ref[1]
+    assert payload.model == cfg.name and payload.family == cfg.family
+    assert payload.nbytes > 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("steps", [0, 2])
+def test_roundtrip_after_more_blocks(steps, family_model):
+    """Extraction is exact no matter how deep into the decode it happens
+    (0 extra blocks = straight out of the bucketed prefill)."""
+    cfg, params = family_model("dense")
+    jobs = family_jobs(cfg, n=4, max_new=30)
+    ref = run_reference(cfg, params, jobs)
+    toks, _ = roundtrip_tokens(cfg, params, jobs, rid=2, steps=1 + steps)
+    assert toks == ref[2]
+
+
+@pytest.mark.slow
+def test_roundtrip_midstream_eos(family_model):
+    """A migrated slot hits mid-stream EOS at exactly the same token as an
+    uninterrupted run."""
+    cfg, params = family_model("dense")
+    jobs = family_jobs(cfg, n=3, max_new=16)
+    plain = run_reference(cfg, params, jobs)
+    # choose an EOS rid 1 emits AFTER the extraction point (1 admit token +
+    # one fused block of 2) but before its budget — greedy decode repeats
+    # the same prefix, so with that EOS the run truncates exactly there
+    seen = set(plain[1][:4])
+    eos = next(t for t in plain[1][4:] if t not in seen)
+    ref = run_reference(cfg, params, jobs, eos=eos, fused=2)
+    assert ref[1][-1] == eos and len(ref[1]) < 16  # genuinely mid-stream
+    donor = make_engine(cfg, params, eos=eos, fused=2)
+    for rid, toks, max_new, extras in jobs:
+        donor.submit(rid, toks, max_new=max_new, extras=extras)
+    donor.step()  # rid 1 has 3 tokens: still ahead of its EOS
+    payload = SlotPayload.from_bytes(donor.extract_slot(1).to_bytes())
+    target = make_engine(cfg, params, eos=eos, fused=2)
+    target.inject_slot(payload)
+    done = {s.rid: s.generated for s in target.run_until_drained()}
+    assert done[1] == ref[1]
+    assert done[1][-1] == eos and len(done[1]) < 16
+
+
+def test_extract_remove_frees_slot(family_model):
+    cfg, params = family_model("dense")
+    eng = make_engine(cfg, params, max_batch=2)
+    eng.submit(0, np.asarray([4, 5, 6], np.int32), max_new=20)
+    eng.step()
+    eng.extract_slot(0, remove=True)
+    assert all(s is None for s in eng.slots)
+    with pytest.raises(MigrationError):
+        eng.extract_slot(0)  # gone
+    assert eng.run_until_drained() == []  # nothing resurrects
+
+
+# ---------------------------------------------------------------------------
+# negative paths: clear MigrationError, target engine untouched
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def dense_payload(family_model):
+    cfg, params = family_model("dense")
+    eng = make_engine(cfg, params)
+    eng.submit(0, np.asarray([4, 5, 6, 7], np.int32), max_new=20)
+    eng.step()
+    return cfg, params, eng.extract_slot(0)
+
+
+def _assert_untouched(eng):
+    assert all(s is None for s in eng.slots)
+    assert not any(op == "inject" for op, _ in eng.journal)
+
+
+def test_inject_rejects_wrong_wire_version(dense_payload):
+    cfg, params, payload = dense_payload
+    bad = SlotPayload.from_bytes(payload.to_bytes())
+    bad.version = MIGRATION_WIRE_VERSION + 1
+    eng = make_engine(cfg, params)
+    with pytest.raises(MigrationError, match="wire format version"):
+        eng.inject_slot(bad)
+    _assert_untouched(eng)
+
+
+def test_inject_rejects_wrong_model(dense_payload, family_model):
+    _, _, payload = dense_payload
+    vcfg, vparams = family_model("vlm")
+    eng = make_engine(vcfg, vparams)
+    with pytest.raises(MigrationError, match="model-specific"):
+        eng.inject_slot(payload)
+    _assert_untouched(eng)
+
+
+def test_inject_rejects_mismatched_cache_axes(dense_payload):
+    """A payload from a different max_seq has differently-shaped cache rows:
+    rejected up front with the shapes in the message, not a scan crash."""
+    cfg, params, payload = dense_payload
+    eng = make_engine(cfg, params, max_seq=128)  # donor used 64
+    with pytest.raises(MigrationError, match="row shape"):
+        eng.inject_slot(payload)
+    _assert_untouched(eng)
+
+
+def test_inject_rejects_when_full_and_duplicate(dense_payload):
+    cfg, params, payload = dense_payload
+    eng = make_engine(cfg, params, max_batch=1)
+    eng.inject_slot(payload)
+    with pytest.raises(MigrationError, match="already occupies"):
+        eng.inject_slot(payload)
+    other = SlotPayload.from_bytes(payload.to_bytes())
+    other.seq.rid = 7
+    with pytest.raises(MigrationError, match="no free"):
+        eng.inject_slot(other)
+
+
+def test_wire_rejects_garbage_and_truncation(dense_payload):
+    _, _, payload = dense_payload
+    wire = payload.to_bytes()
+    with pytest.raises(MigrationError, match="magic"):
+        SlotPayload.from_bytes(b"NOTKV" + wire[5:])
+    with pytest.raises(MigrationError, match="truncated"):
+        SlotPayload.from_bytes(wire[:len(wire) // 2])
+    with pytest.raises(MigrationError, match="truncated"):
+        SlotPayload.from_bytes(wire[:7])  # cut inside the fixed header
+    # every header malformation surfaces as MigrationError (re-prefill
+    # fallback), never a stray KeyError/ValueError/AttributeError
+    import json as _json
+    import struct as _struct
+    for mutate in (lambda h: h.pop("key"),
+                   lambda h: h["leaves"][0].update(shape=[-2, 4]),
+                   lambda h: h["leaves"][0].update(dtype="float77")):
+        hlen = _struct.unpack_from("<HI", wire, 5)[1]
+        head = _json.loads(wire[11:11 + hlen])
+        mutate(head)
+        blob = _json.dumps(head).encode()
+        bad = (wire[:5] + _struct.pack("<HI", MIGRATION_WIRE_VERSION,
+                                       len(blob)) + blob + wire[11 + hlen:])
+        with pytest.raises(MigrationError):
+            SlotPayload.from_bytes(bad)
+
+
+# ---------------------------------------------------------------------------
+# live runtime: the three migrate edges
+# ---------------------------------------------------------------------------
+
+
+from conftest import make_twin_edge_server as _twin_edge_server  # noqa: E402
+
+
+@pytest.mark.slow
+def test_live_hedged_migration_no_second_prefill():
+    """THE acceptance path: a hedged in-service straggler ships its slot to
+    the compatible twin tier; the winning side finishes every token and the
+    receiving engine's prefill counter proves no second prefill happened."""
+    server = _twin_edge_server(hedge_after_s=0.05, migrate=True)
+    base = {t: e.prefill_tokens for t, e in server.engines.items()}
+    server.submit("please describe this Scene in depth. " * 3,
+                  max_new=100, complexity={"text": 0.05})
+    (res,) = [r for r in server.run() if r.rid == 0]
+    assert res.migrated and res.hedged
+    assert res.migration_bytes > 0
+    assert len(res.tokens) == 100
+    trace = server.runtime.records[0].trace()
+    assert ("migrate", "edge1") in trace  # compatible twin, never cloud
+    # the receiving engine decoded the migrated slot without prefilling
+    assert server.engines["edge1"].prefill_tokens == base["edge1"]
+    assert any(op == "inject" for op, _ in
+               server.engines["edge1"].journal)
+
+
+@pytest.mark.slow
+def test_live_preemption_moves_longest_remaining_slot():
+    sv = ServingConfig(max_batch=1, max_seq=192)
+    server = _twin_edge_server(sv=sv, migrate_threshold=2)
+    server.submit("first long request please run. " * 2, max_new=120,
+                  complexity={"text": 0.05})
+    server.submit("second request queued now. " * 2, max_new=6,
+                  complexity={"text": 0.05}, delay_s=0.12)
+    server.submit("third request triggers preemption. " * 2, max_new=6,
+                  complexity={"text": 0.05}, delay_s=0.24)
+    res = {r.rid: r for r in server.run()}
+    assert len(res) == 3
+    assert res[0].migrated and res[0].tier == "edge1"
+    assert len(res[0].tokens) == 120  # nothing lost crossing tiers
+    trace = server.runtime.records[0].trace()
+    assert ("preempt", "edge") in trace and ("migrate", "edge1") in trace
+    # the freed slot served the queued requests locally
+    assert not res[1].migrated and not res[2].migrated
+
+
+@pytest.mark.slow
+def test_live_fault_rehomes_inflight_slot():
+    """A node fault re-homes the snapshot's in-flight slots onto the
+    surviving compatible tier instead of replaying them on the standby."""
+    sv = ServingConfig(max_batch=2, max_seq=96, heartbeat_timeout_s=0.0,
+                       retry_limit=1)
+    server = _twin_edge_server(sv=sv, fail_rate=1.0, migrate=True,
+                               snapshot_every=0)
+    server.submit("long running request one. " * 2, max_new=60,
+                  complexity={"text": 0.05})
+    server.submit("short follow-up request. " * 2, max_new=6,
+                  complexity={"text": 0.05}, delay_s=0.2)
+    res = {r.rid: r for r in server.run()}
+    assert len(res) == 2
+    assert res[0].migrated and res[0].tier == "edge1"
+    assert len(res[0].tokens) == 60
+    assert server.backend.restores >= 1
+
+
+@pytest.mark.slow
+def test_live_dead_donor_falls_back_to_reprefill():
+    """Donor engine dies between the hedge decision and the extract: the
+    clone re-prefills on the alternate tier and the request still finishes."""
+    server = _twin_edge_server(hedge_after_s=0.05, migrate=True)
+    base = {t: e.prefill_tokens for t, e in server.engines.items()}
+    orig_extract = server.engines["edge"].extract_slot
+
+    def dying_extract(rid, **kw):
+        server.engines["edge"].healthy = False
+        raise MigrationError("donor died mid-extract")
+
+    server.engines["edge"].extract_slot = dying_extract
+    server.submit("please describe this Scene in depth. " * 3,
+                  max_new=100, complexity={"text": 0.05})
+    (res,) = [r for r in server.run() if r.rid == 0]
+    server.engines["edge"].extract_slot = orig_extract
+    assert res.hedged and not res.migrated
+    assert len(res.tokens) == 100
+    # the fallback clone paid a real prefill on the alternate tier
+    deltas = {t: e.prefill_tokens - base[t]
+              for t, e in server.engines.items() if t != "edge"}
+    assert res.tier != "edge1" or deltas["edge1"] > 0
+
+
+def test_live_inject_capacity_fallback(family_model):
+    """A migrated payload arriving at a full engine falls back to a normal
+    (re-prefill) submission via MigrationError — exercised engine-level."""
+    cfg, params = family_model("dense")
+    eng = make_engine(cfg, params, max_batch=1)
+    eng.submit(5, np.asarray([4, 5, 6], np.int32), max_new=30)
+    eng.step()  # slot occupied
+    donor = make_engine(cfg, params, max_batch=1)
+    donor.submit(9, np.asarray([4, 5, 6, 7], np.int32), max_new=30)
+    donor.step()
+    with pytest.raises(MigrationError, match="no free"):
+        eng.inject_slot(donor.extract_slot(9))
+
+
+# ---------------------------------------------------------------------------
+# fault-rng redraw regression (ROADMAP item): draws per SUBMISSION
+# ---------------------------------------------------------------------------
+
+
+def test_live_fault_redraw_per_submission():
+    """Retried submissions re-draw the fault rng (they used to be replayed
+    engine-side without a draw): with fail_rate=1 every submission below the
+    retry limit faults, so retries == retry_limit and draws == retry_limit."""
+    sv = ServingConfig(max_batch=2, max_seq=64, heartbeat_timeout_s=0.0)
+    topo = two_tier_topology()
+    server = ClusterServer(build_cluster_engines(topo, sv), topology=topo,
+                           fail_rate=1.0)
+    server.submit("hello there friend", max_new=4,
+                  complexity={"text": 0.05})
+    (res,) = server.run()
+    limit = sv.retry_limit
+    assert res.retries == limit
+    assert server.backend.fault_draws == limit
+    assert len(res.tokens) >= 1
+
+
+def test_analytic_fault_draw_per_submission():
+    """The analytic backend draws exactly once per service start — the
+    invariant the live fix aligns with."""
+    from repro.data.synthetic import RequestGenerator
+
+    sim = EdgeCloudSimulator(SimConfig(seed=0), cloud_servers=1,
+                             edge_servers=1, fail_rate=0.4)
+    for r in RequestGenerator(seed=0, arrival_rate=2.0).generate(20):
+        sim.submit(r)
+    sim.run()
+    serves = sum(1 for rec in sim.runtime.records.values()
+                 for s, _ in rec.events if s == "serve")
+    assert sim.backend.fault_draws == serves
+    assert any(o.retries > 0 for o in sim.outcomes)  # faults actually fired
+
+
+# ---------------------------------------------------------------------------
+# analytic migration: hedge-migrate populates outcomes + gated metrics
+# ---------------------------------------------------------------------------
+
+
+def test_analytic_preempt_then_hedge_keeps_stations_consistent():
+    """Regression: a preempt-migrated request that later reaches its hedge
+    check must NOT be migrated again (ping-pong) — and whatever happens,
+    every station's busy count returns to zero and every request completes
+    exactly once (the stale-completion markers are per-release, and hedge
+    clones never inherit them)."""
+    from repro.core.request import ModalityInput, Request
+
+    sim = ClusterSimulator(SimConfig(seed=0),
+                           policy_cfg=PolicyConfig(adaptive_tau=False),
+                           topology=get_topology("edge-edge-cloud"),
+                           hedge_after_s=0.3, migrate_threshold=2)
+
+    def req(rid, t, dec):
+        return Request(rid=rid, arrival_s=t, decode_tokens=dec, modalities={
+            "text": ModalityInput("text", complexity=0.05, size_bytes=256,
+                                  meta={"tokens": 64})})
+
+    sim.submit(req(0, 0.0, 2000))  # long: preempted when rid 2 lands
+    sim.submit(req(1, 0.05, 8))
+    sim.submit(req(2, 0.10, 8))
+    out = sim.run()
+    rids = sorted(o.rid for o in out)
+    assert rids == [0, 1, 2]  # each exactly once, none lost
+    (o0,) = [o for o in out if o.rid == 0]
+    assert o0.migrated  # the preemption actually fired
+    trace = sim.runtime.records[0].trace()
+    assert trace.count(("migrate", "edge1")) == 1  # moved once, no bounce
+    for st in sim.backend.stations.values():
+        assert st.busy == 0 and not st.queue  # no leaked servers
+
+
+def test_analytic_hedge_migration_and_gated_metrics():
+    from repro.data.synthetic import RequestGenerator
+
+    sim = ClusterSimulator(SimConfig(seed=0),
+                           policy_cfg=PolicyConfig(adaptive_tau=False),
+                           topology=get_topology("edge-edge-cloud"),
+                           hedge_after_s=0.2, migrate=True)
+    for r in RequestGenerator(seed=0, arrival_rate=5.0).generate(30):
+        sim.submit(r)
+    sim.run()
+    assert len(sim.outcomes) == 30
+    assert sim.runtime.migrations > 0
+    migrated = [o for o in sim.outcomes if o.migrated]
+    assert migrated and all(o.migration_bytes > 0 for o in migrated)
+    m = sim.metrics()
+    assert m["migrated"] == pytest.approx(len(migrated) / 30)
+    # migration keys appear ONLY when the edge is enabled (golden key set)
+    off = ClusterSimulator(SimConfig(seed=0),
+                           topology=get_topology("edge-edge-cloud"))
+    for r in RequestGenerator(seed=0, arrival_rate=5.0).generate(5):
+        off.submit(r)
+    off.run()
+    assert "migrated" not in off.metrics()

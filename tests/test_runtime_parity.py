@@ -1,8 +1,11 @@
 """The unified cluster runtime: pre-refactor golden-metric regression for
-the analytic backend, sim-vs-live lifecycle parity, and the live-only
-capabilities the runtime brings (executed partial offload, streaming
-TTFT/EDF admission, hedging, snapshot/restore fault recovery, prompt
-truncation accounting)."""
+the analytic backend (which also locks that DISABLED migration leaves every
+metric exact to 1e-12), sim-vs-live lifecycle parity — including migration
+lifecycle traces: the same hedged/preempted workload produces identical
+routing + migrate decisions through AnalyticBackend and LiveBackend — and
+the live-only capabilities the runtime brings (executed partial offload,
+streaming TTFT/EDF admission, hedging, snapshot/restore fault recovery,
+prompt truncation accounting)."""
 import copy
 import json
 import os
@@ -13,7 +16,7 @@ import numpy as np
 import pytest
 
 from repro.config import (PolicyConfig, ServingConfig, SimConfig,
-                          two_tier_topology)
+                          get_topology, two_tier_topology)
 from repro.configs import reduced_config
 from repro.core.baselines import make_policy
 from repro.core.scheduler import MoAOffScheduler
@@ -126,6 +129,101 @@ def test_sim_and_live_agree_on_routing_and_lifecycle():
     # streaming bookkeeping exists on the live side
     assert all(res.ttft_s > 0 for res in server.results)
     assert {r.tier for r in server.results} == {"edge", "cloud"}
+
+
+# ---------------------------------------------------------------------------
+# migration lifecycle parity: same workload, same migrate decisions
+# ---------------------------------------------------------------------------
+
+
+from conftest import make_twin_edge_server as _twin_server  # noqa: E402
+
+
+def _twin_sim(**kw):
+    return ClusterSimulator(SimConfig(seed=0),
+                            policy_cfg=PolicyConfig(adaptive_tau=False),
+                            topology=get_topology("edge-edge-cloud"), **kw)
+
+
+def _until(trace, state):
+    """Trace prefix through the first occurrence of ``state`` (timing after
+    the migrate decision — who wins the race — is clock-dependent)."""
+    out = []
+    for ev in trace:
+        out.append(ev)
+        if ev[0] == state:
+            break
+    return tuple(out)
+
+
+@pytest.mark.slow
+def test_sim_and_live_agree_on_hedge_migration():
+    """One straggling all-edge request through both backends: identical
+    routing, and both decide to hedge-migrate its in-service slot to the
+    SAME compatible twin tier (never the incompatible cloud)."""
+    sv = ServingConfig(max_batch=2, max_seq=192)
+    server = _twin_server(sv, hedge_after_s=0.05, migrate=True)
+    req = server.build_request("please describe this Scene in depth. " * 3,
+                               max_new=100,
+                               complexity={"text": 0.05})
+    sim_req = copy.deepcopy(req)
+    sim_req.arrival_s = 5.0
+    server.submit_request(req)
+    server.run()
+    sim = _twin_sim(hedge_after_s=0.05, migrate=True)
+    sim.submit(sim_req)
+    sim.run()
+
+    (live,) = [r for r in server.results if r.rid == req.rid]
+    (ana,) = sim.outcomes
+    assert live.routes == ana.routes == {"text": "edge"}
+    assert live.migrated and ana.migrated
+    assert live.migration_bytes > 0 and ana.migration_bytes > 0
+    lt = server.runtime.records[req.rid].trace()
+    at = sim.runtime.records[req.rid].trace()
+    assert _until(lt, "migrate") == _until(at, "migrate")
+    assert ("migrate", "edge1") in lt  # compatible twin on BOTH backends
+
+
+@pytest.mark.slow
+def test_sim_and_live_agree_on_preemption_decision():
+    """Three staggered all-edge requests: when the third lands, both
+    backends observe occupancy 2 on edge, preempt the long in-service
+    request and migrate it to the idle twin tier."""
+    delays = (0.0, 0.12, 0.24)
+    sv = ServingConfig(max_batch=1, max_seq=192)
+    server = _twin_server(sv, migrate_threshold=2)
+    live_reqs, sim_reqs = [], []
+    for i, d in enumerate(delays):
+        req = server.build_request(
+            f"request number {i} please run now. " * 2,
+            max_new=120 if i == 0 else 6, complexity={"text": 0.05},
+            delay_s=d)
+        sim_req = copy.deepcopy(req)
+        sim_req.arrival_s = 5.0 + d
+        live_reqs.append(req)
+        sim_reqs.append(sim_req)
+        server.submit_request(req)
+    server.run()
+    sim = _twin_sim(migrate_threshold=2)
+    for r in sim_reqs:
+        sim.submit(r)
+    sim.run()
+
+    assert len(server.results) == len(sim.outcomes) == 3
+    sim_out = {o.rid: o for o in sim.outcomes}
+    for res in server.results:
+        assert res.routes == sim_out[res.rid].routes
+        assert res.migrated == sim_out[res.rid].migrated
+    rid0 = live_reqs[0].rid
+    lt = server.runtime.records[rid0].trace()
+    at = sim.runtime.records[rid0].trace()
+    for trace in (lt, at):
+        assert ("preempt", "edge") in trace
+        assert ("migrate", "edge1") in trace
+    assert _until(lt, "migrate") == _until(at, "migrate")
+    # only the long request moved
+    assert server.runtime.migrations == sim.runtime.migrations == 1
 
 
 # ---------------------------------------------------------------------------
