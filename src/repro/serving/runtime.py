@@ -646,16 +646,22 @@ class AnalyticBackend:
         # PARTIAL offloading (§3.2): modalities routed to another tier of a
         # fused request are ENCODED there — only their compact embeddings
         # ride along, so the serving tier never spends prefill FLOPs on
-        # them. The discount belongs to the PLANNED fusion tier only: a
-        # hedged clone running elsewhere has no embeddings waiting for it
-        # and must prefill everything.
+        # them (images included; their encode is charged to the routed
+        # tier's station by ``encode``). The discount belongs to the PLANNED
+        # fusion tier only: a hedged clone running elsewhere has no
+        # embeddings waiting for it and must prefill everything.
         if tier == job.fusion:
             routes = job.decision.routes
-            off_text = sum(cm.modality_tokens(mcfg, m)
-                           for nm, m in req.modalities.items()
-                           if m.kind != "image"
-                           and routes.get(nm, tier) != tier)
+            off_text = off_img = 0
+            for nm, m in req.modalities.items():
+                if routes.get(nm, tier) == tier:
+                    continue
+                if m.kind == "image":
+                    off_img += cm.modality_tokens(mcfg, m)
+                else:
+                    off_text += cm.modality_tokens(mcfg, m)
             text_tokens = max(0, text_tokens - off_text)
+            image_tokens = max(0, image_tokens - off_img)
         costs = cm.request_phase_costs(mcfg, text_tokens, image_tokens,
                                        decode_tokens, tcfg)
         sec = costs["prefill"].seconds + costs["decode"].seconds
@@ -671,15 +677,16 @@ class AnalyticBackend:
                 "context_tokens": float(text_tokens + image_tokens)}
 
     def encode(self, t: float, job: Job) -> None:
-        """Partial-offload encode work: every non-image modality routed away
-        from the fusion tier is charged ONCE, at arrival, to the encoding
-        tier's station counters (the virtual-clock analogue of running the
-        remote encoder)."""
+        """Partial-offload encode work: every modality routed away from the
+        fusion tier is charged ONCE, at arrival, to the encoding tier's
+        station counters (the virtual-clock analogue of running the remote
+        encoder — images included, matching the live backend's executed
+        off-fusion ``encode_image``)."""
         req, fusion = job.request, job.fusion
         routes = job.decision.routes
         for nm, m in req.modalities.items():
             routed = routes.get(nm, fusion)
-            if m.kind == "image" or routed == fusion:
+            if routed == fusion:
                 continue
             enc_cfg = self.models[routed]
             spec = self.specs[routed]
