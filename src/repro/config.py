@@ -279,6 +279,10 @@ class TierSpec(TierConfig):
     uplink_bps: float = 0.0  # 0 -> local tier, no transfer needed
     rtt_s: float = 0.0
     capability: float = 0.0
+    # return path toward the user; 0 -> assume symmetric (== uplink_bps).
+    # Response tokens (and any embeddings coming back from a remote encoder)
+    # are charged on this link by both execution backends.
+    downlink_bps: float = 0.0
 
     @property
     def is_remote(self) -> bool:

@@ -117,6 +117,32 @@ def transfer_seconds(num_bytes: float, bandwidth_bps: float,
     return rtt_s + 8.0 * num_bytes / max(bandwidth_bps, 1.0)
 
 
+# -- return path (downlink) ---------------------------------------------------
+
+#: bytes per generated token riding the downlink back to the user (token ids
+#: / short detokenized text chunks)
+RESPONSE_BYTES_PER_TOKEN = 4.0
+
+
+def downlink_seconds(num_tokens: float, spec) -> float:
+    """Seconds for ``num_tokens`` of response to ride a remote tier's
+    downlink back to the user (0 for local tiers). ``TierSpec.downlink_bps``
+    sizes the return path; 0 falls back to the (usually symmetric) uplink."""
+    if not getattr(spec, "is_remote", False):
+        return 0.0
+    bps = getattr(spec, "downlink_bps", 0.0) or spec.uplink_bps
+    return transfer_seconds(num_tokens * RESPONSE_BYTES_PER_TOKEN, bps,
+                            spec.rtt_s)
+
+
+def embedding_bytes(cfg: ModelConfig) -> float:
+    """Bytes of compact patch embeddings shipped for ONE off-fusion image in
+    the fusion model's geometry (fp32, matching the live backend's
+    ``TierEngine.encode_image`` payload)."""
+    return float((cfg.num_patches or 256)
+                 * (cfg.frontend_dim or cfg.d_model) * 4.0)
+
+
 # -- cross-tier KV migration -------------------------------------------------
 
 #: tier-to-tier fabric when neither side sits behind a WAN uplink (two edge

@@ -92,6 +92,7 @@ class ExecutionBackend(Protocol):
     def tier_loads(self) -> Dict[str, float]: ...
     def queue_depths(self) -> Dict[str, int]: ...
     def score_cost_s(self, policy_name: str) -> float: ...
+    def embed_bytes(self, tier: str) -> float: ...
     def encode(self, t: float, job: Job) -> None: ...
     def enqueue(self, t: float, job: Job) -> None: ...
     def advance(self) -> bool: ...
@@ -216,6 +217,14 @@ class ClusterRuntime:
         if self.specs[fusion].is_remote:
             # the fusion tier's own link carries at minimum the text/prompt
             remote_bytes[fusion] = remote_bytes.get(fusion, 0.0) or 2048.0
+            # embeddings of images encoded AWAY from a remote fusion tier
+            # ride the fusion uplink too (they used to travel free): the
+            # compact patch embeddings must reach the fusion prefill
+            emb = sum(self.backend.embed_bytes(fusion)
+                      for name, m in req.modalities.items()
+                      if m.kind == "image"
+                      and decision.routes.get(name, fusion) != fusion)
+            remote_bytes[fusion] += emb
         job.transfer_bytes = sum(remote_bytes.values())
         if remote_bytes:
             # each remote tier's payload crosses its OWN uplink; the links
@@ -510,6 +519,9 @@ class AnalyticBackend:
     def score_cost_s(self, policy_name: str) -> float:
         return 5e-4 if policy_name.startswith("moa-off") else 0.0
 
+    def embed_bytes(self, tier: str) -> float:
+        return cm.embedding_bytes(self.models[tier])
+
     # -- cross-tier KV migration --------------------------------------------
 
     def can_migrate(self, src: str, dst: str) -> bool:
@@ -801,7 +813,8 @@ class AnalyticBackend:
         st.flops += flops
         st.mem_byte_s += mem
         spec = self.specs[tier]
-        down = spec.rtt_s if spec.is_remote else 0.0
+        # return path: response tokens ride the serving tier's downlink
+        down = cm.downlink_seconds(req.decode_tokens, spec)
         latency = ev.t + down - req.arrival_s
         on_time = latency <= req.slo_s
         correct = self.acc.sample(self.rng, req.difficulty, tier, on_time,
@@ -882,6 +895,9 @@ class LiveBackend:
     def score_cost_s(self, policy_name: str) -> float:
         return 0.0  # the real scoring time already elapsed on the clock
 
+    def embed_bytes(self, tier: str) -> float:
+        return cm.embedding_bytes(self.engines[tier].cfg)
+
     # -- engine callbacks ---------------------------------------------------
 
     def _make_on_admit(self, tier: str):
@@ -893,8 +909,8 @@ class LiveBackend:
         return on_admit
 
     def _make_on_token(self, tier: str):
-        spec_rtt = {t.name: (t.rtt_s if t.is_remote else 0.0)
-                    for t in self.topology.tiers}
+        first_down = {t.name: cm.downlink_seconds(1, t)
+                      for t in self.topology.tiers}
 
         def on_token(rid: int, token: int, t: float):
             job = self._inflight[tier].get(rid)
@@ -904,7 +920,7 @@ class LiveBackend:
             if rec.ttft_s <= 0.0:
                 # first streamed token from ANY attempt; a remote tier's
                 # token must ride the downlink back to the user
-                rec.ttft_s = t - job.request.arrival_s + spec_rtt[tier]
+                rec.ttft_s = t - job.request.arrival_s + first_down[tier]
         return on_token
 
     # -- partial offload ----------------------------------------------------
@@ -1170,7 +1186,8 @@ class LiveBackend:
             job.record.done = True
             job.record.tokens = list(st.generated)
             spec = self.rt.specs[tier]
-            down = spec.rtt_s if spec.is_remote else 0.0
+            # return path: the full response rides the tier's downlink
+            down = cm.downlink_seconds(len(st.generated), spec)
             latency = (st.t_done or now) + down - job.request.arrival_s
             self.rt.finish(job, tier, latency)
             # cancel the losing hedge twin wherever it is

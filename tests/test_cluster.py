@@ -267,3 +267,61 @@ def test_cluster_server_requires_engine_per_tier():
     topo = two_tier_topology()
     with pytest.raises(ValueError):
         ClusterServer({"edge": None}, topology=topo)
+
+
+# ---------------------------------------------------------------------------
+# return-path modeling: embedding uplink + response downlink
+# ---------------------------------------------------------------------------
+
+
+def _split_request(decode_tokens=64):
+    from repro.core.request import ModalityInput, Request
+
+    # easy image (stays on edge) + hard text (goes to cloud): fusion is the
+    # remote cloud, so the edge-encoded image's embeddings must ride the
+    # cloud uplink
+    return Request(rid=0, arrival_s=0.0, modalities={
+        "image": ModalityInput("image", size_bytes=100_000, complexity=0.05,
+                               meta={"h": 64, "w": 64}),
+        "text": ModalityInput("text", size_bytes=128, complexity=0.95,
+                              meta={"tokens": 32, "entities": 2,
+                                    "sentences": 1}),
+    }, decode_tokens=decode_tokens, slo_s=30.0)
+
+
+def test_embeddings_ride_the_remote_fusion_uplink():
+    from repro.serving import cost_model as cm
+
+    sim = EdgeCloudSimulator(SimConfig(seed=0), cloud_servers=1,
+                             edge_servers=1)
+    sim.submit(_split_request())
+    (out,) = sim.run()
+    assert out.routes == {"image": "edge", "text": "cloud"}
+    assert out.served_tier == "cloud"
+    # uplink carries the text payload plus the compact image embeddings in
+    # the fusion model's geometry — NOT the 100 kB raw image
+    want = 128.0 + cm.embedding_bytes(sim.models["cloud"])
+    assert out.transfer_bytes == pytest.approx(want)
+
+
+def test_response_tokens_ride_the_downlink():
+    import dataclasses as dc
+
+    from repro.serving import cost_model as cm
+
+    def run(downlink_bps):
+        topo = two_tier_topology()
+        topo = dc.replace(topo, tiers=tuple(
+            dc.replace(t, downlink_bps=downlink_bps) if t.is_remote else t
+            for t in topo.tiers))
+        sim = ClusterSimulator(SimConfig(seed=0), topology=topo)
+        sim.submit(_split_request(decode_tokens=64))
+        (out,) = sim.run()
+        return out, sim.topology.tier("cloud")
+
+    fast, spec_fast = run(0.0)  # 0 -> symmetric with the uplink
+    slow, spec_slow = run(64 * cm.RESPONSE_BYTES_PER_TOKEN)  # 8 s of payload
+    want = (cm.downlink_seconds(64, spec_slow)
+            - cm.downlink_seconds(64, spec_fast))
+    assert want > 1.0  # the constriction is what we measure
+    assert slow.latency_s - fast.latency_s == pytest.approx(want)
