@@ -390,6 +390,20 @@ class ServingConfig:
     # ``max_seq`` every token; the view is sliced/pasted once per K-token
     # block. Off on the legacy path (which always pays full capacity).
     context_buckets: bool = True
+    # --- prefix & session KV reuse ---
+    # byte budget (MB) of the tier-local prefix store: admitted prompts
+    # deposit their cache rows at bucket-aligned prefix lengths, and a new
+    # prompt extending a stored prefix copies the rows and prefills only
+    # the suffix. 0 disables the store (bit-identical to pre-feature
+    # serving).
+    prefix_cache_mb: float = 0.0
+    # byte budget (MB) of the parked-session store: a finished turn of a
+    # request submitted with a session id parks its slot state
+    # (SlotPayload) so the next turn re-injects and prefills only the new
+    # tokens. LRU-evicted; a miss falls back to a cold full prefill.
+    session_cache_mb: float = 64.0
+    # smallest prefix worth storing/hitting (shorter prompts re-prefill)
+    prefix_min_tokens: int = 16
 
 
 @dataclass(frozen=True)

@@ -22,9 +22,13 @@ from typing import Any, Dict, FrozenSet, List, Optional, Tuple
 MODALITIES = ("image", "text", "audio")
 
 #: canonical lifecycle states, identical across execution backends (the
-#: sim-vs-live parity test compares these traces, timing aside)
-LIFECYCLE = ("arrival", "routed", "encode", "transfer", "enqueue", "serve",
-             "hedged", "retry", "preempt", "migrate", "complete")
+#: sim-vs-live parity test compares these traces, timing aside).
+#: ``sticky``/``session_move`` are session-routing decisions made at
+#: arrival; ``prefix``/``resume`` mark warm (suffix-only) admissions and
+#: ``park`` marks a finished turn's state being retained for the next one.
+LIFECYCLE = ("arrival", "routed", "sticky", "session_move", "encode",
+             "transfer", "enqueue", "prefix", "resume", "serve", "hedged",
+             "retry", "preempt", "migrate", "park", "complete")
 
 
 @dataclass
@@ -49,6 +53,11 @@ class Request:
     # the accuracy model; NOT visible to the policy (it only sees complexity)
     difficulty: float = 0.5
     slo_s: float = 5.0
+    # multi-turn session id: turns of one conversation share it. The runtime
+    # routes a turn sticky-by-default to the tier holding the session's
+    # parked KV, and the serving engine resumes the parked state instead of
+    # re-prefilling the whole history.
+    session: Optional[str] = None
 
     def total_bytes(self) -> int:
         return sum(m.size_bytes for m in self.modalities.values())
@@ -96,6 +105,8 @@ class RequestRecord:
     truncated: bool = False
     migrated: bool = False  # some attempt's KV cache moved across tiers
     migration_bytes: float = 0.0  # total slot-payload bytes shipped
+    warm: str = ""  # "prefix" | "resume" when admitted onto reused KV rows
+    warm_tokens: float = 0.0  # cached tokens whose prefill was skipped
     tokens: List[int] = field(default_factory=list)  # live: streamed tokens
     outcome: Optional["Outcome"] = None
 
@@ -130,11 +141,13 @@ class Job:
     transfer_bytes: float = 0.0
     payload: Dict[str, Any] = field(default_factory=dict)
 
-    #: backend-internal migration bookkeeping that must never leak into a
-    #: hedge clone (a stale ``preempted`` marker would swallow the clone's
-    #: own completion event)
+    #: backend-internal migration/session bookkeeping that must never leak
+    #: into a hedge clone (a stale ``preempted`` marker would swallow the
+    #: clone's own completion event; a clone has no parked rows shipped
+    #: for it, so in-flight session-move state must not ride along)
     _NO_CLONE_KEYS = ("preempted", "migration_wire", "migration_donor",
-                      "migration_nbytes")
+                      "migration_nbytes", "session_wire", "session_parked",
+                      "session_pending")
 
     def clone(self, tier: str) -> "Job":
         payload = {k: v for k, v in self.payload.items()
@@ -166,6 +179,8 @@ class Outcome:
     truncated: bool = False  # prompt clipped to the engine budget (live)
     migrated: bool = False  # KV cache moved across tiers mid-flight
     migration_bytes: float = 0.0  # slot-payload bytes shipped for this request
+    warm: str = ""  # "prefix" | "resume": admitted onto reused KV rows
+    warm_tokens: float = 0.0  # cached tokens whose prefill was skipped
 
     @property
     def edge_flops(self) -> float:

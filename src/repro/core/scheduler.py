@@ -90,6 +90,7 @@ class MoAOffScheduler:
                 bandwidths: Optional[Dict[str, float]] = None,
                 bandwidth_bps: Optional[float] = None,
                 latency_s: Optional[float] = None,
+                parked: Optional[Dict[str, int]] = None,
                 edge_load: Optional[float] = None,
                 cloud_load: Optional[float] = None) -> None:
         """Feed one batch of system observations into the EWMA estimator.
@@ -97,6 +98,8 @@ class MoAOffScheduler:
         The API is dict-based and keyed by tier name: ``loads`` /
         ``queue_depths`` / per-remote-tier ``bandwidths``, plus the scalar
         Eq. 5 WAN ``bandwidth_bps`` and per-request ``latency_s`` feedback.
+        ``parked`` is the cache-affinity signal: parked multi-turn sessions
+        per tier, whose next turns will route sticky to that tier.
         ``edge_load=`` / ``cloud_load=`` are a deprecated two-tier shim kept
         for out-of-tree callers; they fold into ``loads``.
         """
@@ -115,6 +118,8 @@ class MoAOffScheduler:
                 self.estimator.observe_load(tier, load)
         if queue_depths:
             self.estimator.observe_queue_depths(queue_depths)
+        if parked:
+            self.estimator.observe_parked_sessions(parked)
         if bandwidth_bps is not None:
             self.estimator.observe_bandwidth(bandwidth_bps)
         if bandwidths:

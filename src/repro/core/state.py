@@ -43,11 +43,18 @@ class SystemState:
         self.bandwidth_bps = float(bandwidth_bps)
         self.bandwidths: Dict[str, float] = (
             {k: float(v) for k, v in bandwidths.items()} if bandwidths else {})
+        # cache-affinity signal: parked multi-turn sessions per tier (their
+        # next turns will stick there, i.e. near-future load the raw queue
+        # depths don't show yet)
+        self.parked_sessions: Dict[str, int] = {}
 
     # -- per-tier access ----------------------------------------------------
 
     def load(self, tier: str) -> float:
         return self.loads.get(tier, 0.0)
+
+    def parked(self, tier: str) -> int:
+        return self.parked_sessions.get(tier, 0)
 
     def queue_depth(self, tier: str) -> int:
         return self.queue_depths.get(tier, 0)
@@ -134,6 +141,12 @@ class StateEstimator:
         for tier, d in depths.items():
             self.state.queue_depths[tier] = int(d)
 
+    def observe_parked_sessions(self, parked: Dict[str, int]) -> None:
+        """Cache-affinity: parked sessions per tier (instantaneous counts,
+        not smoothed — they are exact, not noisy samples)."""
+        for tier, n in parked.items():
+            self.state.parked_sessions[tier] = int(n)
+
     def observe_latency(self, seconds: float) -> None:
         self._lat_window.append(float(seconds))
 
@@ -145,7 +158,9 @@ class StateEstimator:
 
     def snapshot(self) -> SystemState:
         s = self.state
-        return SystemState(bandwidth_bps=s.bandwidth_bps,
+        snap = SystemState(bandwidth_bps=s.bandwidth_bps,
                            loads=dict(s.loads),
                            queue_depths=dict(s.queue_depths),
                            bandwidths=dict(s.bandwidths))
+        snap.parked_sessions = dict(s.parked_sessions)
+        return snap

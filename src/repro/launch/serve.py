@@ -73,11 +73,34 @@ def main() -> None:
     ap.add_argument("--slo", type=float, default=5.0,
                     help="per-request SLO in seconds (drives EDF admission "
                          "and the on-time/goodput accounting)")
+    ap.add_argument("--prefix-cache-mb", type=float, default=0.0,
+                    help="per-engine prefix store budget in MB: prompts "
+                         "extending a cached prefix (e.g. a shared system "
+                         "prompt) copy its KV rows and prefill only the "
+                         "suffix (0 = off)")
+    ap.add_argument("--sessions", type=int, default=0,
+                    help="serve a multi-turn chat workload instead of "
+                         "single-shot requests: this many sessions of "
+                         "--turns turns each (shared system prompt); a "
+                         "finished turn's KV parks on its tier and the "
+                         "next turn resumes it, prefilling only the new "
+                         "tokens")
+    ap.add_argument("--turns", type=int, default=3,
+                    help="turns per session (with --sessions)")
+    ap.add_argument("--session-move-threshold", type=int, default=0,
+                    help="ship a parked session to the scheduler's "
+                         "preferred compatible tier when the parked tier "
+                         "is this much deeper in occupancy (0 = always "
+                         "sticky)")
+    ap.add_argument("--max-seq", type=int, default=128,
+                    help="engine cache capacity (grow it for long "
+                         "multi-turn histories)")
     args = ap.parse_args()
 
-    sv = ServingConfig(max_batch=args.max_batch, max_seq=128,
+    sv = ServingConfig(max_batch=args.max_batch, max_seq=args.max_seq,
                        fused_steps=args.fused_steps,
-                       decode_impl=args.decode_impl)
+                       decode_impl=args.decode_impl,
+                       prefix_cache_mb=args.prefix_cache_mb)
     topo = get_topology(args.topology)
     if args.bandwidth is not None:
         topo = dataclasses.replace(topo, tiers=tuple(
@@ -88,22 +111,38 @@ def main() -> None:
                            hedge_after_s=args.hedge_after,
                            fail_rate=args.fail_rate, migrate=args.migrate,
                            migrate_threshold=args.migrate_threshold,
-                           hedge_in_service=args.hedge_in_service)
+                           hedge_in_service=args.hedge_in_service,
+                           sessions=args.sessions > 0,
+                           session_move_threshold=args.session_move_threshold)
 
     rng = np.random.default_rng(args.seed)
-    delay = 0.0
-    for i in range(args.requests):
-        u = rng.beta(1.6, 1.6)
-        img = make_image(rng, u, 64, 64)
-        text = (f"Request {i}: describe the Scene {i * 3}. "
-                + "and then explain why it matters. " * rng.integers(1, 12))
-        if args.arrival_rate > 0:
-            delay += rng.exponential(1.0 / args.arrival_rate)
-        server.submit(text, image=img, max_new=args.max_new,
-                      slo_s=args.slo, delay_s=delay)
-
     t0 = time.perf_counter()
-    results = server.run()
+    if args.sessions > 0:
+        system = "you are a Helpful assistant; answer with Care. "
+        for turn in range(args.turns):
+            delay = 0.0
+            for s in range(args.sessions):
+                if args.arrival_rate > 0:
+                    delay += rng.exponential(1.0 / args.arrival_rate)
+                text = (system if turn == 0 else "") + (
+                    f"turn {turn}: tell me more about Topic {s}. ")
+                server.submit_turn(f"chat-{s}", text, max_new=args.max_new,
+                                   slo_s=args.slo, delay_s=delay)
+            server.run()  # turns of one session are sequential
+        results = server.results
+    else:
+        delay = 0.0
+        for i in range(args.requests):
+            u = rng.beta(1.6, 1.6)
+            img = make_image(rng, u, 64, 64)
+            text = (f"Request {i}: describe the Scene {i * 3}. "
+                    + "and then explain why it matters. "
+                    * rng.integers(1, 12))
+            if args.arrival_rate > 0:
+                delay += rng.exponential(1.0 / args.arrival_rate)
+            server.submit(text, image=img, max_new=args.max_new,
+                          slo_s=args.slo, delay_s=delay)
+        results = server.run()
     wall = time.perf_counter() - t0
     per_tier = {}
     for r in results:
@@ -126,6 +165,13 @@ def main() -> None:
         mb = sum(r.migration_bytes for r in results)
         print(f"migrated={mig} requests ({server.runtime.migrations} slot "
               f"moves, {mb / 1e6:.2f} MB of cache rows shipped)")
+    if args.sessions > 0 or args.prefix_cache_mb > 0:
+        resumed = sum(r.warm == "resume" for r in results)
+        hits = sum(r.warm == "prefix" for r in results)
+        saved = sum(r.warm_tokens for r in results)
+        print(f"sessions: {resumed} resumed turns, {hits} prefix hits, "
+              f"{saved:.0f} cached tokens never re-prefilled, "
+              f"{server.runtime.session_moves} parked-state moves")
     dec = sum(e.decode_tokens for e in server.engines.values())
     pre = sum(e.prefill_tokens for e in server.engines.values())
     enc = sum(e.encode_tokens for e in server.engines.values())

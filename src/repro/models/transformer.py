@@ -290,7 +290,27 @@ class DecoderLM:
         q = self._constrain(q, ("batch", "seq", "heads", None))
 
         new_cache = None
-        if mode == "decode":
+        if mode == "chunk":
+            # multi-token decode against the cache ("suffix prefill"): the
+            # S new tokens' KV rows land at consecutive indices after the
+            # per-slot write index (linear placement — full-capacity-pos
+            # families only), and attention masks by absolute position, so
+            # each new token sees the cached prefix plus its causal
+            # predecessors within the chunk. One weights pass for the whole
+            # suffix instead of one per token.
+            bi = jnp.arange(b)
+            widx = idx[:, None] + jnp.arange(s)[None]  # (B,S)
+            kc = lcache["k"].at[bi[:, None], widx].set(
+                k.astype(lcache["k"].dtype))
+            vc = lcache["v"].at[bi[:, None], widx].set(
+                v.astype(lcache["v"].dtype))
+            kr, vr, pr = kc, vc, pos_kv
+            if ctx is not None and ctx < kr.shape[1]:
+                kr, vr, pr = kr[:, :ctx], vr[:, :ctx], pos_kv[:, :ctx]
+            out = attn_mod.attention(q, kr, vr, pos_q, pr, causal=True,
+                                     window=window, impl=self.attn_impl)
+            new_cache = {"k": kc, "v": vc}
+        elif mode == "decode":
             # per-slot write position (continuous batching: slots independent)
             bi = jnp.arange(b)
             if layer is None:
@@ -505,7 +525,8 @@ class DecoderLM:
         cfg = self.cfg
         x = embed(batch["tokens"], params["embed"]).astype(self.dtype)
         prefix = 0
-        if cfg.frontend == "vision_stub" and mode != "decode" and "patches" in batch:
+        if (cfg.frontend == "vision_stub"
+                and mode not in ("decode", "chunk") and "patches" in batch):
             px = jnp.einsum("bpf,fd->bpd",
                             batch["patches"].astype(self.dtype),
                             params["proj_in"])
@@ -519,6 +540,8 @@ class DecoderLM:
         b, s, _ = x.shape
         if mode == "decode":
             positions = batch["positions"][:, None]  # (B,1)
+        elif mode == "chunk":
+            positions = batch["positions"]  # (B,S) absolute suffix positions
         else:
             positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
                                          (b, s))
@@ -677,6 +700,48 @@ class DecoderLM:
         for key, val in layer_caches.items():
             new_cache[key] = val
         logits = unembed(hidden.astype(jnp.float32),
+                         self._unembed_table(params).astype(jnp.float32),
+                         cfg.vocab_size)[:, 0]
+        return logits, new_cache
+
+    def decode_chunk(self, params, cache, batch, ctx=None):
+        """Multi-token decode against the cache — the suffix prefill of a
+        prefix-cache hit / resumed session. batch: tokens (B,S), absolute
+        positions (B,S), optional lengths (B,) true counts for right-padded
+        rows. Returns (last-real-token logits (B,V), cache).
+
+        One weights pass covers the whole suffix; attention masks by
+        absolute position against the cached prefix (and the suffix's own
+        causal order). Only the full-capacity-pos families qualify —
+        writes land linearly after each row's write index, and a padded
+        row's stale tail entries carry positions past its true end, which
+        the CALLER re-masks to -1 (same contract as bucketed prefill).
+        """
+        cfg = self.cfg
+        assert cfg.family in ("dense", "vlm", "moe"), (
+            "decode_chunk needs positionally addressable KV; "
+            f"{cfg.family} carries point-in-time recurrent state")
+        b, s = batch["tokens"].shape
+        bi = jnp.arange(b)
+        new_cache = dict(cache)
+        idx = cache["index"]  # (B,) per-slot write start
+        widx = idx[:, None] + jnp.arange(s)[None]  # (B,S) linear placement
+        new_cache["pos"] = cache["pos"].at[bi[:, None], widx].set(
+            batch["positions"].astype(jnp.int32))
+        cap = cache["pos"].shape[1]
+        new_cache["index"] = ((idx + s) % cap).astype(jnp.int32)
+        cache = dict(cache)
+        cache["pos"] = new_cache["pos"]  # new tokens must see themselves
+        hidden, _, layer_caches, _ = self.forward(params, batch, "chunk",
+                                                  cache, ctx)
+        for key, val in layer_caches.items():
+            new_cache[key] = val
+        if "lengths" in batch:
+            last = batch["lengths"].astype(jnp.int32) - 1  # (B,)
+            hl = hidden[bi, last][:, None]
+        else:
+            hl = hidden[:, -1:]
+        logits = unembed(hl.astype(jnp.float32),
                          self._unembed_table(params).astype(jnp.float32),
                          cfg.vocab_size)[:, 0]
         return logits, new_cache

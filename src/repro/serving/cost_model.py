@@ -95,8 +95,19 @@ def phase_latency(flops: float, hbm_bytes: float, tier: TierConfig,
 
 def request_phase_costs(cfg: ModelConfig, prompt_tokens: int,
                         image_tokens: int, decode_tokens: int,
-                        tier: TierConfig) -> Dict[str, PhaseCost]:
+                        tier: TierConfig,
+                        cached_tokens: int = 0) -> Dict[str, PhaseCost]:
+    """Phase costs of one request. ``cached_tokens`` > 0 is a prefix-cache /
+    resumed-session hit: the leading tokens' KV rows are reused, so the
+    prefill phase pays only the suffix — the quadratic attention discount
+    falls out of the prefix-sum difference (suffix queries still attend the
+    full context). HBM keeps the full-context KV traffic (cached rows are
+    read back; suffix rows are written)."""
     pf = prefill_flops(cfg, prompt_tokens, image_tokens)
+    if cached_tokens > 0:
+        cached = min(int(cached_tokens), max(prompt_tokens + image_tokens - 1,
+                                             0))
+        pf = max(0.0, pf - prefill_flops(cfg, cached))
     pb = 2.0 * _active_params(cfg) + _kv_bytes_per_token(cfg) * (
         prompt_tokens + image_tokens)
     prefill = PhaseCost(pf, pb, phase_latency(pf, pb, tier))

@@ -56,6 +56,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig, ServingConfig
+from repro.serving.prefix import (ParkedSession, PrefixStore, SessionStore,
+                                  extension_suffix, extras_fingerprint,
+                                  prefix_buckets)
 
 # Families whose decode cache is a full-capacity absolute-position buffer:
 # right-padded bucket prefill is exact for them (pad entries are masked via
@@ -85,6 +88,9 @@ class SeqState:
     t_submit: float = 0.0
     t_first_token: Optional[float] = None
     t_done: Optional[float] = None
+    # multi-turn session id: when set, the slot's state is parked into the
+    # engine's session store at finish so the next turn resumes it
+    session: Optional[str] = None
 
 
 # ---------------------------------------------------------------------------
@@ -136,6 +142,12 @@ class SlotPayload:
     position: int
     key: np.ndarray  # per-slot jax.random key data
     leaves: Dict[str, np.ndarray]  # keystr(cache path) -> per-slot row
+    # prompt token ids (session park/resume needs to know exactly which
+    # tokens the cache rows cover); absent on wires from older senders
+    prompt_tokens: Optional[np.ndarray] = None
+    # fingerprint of the prefill extras (vision patches) occupying cache
+    # positions — a resume must present identical extras to reuse the rows
+    extras_fp: bytes = b""
     _wire: Optional[bytes] = field(default=None, repr=False, compare=False)
 
     @property
@@ -159,7 +171,11 @@ class SlotPayload:
                 "generated": list(seq.generated), "max_new": seq.max_new,
                 "done": seq.done, "t_submit": seq.t_submit,
                 "t_first_token": seq.t_first_token, "t_done": seq.t_done,
+                "session": seq.session,
             },
+            "prompt_tokens": (None if self.prompt_tokens is None
+                              else [int(t) for t in self.prompt_tokens]),
+            "extras_fp": self.extras_fp.hex(),
             "key": {"dtype": str(self.key.dtype),
                     "shape": list(self.key.shape)},
             "leaves": [{"name": n, "dtype": str(self.leaves[n].dtype),
@@ -215,11 +231,17 @@ class SlotPayload:
                            max_new=s["max_new"], done=s["done"],
                            t_submit=s["t_submit"],
                            t_first_token=s["t_first_token"],
-                           t_done=s["t_done"])
+                           t_done=s["t_done"],
+                           session=s.get("session"))
+            pt = head.get("prompt_tokens")
             return cls(version=version, model=head["model"],
                        family=head["family"], max_seq=head["max_seq"],
                        seq=seq, position=head["position"], key=key,
-                       leaves=leaves, _wire=bytes(wire))
+                       leaves=leaves,
+                       prompt_tokens=(None if pt is None
+                                      else np.asarray(pt, np.int32)),
+                       extras_fp=bytes.fromhex(head.get("extras_fp", "")),
+                       _wire=bytes(wire))
         except MigrationError:
             raise
         except (KeyError, ValueError, TypeError, OverflowError) as e:
@@ -260,10 +282,22 @@ class TierEngine:
         self.decode_tokens = 0
         self.prefill_tokens = 0
         self.encode_tokens = 0  # encode-only entry point (partial offload)
+        # prefix & session KV reuse counters: tokens whose prefill was
+        # SKIPPED because their cache rows were copied from the prefix
+        # store / a parked session (prefill_tokens counts only suffixes)
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0
+        self.resumed_sessions = 0
+        self.resumed_tokens = 0
+        self.parks = 0
         # cluster-runtime hooks: admission + per-token streaming callbacks
         # (rid, t) and (rid, token, t); None = standalone engine
         self.on_admit: Optional[Callable[[int, float], None]] = None
         self.on_token: Optional[Callable[[int, int, float], None]] = None
+        # warm-admission + session-park hooks: (rid, kind, cached, suffix)
+        # with kind in {"prefix", "resume"}, and (rid, sid)
+        self.on_warm: Optional[Callable[[int, str, int, int], None]] = None
+        self.on_park: Optional[Callable[[int, str], None]] = None
         self._encode_jits: Dict[tuple, Any] = {}
 
         self._decode = jax.jit(model.decode_step)
@@ -276,6 +310,35 @@ class TierEngine:
         self._cache_batch_axis = jax.tree.map(
             lambda a: a.index("batch"), axes,
             is_leaf=lambda x: isinstance(x, tuple))
+        # seq (time) axis per cache leaf, -1 for per-slot state without a
+        # time dimension (recurrent h/conv, pos bookkeeping): the prefix
+        # store slices KV rows along this axis, the same cache_axes walk
+        # extract_slot uses for the batch axis
+        self._cache_seq_axis = jax.tree.map(
+            lambda a: a.index("seq") if "seq" in a else -1, axes,
+            is_leaf=lambda x: isinstance(x, tuple))
+        self._axis_by_name = {
+            jax.tree_util.keystr(pb[0]): (pb[1], ps[1])
+            for pb, ps in zip(
+                jax.tree_util.tree_leaves_with_path(self._cache_batch_axis),
+                jax.tree_util.tree_leaves_with_path(self._cache_seq_axis))}
+        # prefix & session KV reuse: prefixes of admitted prompts are
+        # positionally addressable (sliceable at any boundary) only for the
+        # full-capacity absolute-position families; ssm/hybrid state is a
+        # point-in-time snapshot, so only whole processed sequences park
+        self._sliceable = self.cfg.family in ("dense", "vlm", "moe")
+        self.prefix_store = PrefixStore(serving.prefix_cache_mb * 1e6,
+                                        min_prefix=serving.prefix_min_tokens)
+        self.sessions = SessionStore(serving.session_cache_mb * 1e6)
+        self._slot_prompt: List[Optional[np.ndarray]] = [None] * b
+        self._slot_extras_fp: List[bytes] = [b""] * b
+        self._warm_scan = jax.jit(self._make_warm_scan(),
+                                  donate_argnums=(1,), static_argnums=(4,))
+        max_seq = self.serving.max_seq
+        self._warm_chunk = jax.jit(
+            lambda p, c, batch, teff: model.decode_chunk(
+                p, c, batch, ctx=(teff if teff < max_seq else None)),
+            donate_argnums=(1,), static_argnums=(3,))
         # context buckets need linear cache placement (pos == write index),
         # which holds for the full-capacity-"pos" families only — ring
         # windows (hybrid), recurrent state (ssm) and the encdec cross
@@ -307,6 +370,14 @@ class TierEngine:
         model, K = self.model, self.fused_steps
         temp, eos = float(self.temp), int(self.eos_id)
         max_seq = int(self.serving.max_seq)
+        # ssm/hybrid carry recurrent state (and a ring window whose write
+        # index wraps onto LIVE entries): a dead slot's decode_step would
+        # keep mutating it, corrupting the very rows session parking
+        # extracts at finish. Freeze the whole dead row for those families;
+        # the full-capacity-pos families only need the pos/index freeze
+        # (dead writes land on pos=-1 entries, which reads mask out).
+        freeze_rows = self.cfg.family in ("ssm", "hybrid")
+        bax_tree = self._cache_batch_axis
 
         def fused(params, cache, keys, tokens, positions, budgets, teff):
             ctx = teff if teff < max_seq else None
@@ -331,7 +402,17 @@ class TierEngine:
                 alive2 = (alive & (sampled != eos) & (produced < budgets)
                           & (pos2 + 1 < max_seq))
                 tok2 = jnp.where(alive, sampled, tok)
-                if "pos" in cache2:
+                if freeze_rows:
+                    # keep a dead slot's ENTIRE cache row at its
+                    # time-of-death state (recurrent h/conv + ring KV +
+                    # bookkeeping); rows are small for these families
+                    def keep(new, old, bax):
+                        shape = [1] * new.ndim
+                        shape[bax] = alive.shape[0]
+                        return jnp.where(alive.reshape(shape), new, old)
+
+                    cache2 = jax.tree.map(keep, cache2, cache, bax_tree)
+                elif "pos" in cache2:
                     # freeze write bookkeeping of dead slots: their KV writes
                     # land on a slot whose pos stays -1 (masked), instead of
                     # marching the ring index over live-looking entries
@@ -383,21 +464,72 @@ class TierEngine:
 
         return fn
 
+    def _make_warm_scan(self):
+        """Suffix prefill for prefix-cache hits / resumed sessions: run the
+        model's own ``decode_step`` over the suffix tokens in ONE jitted
+        ``lax.scan`` against a batch-1 cache holding the reused rows.
+
+        This is exact by construction — it is the very path the engine
+        decodes with, so KV/state updates and logits match what a cold full
+        prefill followed by decode would produce (bit-identical for the
+        full-capacity KV families, within fp noise for ssm/hybrid
+        recurrences) — and it costs one host dispatch per suffix instead of
+        one per token. One trace is compiled per (suffix length, context
+        bucket); sliceable families right-pad the suffix to the
+        power-of-two ladder (pad writes land past the true end and are
+        masked via ``pos``, exactly like bucketed prefill pads). ``teff``
+        is the same context-bucket hint fused decode uses: attention reads
+        only the leading ``teff`` cache entries instead of all of
+        ``max_seq``.
+        """
+        model = self.model
+        max_seq = int(self.serving.max_seq)
+
+        def fn(params, cache, tokens, positions, teff):  # (T,), (T,)
+            ctx = teff if teff < max_seq else None
+
+            def body(c, tp):
+                tok, pos = tp
+                logits, c2 = model.decode_step(
+                    params, c, {"tokens": tok[None, None],
+                                "positions": pos[None]}, ctx=ctx)
+                return c2, logits[0]
+
+            cache, logits = jax.lax.scan(body, cache, (tokens, positions))
+            return logits, cache
+
+        return fn
+
+    def _context_bucket(self, needed: int) -> int:
+        """Smallest {2^n, 1.5*2^n} ladder value covering ``needed``
+        positions (each bucket is one cached trace)."""
+        teff = 32
+        while teff < needed:
+            teff = teff * 3 // 2 if teff & (teff - 1) == 0 else teff * 4 // 3
+        return min(teff, self.serving.max_seq)
+
     # ------------------------------------------------------------------
 
     def submit(self, rid: int, tokens: np.ndarray, max_new: int = 32,
                extras: Optional[Dict[str, np.ndarray]] = None,
-               deadline: Optional[float] = None) -> None:
+               deadline: Optional[float] = None,
+               session: Optional[str] = None) -> None:
         """Queue a prompt. ``deadline`` (monotonic seconds) enables
         EDF-ordered admission: the waiting queue is drained
-        earliest-deadline-first instead of FIFO."""
+        earliest-deadline-first instead of FIFO. ``session`` names a
+        multi-turn session: the finished turn's slot state is parked so a
+        later turn whose prompt extends this conversation resumes it
+        (prefilling only the new tokens) instead of re-prefilling the whole
+        history."""
         self.journal.append(("submit", {"rid": rid, "tokens": tokens,
                                         "max_new": max_new,
                                         "extras": extras,
-                                        "deadline": deadline}))
+                                        "deadline": deadline,
+                                        "session": session}))
         self.waiting.append({"rid": rid, "tokens": np.asarray(tokens),
                              "max_new": max_new, "extras": extras or {},
-                             "deadline": deadline, "t": time.monotonic()})
+                             "deadline": deadline, "session": session,
+                             "t": time.monotonic()})
 
     def cancel(self, rid: int) -> bool:
         """Abort a request wherever it is (waiting or mid-decode). The
@@ -426,6 +558,23 @@ class TierEngine:
         for (path, leaf), bax in zip(flat, axes):
             yield jax.tree_util.keystr(path), leaf, bax
 
+    def _slot_payload(self, slot: int) -> SlotPayload:
+        """Serialize slot ``slot``'s full migratable state (cache rows,
+        SeqState, position, sampling key, prompt tokens). The rows stay
+        DEVICE-resident (``jnp.take`` copies out of the donated pool); the
+        wire format converts to host bytes lazily, so a payload parked and
+        resumed on the same tier never round-trips through the host."""
+        leaves = {name: jnp.take(leaf, slot, axis=bax)
+                  for name, leaf, bax in self._leaf_rows()}
+        return SlotPayload(
+            version=MIGRATION_WIRE_VERSION, model=self.cfg.name,
+            family=self.cfg.family, max_seq=self.serving.max_seq,
+            seq=self._copy_seq(self.slots[slot]),
+            position=int(self.positions[slot]),
+            key=np.asarray(self._keys[slot]), leaves=leaves,
+            prompt_tokens=self._slot_prompt[slot],
+            extras_fp=self._slot_extras_fp[slot])
+
     def extract_slot(self, rid: int, *, remove: bool = False) -> SlotPayload:
         """Serialize one request's migratable state (see ``SlotPayload``).
         ``remove=True`` frees the slot (preemption / re-homing); the default
@@ -435,14 +584,7 @@ class TierEngine:
         if slot is None:
             raise MigrationError(
                 f"rid {rid} holds no decode slot on this engine")
-        leaves = {name: np.asarray(jnp.take(leaf, slot, axis=bax))
-                  for name, leaf, bax in self._leaf_rows()}
-        payload = SlotPayload(
-            version=MIGRATION_WIRE_VERSION, model=self.cfg.name,
-            family=self.cfg.family, max_seq=self.serving.max_seq,
-            seq=self._copy_seq(self.slots[slot]),
-            position=int(self.positions[slot]),
-            key=np.asarray(self._keys[slot]), leaves=leaves)
+        payload = self._slot_payload(slot)
         if remove:
             self.slots[slot] = None  # KV rows overwritten on the next admit
         self.journal.append(("extract", {"rid": rid, "removed": remove}))
@@ -498,8 +640,292 @@ class TierEngine:
         self.slots[slot] = self._copy_seq(payload.seq)
         self.positions[slot] = payload.position
         self._keys = self._keys.at[slot].set(jnp.asarray(payload.key))
+        self._slot_prompt[slot] = (None if payload.prompt_tokens is None
+                                   else np.asarray(payload.prompt_tokens))
+        self._slot_extras_fp[slot] = payload.extras_fp
         self.journal.append(("inject", {"rid": payload.seq.rid, "slot": slot}))
         return slot
+
+    # -- prefix & session KV reuse -----------------------------------------
+
+    def _job_fp(self, job: Dict[str, Any]) -> bytes:
+        """Extras fingerprint of a waiting job, computed once and cached."""
+        fp = job.get("_fp")
+        if fp is None:
+            fp = extras_fingerprint(job["extras"])
+            job["_fp"] = fp
+        return fp
+
+    def _rows_compatible(self, rows: Dict[str, np.ndarray]) -> bool:
+        """True when ``rows`` (keystr -> per-slot row) matches this engine's
+        cache geometry exactly (same leaves, shapes and dtypes)."""
+        expect = {name: (leaf, bax) for name, leaf, bax in self._leaf_rows()}
+        if set(rows) != set(expect):
+            return False
+        for name, (leaf, bax) in expect.items():
+            want = leaf.shape[:bax] + leaf.shape[bax + 1:]
+            row = rows[name]
+            if (tuple(row.shape) != tuple(want)
+                    or str(row.dtype) != str(leaf.dtype)):
+                return False
+        return True
+
+    def _payload_resumable(self, p: SlotPayload) -> bool:
+        return (p.version == MIGRATION_WIRE_VERSION
+                and p.model == self.cfg.name
+                and p.family == self.cfg.family
+                and p.max_seq == self.serving.max_seq
+                and self._rows_compatible(p.leaves))
+
+    @staticmethod
+    def _payload_tokens(p: SlotPayload) -> Optional[np.ndarray]:
+        """The tokens a payload's cache rows cover: the prompt plus every
+        generated token except the last (sampled but never fed)."""
+        if p.prompt_tokens is None:
+            return None
+        prompt = np.asarray(p.prompt_tokens, np.int32)
+        gen = np.asarray(p.seq.generated[:-1], np.int32)
+        return np.concatenate([prompt, gen]) if gen.size else prompt
+
+    def park_session(self, rid: int, sid: Optional[str] = None) -> bool:
+        """Mark a queued or in-flight request so its slot state parks under
+        ``sid`` when it finishes (``submit(session=...)`` does this up
+        front). Returns False when the rid is unknown or no sid is set."""
+        for j in self.waiting:
+            if j["rid"] == rid:
+                j["session"] = sid or j.get("session")
+                return j["session"] is not None
+        for s in self.slots:
+            if s is not None and s.rid == rid:
+                s.session = sid or s.session
+                return s.session is not None
+        return False
+
+    def resume_session(self, sid: str) -> Optional[ParkedSession]:
+        """Pop a parked session (the caller consumes its rows). Admission
+        does this internally; it is public for cross-tier moves."""
+        return self.sessions.resume(sid)
+
+    def adopt_session(self, sid: str, payload: SlotPayload) -> bool:
+        """Install a session payload parked on ANOTHER engine (the sticky
+        router moved it here). Incompatible payloads are refused — the next
+        turn then falls back to a cold prefill."""
+        if not self._payload_resumable(payload):
+            return False
+        tokens = self._payload_tokens(payload)
+        if tokens is None:
+            return False
+        nbytes = sum(v.nbytes for v in payload.leaves.values())
+        ok = self.sessions.park(sid, ParkedSession(
+            tokens=tokens, extras_fp=payload.extras_fp,
+            nbytes=float(nbytes), data=payload))
+        if ok:
+            self.journal.append(("adopt", {"sid": sid}))
+        return ok
+
+    def _park(self, slot: int, st: SeqState) -> None:
+        """Park a finishing slot's state under its session id (called from
+        ``_finish_slot`` while the cache rows are still intact)."""
+        if not st.session or not self.sessions.enabled:
+            return
+        if self._slot_prompt[slot] is None:
+            return  # injected without prompt tokens: nothing to match later
+        payload = self._slot_payload(slot)
+        tokens = self._payload_tokens(payload)
+        nbytes = sum(v.nbytes for v in payload.leaves.values())
+        ok = self.sessions.park(st.session, ParkedSession(
+            tokens=tokens, extras_fp=self._slot_extras_fp[slot],
+            nbytes=float(nbytes), data=payload))
+        if ok:
+            self.parks += 1
+            self.journal.append(("park", {"rid": st.rid, "sid": st.session}))
+            if self.on_park is not None:
+                self.on_park(st.rid, st.session)
+
+    def _warm_plan(self, job: Dict[str, Any]) -> Optional[Dict[str, Any]]:
+        """Reuse plan for a waiting job: a parked session its prompt
+        extends, else a stored prefix it extends; None means cold prefill.
+        ``rows``/``start`` describe the cache state to re-inject;
+        ``time_len`` is set when ``rows`` are seq-sliced pieces that must be
+        pasted into zeroed full-capacity rows."""
+        tokens = np.asarray(job["tokens"])
+        cap = self.serving.max_seq
+        sid = job.get("session")
+        if sid and self.sessions.enabled:
+            parked = self.sessions.peek(sid)
+            if parked is not None and parked.extras_fp == self._job_fp(job):
+                suffix = extension_suffix(parked.tokens, tokens)
+                p = parked.data
+                if (suffix is not None and isinstance(p, SlotPayload)
+                        and self._payload_resumable(p)
+                        and p.position + len(suffix) + 1 < cap):
+                    self.sessions.resume(sid)  # rows consumed by this turn
+                    # cached counts the cache POSITIONS reused (vision
+                    # prefix included) — the same accounting the analytic
+                    # backend's context-token mirror reports
+                    return {"kind": "resume", "rows": p.leaves,
+                            "start": p.position, "time_len": None,
+                            "suffix": suffix, "cached": p.position}
+        if self.prefix_store.enabled:
+            e = self.prefix_store.lookup(tokens, self._job_fp(job))
+            if e is None:
+                return None
+            suffix = np.asarray(tokens[len(e.tokens):])
+            if e.sliceable:
+                vis = self._prompt_prefix(job["extras"])
+                start = vis + len(e.tokens)
+                if start + len(suffix) + 1 < cap:
+                    return {"kind": "prefix", "rows": e.data, "start": start,
+                            "time_len": start, "suffix": suffix,
+                            "cached": start}
+            else:
+                start = int(e.data["position"])
+                rows = e.data["rows"]
+                if (self._rows_compatible(rows)
+                        and start + len(suffix) + 1 < cap):
+                    return {"kind": "prefix", "rows": rows, "start": start,
+                            "time_len": None, "suffix": suffix,
+                            "cached": start}
+        return None
+
+    def _admit_warm_hits(self) -> None:
+        i = 0
+        while i < len(self.waiting):
+            slot = self._free_slot()
+            if slot is None:
+                return
+            job = self.waiting[i]
+            plan = self._warm_plan(job)
+            if plan is None:
+                i += 1
+                continue
+            del self.waiting[i]
+            self._admit_warm(job, slot, plan)
+
+    def _admit_warm(self, job: Dict[str, Any], slot: int,
+                    plan: Dict[str, Any]) -> None:
+        """Copy reused cache rows into a batch-1 cache, prefill ONLY the
+        suffix through the jitted decode scan, and scatter the result into
+        ``slot``. ``prefill_tokens`` moves by the suffix length alone."""
+        cap = self.serving.max_seq
+        rows = plan["rows"]
+        t_len = plan["time_len"]
+        start = int(plan["start"])
+        suffix = np.asarray(plan["suffix"], np.int32)
+
+        def build(path, leaf):
+            name = jax.tree_util.keystr(path)
+            bax, sax = self._axis_by_name[name]
+            shape = leaf.shape[:bax] + leaf.shape[bax + 1:]
+            row = rows.get(name)
+            if row is not None and tuple(row.shape) == tuple(shape):
+                # explicit COPY: cache1 is donated to the suffix-prefill
+                # jit, and a store-held row must survive its admission
+                # (non-sliceable prefix entries are reused across hits)
+                out = jnp.array(row, leaf.dtype)
+            elif row is not None:  # seq-sliced piece -> paste into zeros
+                rsax = sax - (1 if sax > bax else 0)
+                sl = [slice(None)] * len(shape)
+                sl[rsax] = slice(0, row.shape[rsax])
+                out = jnp.zeros(shape, leaf.dtype).at[tuple(sl)].set(
+                    jnp.asarray(row, leaf.dtype))
+            elif name == "['pos']":  # synthesized: linear placement
+                pos = np.full(shape, -1, np.int32)
+                pos[:t_len] = np.arange(t_len, dtype=np.int32)
+                out = jnp.asarray(pos)
+            elif name == "['index']":
+                out = jnp.asarray(t_len % cap, jnp.int32)
+            else:  # unreachable for known caches; keep the walk total
+                out = jnp.zeros(shape, leaf.dtype)
+            return jnp.expand_dims(out, bax)
+
+        cache1 = jax.tree_util.tree_map_with_path(build, self.cache)
+        n = len(suffix)
+        total = start + n
+        np_ = n
+        if self._sliceable:
+            # pad to the power-of-two ladder (bounds traces, like bucketed
+            # prefill); pad writes land past the true end and are re-masked
+            np_ = min(_next_bucket(n, lo=8), cap - start)
+        toks = np.full((np_,), suffix[-1], np.int32)
+        toks[:n] = suffix
+        positions = start + np.arange(np_, dtype=np.int32)
+        teff = (self._context_bucket(start + np_ + 1) if self._ctx_buckets
+                else self.serving.max_seq)
+        if self._sliceable:
+            # ONE multi-token pass over the suffix (a weights pass per
+            # suffix, not per token): decode_chunk writes the S new KV
+            # rows and attends the reused prefix by absolute position
+            batch = {"tokens": jnp.asarray(toks[None]),
+                     "positions": jnp.asarray(positions[None])}
+            if np_ > n:
+                batch["lengths"] = jnp.asarray([n], jnp.int32)
+            logits1, cache1 = self._warm_chunk(self.params, cache1, batch,
+                                               teff)
+            first_logits = np.asarray(logits1)[0]
+        else:
+            # point-in-time state families step their own decode path over
+            # the exact suffix (recurrent state admits no padding)
+            logits_all, cache1 = self._warm_scan(self.params, cache1,
+                                                 jnp.asarray(toks),
+                                                 jnp.asarray(positions),
+                                                 teff)
+            first_logits = np.asarray(logits_all)[n - 1]
+        if np_ > n and "pos" in cache1:
+            cache1 = dict(cache1)
+            cache1["pos"] = jnp.where(cache1["pos"] < total,
+                                      cache1["pos"], -1)
+            cache1["index"] = jnp.full_like(cache1["index"], total % cap)
+        self._insert_cache(cache1, slot)
+        self._start_seq(job, slot, total, first_logits,
+                        prefill_count=n,
+                        warm=(plan["kind"], int(plan["cached"])))
+
+    def _store_prefixes(self, slot: int, job: Dict[str, Any]) -> None:
+        """Deposit a just-admitted slot's cache rows into the prefix store
+        at bucket-aligned prefix lengths (sliceable families) or the exact
+        processed length (ssm/hybrid point-in-time state)."""
+        if not self.prefix_store.enabled:
+            return
+        tokens = np.asarray(job["tokens"])
+        vis = self._prompt_prefix(job["extras"])
+        if vis + len(tokens) > self.serving.max_seq:
+            return  # rolled/truncated cache rows don't map to positions
+        fp = self._job_fp(job)
+        store = self.prefix_store
+        if not self._sliceable:
+            if store.contains(tokens, fp):
+                return
+            rows = {name: np.asarray(jnp.take(leaf, slot, axis=bax))
+                    for name, leaf, bax in self._leaf_rows()}
+            nb = float(sum(r.nbytes for r in rows.values()))
+            store.insert(tokens, fp, nb,
+                         {"rows": rows, "position": int(vis + len(tokens))},
+                         sliceable=False)
+            return
+        need = [L for L in prefix_buckets(len(tokens), store.min_prefix)
+                if not store.contains(tokens[:L], fp)]
+        if not need:
+            return
+        # rows stay device-resident: jnp.take copies out of the (donated)
+        # pool and the bucket slices are device slices — depositing a
+        # prefix never round-trips the KV through the host
+        rows = {name: jnp.take(leaf, slot, axis=bax)
+                for name, leaf, bax in self._leaf_rows()
+                if name not in ("['pos']", "['index']")}
+        for L in need:
+            t_len = vis + L
+            data = {}
+            nb = 0.0
+            for name, row in rows.items():
+                bax, sax = self._axis_by_name[name]
+                rsax = sax - (1 if sax > bax else 0)
+                sl = [slice(None)] * row.ndim
+                sl[rsax] = slice(0, t_len)
+                piece = row[tuple(sl)]
+                nb += piece.nbytes
+                data[name] = piece
+            store.insert(tokens[:L], fp, nb, data, sliceable=True)
 
     def encode_image(self, image: np.ndarray, num_patches: int = 0,
                      frontend_dim: int = 0) -> np.ndarray:
@@ -548,22 +974,48 @@ class TierEngine:
                                   self._cache_batch_axis)
 
     def _start_seq(self, job: Dict[str, Any], slot: int, prompt_len: int,
-                   first_logits: np.ndarray) -> None:
-        """Shared admit bookkeeping: first token, done-check, journal."""
+                   first_logits: np.ndarray,
+                   prefill_count: Optional[int] = None,
+                   warm: Optional[tuple] = None) -> None:
+        """Shared admit bookkeeping: first token, done-check, journal.
+        ``prefill_count`` overrides the prefill-token charge (a warm admit
+        prefilled only its suffix); ``warm`` = (kind, cached_tokens) tags
+        prefix-hit / resumed-session admissions."""
         st = SeqState(rid=job["rid"], prompt_len=prompt_len,
-                      max_new=job["max_new"], t_submit=job["t"])
+                      max_new=job["max_new"], t_submit=job["t"],
+                      session=job.get("session"))
+        self._slot_prompt[slot] = np.asarray(job["tokens"], np.int32)
+        self._slot_extras_fp[slot] = (
+            self._job_fp(job)
+            if (st.session and self.sessions.enabled)
+            or self.prefix_store.enabled else b"")
         first = self._sample(first_logits)
         st.generated.append(int(first))
         st.t_first_token = time.monotonic()
         self.slots[slot] = st
         self.positions[slot] = prompt_len
-        self.prefill_tokens += prompt_len
+        charged = prompt_len if prefill_count is None else prefill_count
+        self.prefill_tokens += charged
         self.decode_tokens += 1
+        if warm is not None:
+            kind, cached = warm
+            if kind == "resume":
+                self.resumed_sessions += 1
+                self.resumed_tokens += cached
+            else:
+                self.prefix_hits += 1
+                self.prefix_hit_tokens += cached
+            self.journal.append(("warm", {"rid": st.rid, "kind": kind,
+                                          "cached": cached,
+                                          "suffix": charged}))
+            if self.on_warm is not None:
+                self.on_warm(st.rid, kind, cached, charged)
         self.journal.append(("admit", {"rid": st.rid, "slot": slot}))
         if self.on_admit is not None:
             self.on_admit(st.rid, st.t_first_token)
         if self.on_token is not None:
             self.on_token(st.rid, int(first), st.t_first_token)
+        self._store_prefixes(slot, job)
         # a request may be complete straight out of prefill (EOS first
         # token, max_new == 1, or a prompt already at capacity)
         if (first == self.eos_id or len(st.generated) >= st.max_new
@@ -574,6 +1026,7 @@ class TierEngine:
         st = self.slots[slot]
         st.done = True
         st.t_done = now
+        self._park(slot, st)  # while the slot's cache rows are intact
         self.finished.append(st)
         self.journal.append(("finish", {"rid": st.rid}))
         self.slots[slot] = None
@@ -592,6 +1045,12 @@ class TierEngine:
             self.waiting.sort(key=lambda j: (
                 j["deadline"] if j.get("deadline") is not None
                 else float("inf"), j["t"]))
+        # warm admissions first (EDF order within them): a prompt extending
+        # a parked session or a stored prefix copies the cached rows and
+        # prefills only its suffix; everything else falls through cold
+        if self.waiting and (self.sessions.enabled
+                             or self.prefix_store.enabled):
+            self._admit_warm_hits()
         if self.fused_steps <= 1 or not self.serving.bucket_prefill:
             self._admit_legacy()
         else:
@@ -703,11 +1162,8 @@ class TierEngine:
             # smallest bucket covering every position the block can write;
             # ladder = {2^n, 1.5*2^n} so the attended width tracks the live
             # context within ~33% (each bucket is one cached trace)
-            needed = int(positions.max()) + self.fused_steps + 1
-            teff = 32
-            while teff < needed:
-                teff = teff * 3 // 2 if teff & (teff - 1) == 0 else teff * 4 // 3
-            teff = min(teff, self.serving.max_seq)
+            teff = self._context_bucket(
+                int(positions.max()) + self.fused_steps + 1)
         block, self.cache, self._keys = self._fused(
             self.params, self.cache, self._keys, jnp.asarray(tokens),
             jnp.asarray(positions), jnp.asarray(budgets), teff)
@@ -794,6 +1250,9 @@ class TierEngine:
             "waiting": list(self.waiting),
             "steps": self.steps,
             "keys": np.asarray(self._keys),
+            "slot_prompt": [None if p is None else p.copy()
+                            for p in self._slot_prompt],
+            "slot_fp": list(self._slot_extras_fp),
         }
 
     def restore(self, snap: dict) -> None:
@@ -804,5 +1263,10 @@ class TierEngine:
         self.steps = snap["steps"]
         if "keys" in snap:
             self._keys = jnp.asarray(snap["keys"])
+        b = len(self.slots)
+        self._slot_prompt = [None if p is None else p.copy()
+                             for p in snap.get("slot_prompt",
+                                               [None] * b)]
+        self._slot_extras_fp = list(snap.get("slot_fp", [b""] * b))
         self.healthy = True
         self.last_heartbeat = time.monotonic()

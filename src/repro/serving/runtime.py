@@ -26,11 +26,12 @@ sim-vs-live parity test compares timing-aside.
 """
 from __future__ import annotations
 
+import dataclasses
 import heapq
 import itertools
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Protocol
+from typing import Callable, Dict, List, Optional, Protocol, Tuple
 
 import numpy as np
 
@@ -39,6 +40,8 @@ from repro.core.request import Job, Outcome, Request, RequestRecord
 from repro.core.scheduler import MoAOffScheduler
 from repro.serving import cost_model as cm
 from repro.serving.engine import MigrationError, SlotPayload
+from repro.serving.prefix import (ParkedSession, PrefixStore, SessionStore,
+                                  extras_fingerprint, prefix_buckets)
 
 
 @dataclass(order=True)
@@ -103,6 +106,12 @@ class ExecutionBackend(Protocol):
     def migrate_extract(self, t: float, donor: Job, carrier: Job, dst: str,
                         *, remove: bool = False) -> Optional[float]: ...
     def migrate_inject(self, t: float, carrier: Job) -> None: ...
+    # -- sessions (sticky routing + parked-state moves) --
+    def session_tier(self, sid: str) -> Optional[str]: ...
+    def session_extract(self, t: float, job: Job, src: str
+                        ) -> Optional[float]: ...
+    def session_install(self, t: float, job: Job) -> None: ...
+    def parked_sessions(self) -> Dict[str, int]: ...
 
 
 class ClusterRuntime:
@@ -112,7 +121,8 @@ class ClusterRuntime:
                  policy_name: str, backend, hedge_after_s: float = 0.0,
                  observed_bandwidth_bps: Optional[float] = None,
                  migrate: bool = False, migrate_threshold: int = 0,
-                 hedge_in_service: bool = False):
+                 hedge_in_service: bool = False, sessions: bool = False,
+                 session_move_threshold: int = 0):
         self.topology = topology
         self.scheduler = scheduler
         self.policy_name = policy_name
@@ -132,6 +142,14 @@ class ClusterRuntime:
         # the benchmark's "hedge path with vs without migration" comparison.
         self.hedge_in_service = bool(hedge_in_service) or self.migrate
         self.migrations = 0  # successful cross-tier slot migrations
+        # multi-turn sessions: turns route sticky-by-default to the tier
+        # holding the session's parked KV; ``session_move_threshold`` > 0
+        # instead SHIPS the parked payload to the scheduler's preferred
+        # compatible tier when the parked tier is that much busier
+        # (occupancy difference), falling back to sticky/cold otherwise.
+        self.sessions = bool(sessions)
+        self.session_move_threshold = int(session_move_threshold)
+        self.session_moves = 0
         self.specs: Dict[str, TierSpec] = {t.name: t for t in topology.tiers}
         self.links: Dict[str, Station] = {
             t.name: Station(f"link:{t.name}", 1)
@@ -146,6 +164,7 @@ class ClusterRuntime:
             "transfer_done": self._on_transfer_done,
             "hedge_check": self._on_hedge_check,
             "migrate_done": self._on_migrate_done,
+            "session_done": self._on_session_done,
         }
         backend.bind(self)
         self.handlers.update(backend.handlers())
@@ -174,7 +193,9 @@ class ClusterRuntime:
             loads=self.backend.tier_loads(),
             bandwidth_bps=wan,
             bandwidths={t.name: t.uplink_bps for t in remote},
-            queue_depths=self.backend.queue_depths())
+            queue_depths=self.backend.queue_depths(),
+            parked=(self.backend.parked_sessions()
+                    if self.sessions else None))
 
     # -- lifecycle: arrival ------------------------------------------------
 
@@ -193,9 +214,50 @@ class ClusterRuntime:
         # the real scoring time just elapsed on the monotonic clock.
         score_cost = self.backend.score_cost_s(self.policy_name)
         fusion = self.topology.fusion_tier(decision.routes)
+        # session affinity: a turn of a parked session serves WHERE the
+        # parked KV lives (sticky-by-default) — unless the parked tier is
+        # ``session_move_threshold`` occupancy deeper than the scheduler's
+        # pick AND the payload can move (same model), in which case the
+        # parked state ships to the preferred tier instead of the request
+        # chasing it. Identical rule through both backends.
+        sticky = move_src = None
+        if self.sessions and req.session:
+            parked_tier = self.backend.session_tier(req.session)
+            if parked_tier is not None and parked_tier in self.specs:
+                if (parked_tier != fusion and self.session_move_threshold > 0
+                        and self.backend.can_migrate(parked_tier, fusion)):
+                    occ = self.backend.occupancy()
+                    if (occ.get(parked_tier, 0) - occ.get(fusion, 0)
+                            >= self.session_move_threshold):
+                        move_src = parked_tier
+                        # the moved rows cover the whole history too: the
+                        # turn serves entirely at the destination (same
+                        # route override as the sticky branch below)
+                        decision = dataclasses.replace(
+                            decision,
+                            routes={m: fusion for m in decision.routes},
+                            reason=decision.reason + "+session-move")
+                if move_src is None:
+                    fusion = parked_tier
+                    sticky = parked_tier
+                    # the parked rows cover the WHOLE history (vision
+                    # prefix included): the turn serves entirely on the
+                    # parked tier, so the scheduler's per-modality picks
+                    # are overridden too — otherwise phantom off-fusion
+                    # encodes/WAN hops get charged for work that never
+                    # happens, and the fusion-tier partial-offload
+                    # discount would zero out prefill that IS paid here
+                    decision = dataclasses.replace(
+                        decision,
+                        routes={m: parked_tier for m in decision.routes},
+                        reason=decision.reason + "+sticky")
         rec.mark("routed", fusion)
+        if sticky is not None:
+            rec.mark("sticky", sticky)
         job = Job(request=req, decision=decision, fusion=fusion, tier=fusion,
                   t_start=ev.t, record=rec)
+        if move_src is not None:
+            self._session_move(ev.t + score_cost, job, move_src)
         # partial offload (§3.2): modalities routed off the fusion tier are
         # encoded where they were routed — the runtime marks the stage, the
         # backend executes it (analytic: charge encode FLOPs to the routed
@@ -232,7 +294,7 @@ class ClusterRuntime:
             # (sorted for deterministic event order)
             for tname, nbytes in sorted(remote_bytes.items()):
                 self._enqueue_link(ev.t + score_cost, tname, job, nbytes)
-        else:
+        if job.pending_transfers == 0:  # no links, no session move in flight
             self._enqueue_service(ev.t + score_cost, job)
         if self.hedge_after_s > 0:
             self._push(ev.t + self.hedge_after_s, "hedge_check", job=job)
@@ -245,16 +307,16 @@ class ClusterRuntime:
         return cm.transfer_seconds(num_bytes, spec.uplink_bps, spec.rtt_s)
 
     def _enqueue_link(self, t: float, tier: str, job: Job, num_bytes: float,
-                      migrate: bool = False):
+                      kind: str = "data"):
         """Queue one transfer (a job may hold several, one per remote tier
         its modalities route to); the job proceeds to service only once
-        every pending transfer has landed. Migration transfers ride the SAME
-        link stations (queueing behind modality uploads) but resolve into a
-        slot injection instead of a service enqueue."""
-        if not migrate:
+        every pending transfer has landed. ``kind`` — "data" (modality
+        payloads), "migrate" (slot payloads, resolving into an injection)
+        or "session" (parked-session payloads, installed before service) —
+        all ride the SAME link stations, queueing behind each other."""
+        if kind == "data":
             job.record.mark("transfer", tier)
-        xfer = {"job": job, "tier": tier, "bytes": num_bytes,
-                "migrate": migrate}
+        xfer = {"job": job, "tier": tier, "bytes": num_bytes, "kind": kind}
         job.pending_transfers += 1
         link = self.links[tier]
         link.utilization_update(t)
@@ -278,10 +340,17 @@ class ClusterRuntime:
         job: Job = xfer["job"]
         job.pending_transfers -= 1
         if job.pending_transfers == 0:
-            if xfer["migrate"]:
+            if xfer["kind"] == "migrate":
                 self.backend.migrate_inject(ev.t, job)
             else:
-                self._enqueue_service(ev.t, job)
+                self._join_transfers(ev.t, job)
+
+    def _join_transfers(self, t: float, job: Job) -> None:
+        """All of a job's arrival-side transfers have landed: install any
+        moved session payload so admission finds it, then enqueue."""
+        if job.payload.pop("session_pending", None):
+            self.backend.session_install(t, job)
+        self._enqueue_service(t, job)
 
     # -- lifecycle: service ------------------------------------------------
 
@@ -370,9 +439,9 @@ class ClusterRuntime:
         rec.mark("migrate", dst)
         spec_s, spec_d = self.specs[src], self.specs[dst]
         if spec_d.is_remote:
-            self._enqueue_link(t, dst, carrier, nbytes, migrate=True)
+            self._enqueue_link(t, dst, carrier, nbytes, kind="migrate")
         elif spec_s.is_remote:
-            self._enqueue_link(t, src, carrier, nbytes, migrate=True)
+            self._enqueue_link(t, src, carrier, nbytes, kind="migrate")
         else:
             self._push(t + cm.migration_seconds(nbytes, spec_s, spec_d),
                        "migrate_done", job=carrier)
@@ -380,6 +449,37 @@ class ClusterRuntime:
 
     def _on_migrate_done(self, ev: Event):
         self.backend.migrate_inject(ev.t, ev.payload["job"])
+
+    # -- lifecycle: session moves ------------------------------------------
+
+    def _session_move(self, t: float, job: Job, src: str) -> None:
+        """Ship a parked session payload from ``src`` to the job's serving
+        tier ahead of the turn (the scheduler preferred a less-loaded
+        compatible tier over sticking). Rides the same transport as KV
+        migration; an extract that fails (payload evicted meanwhile) leaves
+        the turn to a cold prefill."""
+        nbytes = self.backend.session_extract(t, job, src)
+        if nbytes is None:
+            return
+        dst = job.tier
+        job.record.mark("session_move", dst)
+        self.session_moves += 1
+        job.payload["session_pending"] = True
+        spec_s, spec_d = self.specs[src], self.specs[dst]
+        if spec_d.is_remote:
+            self._enqueue_link(t, dst, job, nbytes, kind="session")
+        elif spec_s.is_remote:
+            self._enqueue_link(t, src, job, nbytes, kind="session")
+        else:
+            job.pending_transfers += 1
+            self._push(t + cm.migration_seconds(nbytes, spec_s, spec_d),
+                       "session_done", job=job)
+
+    def _on_session_done(self, ev: Event):
+        job: Job = ev.payload["job"]
+        job.pending_transfers -= 1
+        if job.pending_transfers == 0:
+            self._join_transfers(ev.t, job)
 
     def commit_migration(self, carrier: Job) -> None:
         """Called by the backend when an injection actually lands."""
@@ -432,7 +532,8 @@ class ClusterRuntime:
             transfer_bytes=job.transfer_bytes, hedged=job.hedged,
             retries=job.retries, served_tier=tier, ttft_s=rec.ttft_s,
             on_time=latency_s <= req.slo_s, truncated=rec.truncated,
-            migrated=rec.migrated, migration_bytes=rec.migration_bytes)
+            migrated=rec.migrated, migration_bytes=rec.migration_bytes,
+            warm=rec.warm, warm_tokens=rec.warm_tokens)
         rec.outcome = out
         self.outcomes.append(out)
         return out
@@ -478,7 +579,11 @@ class AnalyticBackend:
 
     def __init__(self, topology: ClusterTopology, acc_model, seed: int = 0,
                  fail_rate: float = 0.0,
-                 fallback_bandwidth_bps: float = 300e6):
+                 fallback_bandwidth_bps: float = 300e6,
+                 prefix_cache_mb: float = 0.0,
+                 session_cache_mb: float = 64.0,
+                 prefix_min_tokens: int = 16,
+                 max_context_tokens: Optional[int] = None):
         from repro.configs import get_config  # local import, no cycle
 
         self.acc = acc_model
@@ -493,6 +598,26 @@ class AnalyticBackend:
         self.encode_flops: Dict[str, float] = {}  # partial-offload side work
         self.active: Dict[str, List[Job]] = {t.name: [] for t in topology.tiers}
         self.fault_draws = 0  # fault-rng draws (one per service start)
+        # prefix & session KV reuse: the SAME stores (and therefore the
+        # same hit/miss decisions) the live engines run, holding virtual
+        # sizes instead of cache rows. The prefix mirror engages only for
+        # requests carrying real token ids (content decides a hit).
+        self.prefix: Dict[str, PrefixStore] = {
+            t.name: PrefixStore(prefix_cache_mb * 1e6,
+                                min_prefix=prefix_min_tokens)
+            for t in topology.tiers}
+        self.parked: Dict[str, SessionStore] = {
+            t.name: SessionStore(session_cache_mb * 1e6)
+            for t in topology.tiers}
+        self.prefix_hits = 0
+        self.resumed_sessions = 0
+        self.parks = 0
+        # mirror of the live engines' cache capacity: a turn whose total
+        # context would not fit a ``max_seq``-sized engine cold-prefills
+        # there, so the analytic mirror must refuse the hit too. None (the
+        # default) skips the check — set it to the engines' max_seq when
+        # comparing decision traces against a live cluster.
+        self.max_context_tokens = max_context_tokens
         self.rt: Optional[ClusterRuntime] = None
 
     def bind(self, runtime: ClusterRuntime) -> None:
@@ -521,6 +646,138 @@ class AnalyticBackend:
 
     def embed_bytes(self, tier: str) -> float:
         return cm.embedding_bytes(self.models[tier])
+
+    # -- prefix & session KV reuse ------------------------------------------
+
+    @staticmethod
+    def _req_ids(req: Request) -> Optional[np.ndarray]:
+        """Real prompt token ids when the workload carries them (the live
+        parity workloads do); None keeps the prefix mirror out of play."""
+        text = req.modalities.get("text")
+        if text is None or text.data is None:
+            return None
+        return np.asarray(text.data)
+
+    @staticmethod
+    def _req_fp(req: Request) -> bytes:
+        """Extras fingerprint over the raw image payloads — a different
+        value than the engine's patch-embedding hash, but the same
+        equivalence (same image <=> same fingerprint), which is all the
+        hit/miss decision needs."""
+        data = {n: m.data for n, m in req.modalities.items()
+                if m.kind == "image" and m.data is not None}
+        return extras_fingerprint(data)
+
+    def _context_tokens(self, req: Request, tier: str) -> Tuple[int, int]:
+        """(text, image) backbone tokens of a request on a tier's model."""
+        mcfg = self.models[tier]
+        text = image = 0
+        for m in req.modalities.values():
+            n = cm.modality_tokens(mcfg, m)
+            if m.kind == "image":
+                image += n
+            else:
+                text += n
+        return text, image
+
+    def session_tier(self, sid: str) -> Optional[str]:
+        for tier, store in self.parked.items():
+            if sid in store:
+                return tier
+        return None
+
+    def session_extract(self, t: float, job: Job, src: str
+                        ) -> Optional[float]:
+        rec = self.parked[src].resume(job.request.session)
+        if rec is None:
+            return None
+        job.payload["session_parked"] = rec
+        return float(rec.nbytes)
+
+    def session_install(self, t: float, job: Job) -> None:
+        rec = job.payload.pop("session_parked", None)
+        if rec is not None:
+            self.parked[job.tier].park(job.request.session, rec)
+
+    def parked_sessions(self) -> Dict[str, int]:
+        return {tier: len(store) for tier, store in self.parked.items()}
+
+    def _warm_state(self, job: Job) -> Optional[Tuple[str, int]]:
+        """(kind, cached_tokens) when this admission lands on reused rows —
+        the mirror of ``TierEngine._warm_plan``: a parked session this turn
+        extends wins over a stored prefix; either discounts the prefill to
+        the suffix. The analytic session rule cannot compare generated
+        token content (it never materializes tokens), so a turn counts as
+        extending when its context strictly grew — live and analytic
+        decisions agree for well-formed multi-turn histories."""
+        req = job.request
+        tier = job.tier
+        text, image = self._context_tokens(req, tier)
+        sid = req.session
+        store = self.parked.get(tier)
+        if (self.rt.sessions and sid and store is not None
+                and store.enabled):
+            rec = store.peek(sid)
+            if rec is not None and rec.extras_fp == self._req_fp(req):
+                cached = int(rec.meta.get("context", 0))
+                fits = (self.max_context_tokens is None
+                        or text + image + 1 < self.max_context_tokens)
+                if text + image > cached and fits:
+                    store.resume(sid)  # rows consumed by this turn
+                    return ("resume", cached)
+        pstore = self.prefix.get(tier)
+        if pstore is not None and pstore.enabled:
+            ids = self._req_ids(req)
+            if ids is not None:
+                e = pstore.lookup(ids, self._req_fp(req))
+                if e is not None:
+                    return ("prefix", len(e.tokens) + image)
+        return None
+
+    def _store_prefixes(self, job: Job) -> None:
+        """Mirror of ``TierEngine._store_prefixes``: deposit this prompt's
+        prefixes (virtual sizes) at bucket-aligned lengths — exact length
+        only for the point-in-time state families."""
+        tier = job.tier
+        pstore = self.prefix.get(tier)
+        if pstore is None or not pstore.enabled:
+            return
+        ids = self._req_ids(job.request)
+        if ids is None:
+            return
+        fp = self._req_fp(job.request)
+        mcfg = self.models[tier]
+        _, image = self._context_tokens(job.request, tier)
+        sliceable = mcfg.family in ("dense", "vlm", "moe")
+        lengths = (prefix_buckets(len(ids), pstore.min_prefix)
+                   if sliceable else [len(ids)])
+        for n in lengths:
+            if n < pstore.min_prefix or pstore.contains(ids[:n], fp):
+                continue
+            pstore.insert(ids[:n], fp,
+                          cm.slot_payload_bytes(mcfg, n + image),
+                          sliceable=sliceable)
+
+    def _maybe_park(self, job: Job) -> None:
+        """Park a completing session turn: remember how much context its
+        virtual cache rows cover and what it would cost to ship them."""
+        req = job.request
+        store = self.parked.get(job.tier)
+        if not (self.rt.sessions and req.session and store is not None
+                and store.enabled):
+            return
+        text, image = self._context_tokens(req, job.tier)
+        # the rows cover prompt + generated minus the final sampled token
+        context = text + image + max(req.decode_tokens - 1, 0)
+        nbytes = cm.slot_payload_bytes(self.models[job.tier], context)
+        ids = self._req_ids(req)
+        ok = store.park(req.session, ParkedSession(
+            tokens=(np.zeros(0, np.int32) if ids is None else ids),
+            extras_fp=self._req_fp(req), nbytes=float(nbytes),
+            meta={"context": context}))
+        if ok:
+            self.parks += 1
+            job.record.mark("park", job.tier)
 
     # -- cross-tier KV migration --------------------------------------------
 
@@ -624,7 +881,8 @@ class AnalyticBackend:
 
     # -- cost model ---------------------------------------------------------
 
-    def _service_request(self, job: Job) -> Dict[str, float]:
+    def _service_request(self, job: Job,
+                         cached_tokens: int = 0) -> Dict[str, float]:
         """Phase-split cost of one fused inference on ``job.tier``.
 
         Pure function of (request, routes, serving tier) — all accounting
@@ -632,6 +890,8 @@ class AnalyticBackend:
         for a hedged clone on another tier) without double charging. The
         prefill/decode split lets the migration path price a clone that
         receives the donor's cache rows (decode remainder only).
+        ``cached_tokens`` > 0 is a warm admission: prefill pays the suffix
+        only (see ``cost_model.request_phase_costs``).
         """
         req = job.request
         tier = job.tier
@@ -675,7 +935,8 @@ class AnalyticBackend:
             text_tokens = max(0, text_tokens - off_text)
             image_tokens = max(0, image_tokens - off_img)
         costs = cm.request_phase_costs(mcfg, text_tokens, image_tokens,
-                                       decode_tokens, tcfg)
+                                       decode_tokens, tcfg,
+                                       cached_tokens=cached_tokens)
         sec = costs["prefill"].seconds + costs["decode"].seconds
         flops = costs["prefill"].flops + costs["decode"].flops
         kv = cm._kv_bytes_per_token(mcfg) * (text_tokens + image_tokens
@@ -728,11 +989,26 @@ class AnalyticBackend:
     def start_service(self, t: float, st: Station, job: Job) -> None:
         st.busy += 1
         job.in_service = True
-        job.record.mark("serve", job.tier)
         # compute once per (job, tier) and cache — _on_service_done reads
-        # the cached values, so resources are charged exactly once
+        # the cached values, so resources are charged exactly once. Warm
+        # (prefix-hit / resumed-session) state is decided here, the
+        # analytic analogue of engine admission: the service then pays
+        # suffix-only prefill.
         if job.payload.get("cost_tier") != job.tier:
-            c = self._service_request(job)
+            warm = self._warm_state(job)
+            cached = 0
+            if warm is not None:
+                kind, cached = warm
+                rec = job.record
+                rec.warm = kind
+                rec.warm_tokens += cached
+                rec.mark(kind, job.tier)
+                if kind == "resume":
+                    self.resumed_sessions += 1
+                else:
+                    self.prefix_hits += 1
+            self._store_prefixes(job)
+            c = self._service_request(job, cached_tokens=cached)
             job.payload.update(service_s=c["seconds"],
                                service_flops=c["flops"],
                                service_mem=c["mem_byte_s"],
@@ -740,6 +1016,7 @@ class AnalyticBackend:
                                service_decode_flops=c["decode_flops"],
                                service_context=c["context_tokens"],
                                cost_tier=job.tier)
+        job.record.mark("serve", job.tier)
         job.payload["t_serve"] = t
         self.active[job.tier].append(job)
         sec = job.payload["service_s"]
@@ -807,6 +1084,7 @@ class AnalyticBackend:
         if job.record.done:
             return  # the hedged twin finished first
         job.record.done = True
+        self._maybe_park(job)
         req = job.request
         flops = job.payload["service_flops"]
         mem = job.payload["service_mem"]
@@ -873,6 +1151,8 @@ class LiveBackend:
         for tier, eng in self.engines.items():
             eng.on_admit = self._make_on_admit(tier)
             eng.on_token = self._make_on_token(tier)
+            eng.on_warm = self._make_on_warm(tier)
+            eng.on_park = self._make_on_park(tier)
 
     def bind(self, runtime: ClusterRuntime) -> None:
         self.rt = runtime
@@ -907,6 +1187,25 @@ class LiveBackend:
                 job.in_service = True
                 job.record.mark("serve", tier)
         return on_admit
+
+    def _make_on_warm(self, tier: str):
+        def on_warm(rid: int, kind: str, cached: int, suffix: int):
+            job = self._inflight[tier].get(rid)
+            if job is None or job.record.done:
+                return
+            rec = job.record
+            rec.warm = kind
+            rec.warm_tokens += cached
+            rec.mark(kind, tier)
+        return on_warm
+
+    def _make_on_park(self, tier: str):
+        def on_park(rid: int, sid: str):
+            job = self._inflight[tier].get(rid)
+            if job is None or job.record.done:
+                return  # a losing hedge twin parking late: rows kept, no mark
+            job.record.mark("park", tier)
+        return on_park
 
     def _make_on_token(self, tier: str):
         first_down = {t.name: cm.downlink_seconds(1, t)
@@ -982,7 +1281,8 @@ class LiveBackend:
         job.record.truncated |= truncated
         self._inflight[tier][req.rid] = job
         eng.submit(req.rid, tokens, max_new=req.decode_tokens, extras=extras,
-                   deadline=req.arrival_s + req.slo_s)
+                   deadline=req.arrival_s + req.slo_s,
+                   session=(req.session if self.rt.sessions else None))
 
     def _prepare_prompt(self, eng, job: Job):
         """Tokens + extras for one engine, against its REAL budget.
@@ -1073,6 +1373,42 @@ class LiveBackend:
             return None
         occ = self.occupancy()
         return min(cands, key=lambda n: (occ.get(n, 0), n))
+
+    # -- prefix & session KV reuse ------------------------------------------
+
+    def session_tier(self, sid: str) -> Optional[str]:
+        for tier, eng in self.engines.items():
+            if sid in eng.sessions:
+                return tier
+        return None
+
+    def session_extract(self, t: float, job: Job, src: str
+                        ) -> Optional[float]:
+        """Pop the REAL parked payload and ship its wire bytes (the same
+        serialized form KV migration uses, prompt tokens included)."""
+        eng = self.engines.get(src)
+        if eng is None:
+            return None
+        parked = eng.resume_session(job.request.session)
+        if parked is None or not isinstance(parked.data, SlotPayload):
+            return None
+        wire = parked.data.to_bytes()
+        job.payload["session_wire"] = wire
+        return float(len(wire))
+
+    def session_install(self, t: float, job: Job) -> None:
+        wire = job.payload.pop("session_wire", None)
+        if wire is None:
+            return
+        try:
+            payload = SlotPayload.from_bytes(wire)
+        except MigrationError:
+            return  # corrupt in transit: the turn cold-prefills
+        self.engines[job.tier].adopt_session(job.request.session, payload)
+
+    def parked_sessions(self) -> Dict[str, int]:
+        return {tier: len(eng.sessions)
+                for tier, eng in self.engines.items()}
 
     # -- cross-tier KV migration --------------------------------------------
 
@@ -1190,11 +1526,19 @@ class LiveBackend:
             down = cm.downlink_seconds(len(st.generated), spec)
             latency = (st.t_done or now) + down - job.request.arrival_s
             self.rt.finish(job, tier, latency)
-            # cancel the losing hedge twin wherever it is
+            sid = job.request.session if self.rt.sessions else None
+            # cancel the losing hedge twin wherever it is — and drop any
+            # session state a twin parked elsewhere before cancellation
+            # (the winner's tier holds the authoritative park; a loser's
+            # generated tokens are not this conversation's history)
             for other, eng2 in self.engines.items():
-                if other != tier and st.rid in self._inflight[other]:
+                if other == tier:
+                    continue
+                if st.rid in self._inflight[other]:
                     eng2.cancel(st.rid)
                     self._inflight[other].pop(st.rid, None)
+                if sid is not None and sid in eng2.sessions:
+                    eng2.sessions.resume(sid)
         eng.finished.clear()
 
     def advance(self) -> bool:

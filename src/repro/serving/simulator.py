@@ -49,7 +49,11 @@ class ClusterSimulator:
                  cloud_servers: int = 4, edge_servers: int = 1,
                  topology: Optional[ClusterTopology] = None,
                  migrate: bool = False, migrate_threshold: int = 0,
-                 hedge_in_service: bool = False):
+                 hedge_in_service: bool = False, sessions: bool = False,
+                 session_move_threshold: int = 0,
+                 prefix_cache_mb: float = 0.0,
+                 session_cache_mb: float = 64.0,
+                 max_context_tokens: Optional[int] = None):
         self.cfg = sim_cfg
         topo = topology or sim_cfg.topology
         if topo is not None and (edge_servers != 1 or cloud_servers != 4):
@@ -68,13 +72,19 @@ class ClusterSimulator:
         self.acc = acc_model
         self.backend = AnalyticBackend(
             topo, acc_model, seed=sim_cfg.seed, fail_rate=fail_rate,
-            fallback_bandwidth_bps=sim_cfg.bandwidth_bps)
+            fallback_bandwidth_bps=sim_cfg.bandwidth_bps,
+            prefix_cache_mb=prefix_cache_mb,
+            session_cache_mb=session_cache_mb,
+            max_context_tokens=max_context_tokens)
         self.runtime = ClusterRuntime(topo, self.scheduler, policy_name,
                                       self.backend,
                                       hedge_after_s=hedge_after_s,
                                       migrate=migrate,
                                       migrate_threshold=migrate_threshold,
-                                      hedge_in_service=hedge_in_service)
+                                      hedge_in_service=hedge_in_service,
+                                      sessions=sessions,
+                                      session_move_threshold=
+                                      session_move_threshold)
         self.hedge_after_s = hedge_after_s
         # legacy attribute views (None when the topology lacks the name)
         self.edge = self.stations.get("edge")
@@ -163,6 +173,16 @@ class ClusterSimulator:
                 [o.migrated for o in self.outcomes]))
             out["migration_bytes"] = float(sum(
                 o.migration_bytes for o in self.outcomes))
+        if self.runtime.sessions or any(
+                s.enabled for s in self.backend.prefix.values()):
+            # prefix & session KV reuse metrics, gated for the same reason
+            out["resumed"] = float(np.mean(
+                [o.warm == "resume" for o in self.outcomes]))
+            out["prefix_hits"] = float(np.mean(
+                [o.warm == "prefix" for o in self.outcomes]))
+            out["warm_tokens"] = float(sum(
+                o.warm_tokens for o in self.outcomes))
+            out["session_moves"] = float(self.runtime.session_moves)
         for name, st in self.stations.items():
             out[f"{name}_flops"] = per_flops[name]
             out[f"{name}_mem_byte_s"] = per_mem[name]

@@ -57,6 +57,8 @@ class ServedResult:
     retries: int = 0
     migrated: bool = False  # KV cache moved across tiers mid-flight
     migration_bytes: float = 0.0  # slot-payload bytes shipped
+    warm: str = ""  # "prefix" | "resume": admitted onto reused KV rows
+    warm_tokens: float = 0.0  # cached tokens whose prefill was skipped
 
 
 def build_cluster_engines(topology: ClusterTopology,
@@ -100,7 +102,8 @@ class ClusterServer:
                  hedge_after_s: float = 0.0, fail_rate: float = 0.0,
                  seed: int = 0, migrate: bool = False,
                  migrate_threshold: int = 0, hedge_in_service: bool = False,
-                 snapshot_every: int = 4):
+                 snapshot_every: int = 4, sessions: bool = False,
+                 session_move_threshold: int = 0):
         self.engines = dict(engines)
         self.topology = topology or _default_topology(
             self.engines, bandwidth_bps if bandwidth_bps is not None
@@ -122,10 +125,14 @@ class ClusterServer:
             hedge_after_s=hedge_after_s,
             observed_bandwidth_bps=bandwidth_bps, migrate=migrate,
             migrate_threshold=migrate_threshold,
-            hedge_in_service=hedge_in_service)
+            hedge_in_service=hedge_in_service, sessions=sessions,
+            session_move_threshold=session_move_threshold)
         self._rid = 0
         self._reported = 0  # outcomes already converted to ServedResults
         self.results: List[ServedResult] = []
+        # per-session transcript: prompt ids of the last submitted turn and
+        # its rid (the next turn extends prompt + that turn's generation)
+        self._session_hist: Dict[str, Dict] = {}
 
     def _engine(self, tier: str) -> TierEngine:
         return self.engines[tier]
@@ -135,22 +142,30 @@ class ClusterServer:
     def build_request(self, text: str, image: Optional[np.ndarray] = None,
                       max_new: int = 16, slo_s: float = 5.0,
                       delay_s: float = 0.0,
-                      complexity: Optional[Dict[str, float]] = None
-                      ) -> Request:
+                      complexity: Optional[Dict[str, float]] = None,
+                      session: Optional[str] = None,
+                      prompt_ids: Optional[np.ndarray] = None) -> Request:
         """Tokenize/score-prepare one request without submitting it (the
         sim-vs-live parity test feeds the same payloads to both backends).
-        ``complexity`` pins per-modality scores, bypassing the scorer."""
+        ``complexity`` pins per-modality scores, bypassing the scorer.
+        ``prompt_ids`` bypasses tokenization (multi-turn histories already
+        carry generated token ids)."""
         rid = self._rid
         self._rid += 1
         mods: Dict[str, ModalityInput] = {}
         if image is not None:
             mods["image"] = ModalityInput("image", data=image,
                                           size_bytes=image.size // 2)
-        ids = self.tok.encode(text)
-        arr = np.asarray(ids, np.int32)
+        if prompt_ids is not None:
+            arr = np.asarray(prompt_ids, np.int32)
+            if text:
+                arr = np.concatenate(
+                    [arr, np.asarray(self.tok.encode(text), np.int32)])
+        else:
+            arr = np.asarray(self.tok.encode(text), np.int32)
         mods["text"] = ModalityInput(
-            "text", data=arr, size_bytes=len(ids) * 4,
-            meta={"tokens": len(ids),
+            "text", data=arr, size_bytes=len(arr) * 4,
+            meta={"tokens": len(arr),
                   "entities": int(self.tok.is_entity(arr).sum()),
                   "sentences": max(1, int(self.tok.is_sentence_end(arr).sum()))})
         if complexity:
@@ -158,7 +173,8 @@ class ClusterServer:
                 if name in mods:
                     mods[name].complexity = float(c)
         return Request(rid=rid, arrival_s=time.monotonic() + delay_s,
-                       modalities=mods, decode_tokens=max_new, slo_s=slo_s)
+                       modalities=mods, decode_tokens=max_new, slo_s=slo_s,
+                       session=session)
 
     def submit(self, text: str, image: Optional[np.ndarray] = None,
                max_new: int = 16, slo_s: float = 5.0,
@@ -175,6 +191,41 @@ class ClusterServer:
         self.runtime.submit(req)
         return req.rid
 
+    # -- multi-turn sessions -------------------------------------------------
+
+    def build_turn(self, sid: str, text: str,
+                   image: Optional[np.ndarray] = None, max_new: int = 16,
+                   slo_s: float = 5.0, delay_s: float = 0.0,
+                   complexity: Optional[Dict[str, float]] = None) -> Request:
+        """One chat turn of session ``sid``: the prompt is the FULL
+        conversation so far — previous turns' prompts and generated tokens
+        — plus the new user text, so the engine's parked state (or prefix
+        store) makes it a suffix-only prefill. Requires the previous turn
+        to have completed (its generation is part of the history)."""
+        st = self._session_hist.setdefault(
+            sid, {"ids": np.zeros((0,), np.int32), "last": None})
+        if st["last"] is not None:
+            rec = self.runtime.records.get(st["last"])
+            gen = rec.tokens if rec is not None and rec.done else []
+            if gen:
+                st["ids"] = np.concatenate(
+                    [st["ids"], np.asarray(gen, np.int32)])
+        req = self.build_request(text, image=image, max_new=max_new,
+                                 slo_s=slo_s, delay_s=delay_s,
+                                 complexity=complexity, session=sid,
+                                 prompt_ids=st["ids"])
+        st["ids"] = np.asarray(req.modalities["text"].data, np.int32)
+        st["last"] = req.rid
+        return req
+
+    def submit_turn(self, sid: str, text: str,
+                    image: Optional[np.ndarray] = None, max_new: int = 16,
+                    slo_s: float = 5.0, delay_s: float = 0.0,
+                    complexity: Optional[Dict[str, float]] = None) -> int:
+        return self.submit_request(self.build_turn(
+            sid, text, image=image, max_new=max_new, slo_s=slo_s,
+            delay_s=delay_s, complexity=complexity))
+
     # ------------------------------------------------------------------
 
     def run(self, timeout_s: float = 300.0) -> List[ServedResult]:
@@ -190,7 +241,8 @@ class ClusterServer:
                 wan_s=rec.wan_s, ttft_s=out.ttft_s, on_time=out.on_time,
                 truncated=out.truncated, hedged=out.hedged,
                 retries=out.retries, migrated=out.migrated,
-                migration_bytes=out.migration_bytes))
+                migration_bytes=out.migration_bytes, warm=out.warm,
+                warm_tokens=out.warm_tokens))
         self._reported = len(outcomes)
         return self.results
 
