@@ -1,0 +1,68 @@
+"""Property-based fuzzing of prefix/suffix split points: for ANY prompt and
+ANY split, seeding the prefix store with the prefix and then serving the
+full prompt must decode token-for-token like a cold full prefill, and must
+prefill only the suffix. Runs the sliceable ladder (dense) and the
+point-in-time state path (ssm) through the same property."""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.config import ServingConfig  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.serving.engine import TierEngine  # noqa: E402
+from repro.serving.prefix import prefix_buckets  # noqa: E402
+
+
+def _engine(cfg, params, prefix_mb=0.0):
+    sv = ServingConfig(max_batch=2, max_seq=128, prefix_cache_mb=prefix_mb)
+    return TierEngine(build_model(cfg), params, sv, eos_id=-1)
+
+
+def _tokens(eng, rid):
+    done = {s.rid: s.generated for s in eng.run_until_drained()}
+    eng.finished.clear()
+    return done[rid]
+
+
+@pytest.mark.slow
+@settings(max_examples=8, deadline=None)
+@given(data=st.data())
+@pytest.mark.parametrize("family", ["dense", "ssm"])
+def test_any_split_point_matches_cold(family, data, family_model):
+    cfg, params = family_model(family)
+    total = data.draw(st.integers(min_value=20, max_value=80), label="total")
+    split = data.draw(st.integers(min_value=16, max_value=total - 1),
+                      label="split")
+    seed = data.draw(st.integers(min_value=0, max_value=2**16), label="seed")
+    rng = np.random.default_rng(seed)
+    full = rng.integers(4, 200, size=total).astype(np.int32)
+
+    cold = _engine(cfg, params)
+    cold.submit(0, full, max_new=6)
+    want = _tokens(cold, 0)
+
+    warm = _engine(cfg, params, prefix_mb=64.0)
+    warm.submit(0, full[:split], max_new=2)  # seeds the store
+    _tokens(warm, 0)
+    pf0 = warm.prefill_tokens
+    warm.submit(1, full, max_new=6)
+    got = _tokens(warm, 1)
+    assert got == want
+
+    # the hit covers the longest stored prefix at or below the split
+    if family == "dense":
+        usable = [n for n in prefix_buckets(split) if n < total]
+        want_cached = max(usable) if usable else 0
+    else:  # point-in-time state: exact split only (and only if it's short
+        # enough to leave a suffix)
+        want_cached = split if 16 <= split < total else 0
+    if want_cached:
+        assert warm.prefix_hits == 1
+        assert warm.prefix_hit_tokens == want_cached
+        assert warm.prefill_tokens - pf0 == total - want_cached
+    else:
+        assert warm.prefix_hits == 0
+        assert warm.prefill_tokens - pf0 == total

@@ -1,0 +1,602 @@
+"""Prefix & session KV reuse: warm (prefix-hit / resumed-session) serving is
+token-for-token identical to cold serving for every family, only suffixes
+are ever prefilled on a hit, the stores LRU-evict under their byte budgets,
+and the cluster runtime routes session turns sticky-by-default with
+identical hit/miss decision traces through both execution backends."""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.config import (PolicyConfig, ServingConfig, SimConfig,
+                          get_topology, two_tier_topology)
+from repro.core.baselines import make_policy
+from repro.core.scheduler import MoAOffScheduler
+from repro.models import build_model
+from repro.serving.engine import TierEngine
+from repro.serving.prefix import (ParkedSession, PrefixStore, SessionStore,
+                                  extension_suffix, prefix_buckets)
+from repro.serving.simulator import ClusterSimulator
+from repro.serving.tiers import ClusterServer, build_cluster_engines
+
+FAMILY_PARAMS = [
+    "dense",
+    # the heavier families ride the slow mark to keep the smoke lane fast
+    pytest.param("vlm", marks=pytest.mark.slow),
+    pytest.param("moe", marks=pytest.mark.slow),
+    pytest.param("ssm", marks=pytest.mark.slow),
+    pytest.param("hybrid", marks=pytest.mark.slow),
+]
+
+
+def make_engine(cfg, params, max_batch=2, max_seq=128, **sv_kw):
+    sv = ServingConfig(max_batch=max_batch, max_seq=max_seq, **sv_kw)
+    return TierEngine(build_model(cfg), params, sv, eos_id=-1)
+
+
+def _family_inputs(cfg, base_len=40, ext_len=10, seed=0):
+    rng = np.random.default_rng(seed)
+    base = rng.integers(4, 200, size=base_len).astype(np.int32)
+    ext = rng.integers(4, 200, size=ext_len).astype(np.int32)
+    extras = {}
+    if cfg.frontend == "vision_stub":
+        extras["patches"] = rng.standard_normal(
+            (cfg.num_patches, cfg.frontend_dim)).astype(np.float32)
+    return base, ext, extras
+
+
+def _drain_tokens(eng, rid):
+    done = {s.rid: s.generated for s in eng.run_until_drained()}
+    eng.finished.clear()
+    return done[rid]
+
+
+# ---------------------------------------------------------------------------
+# store unit behavior (pure host logic, shared by both backends)
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_buckets_ladder():
+    assert prefix_buckets(100) == [16, 32, 64, 100]
+    assert prefix_buckets(64) == [16, 32, 64]
+    assert prefix_buckets(8) == []  # below the minimum prefix
+    assert prefix_buckets(16) == [16]
+
+
+def test_extension_suffix():
+    cached = np.arange(5)
+    assert extension_suffix(cached, np.arange(8)).tolist() == [5, 6, 7]
+    assert extension_suffix(cached, np.arange(5)) is None  # no new tokens
+    other = np.array([9, 9, 9, 9, 9, 5])
+    assert extension_suffix(cached, other) is None  # not an extension
+
+
+def test_prefix_store_lookup_prefers_longest():
+    s = PrefixStore(1e9)
+    toks = np.arange(100)
+    for n in prefix_buckets(100):
+        s.insert(toks[:n], b"", 100.0, data=n)
+    hit = s.lookup(np.concatenate([toks, [1, 2]]), b"")
+    assert len(hit.tokens) == 100
+    hit = s.lookup(toks[:40], b"")  # only 32 leaves a suffix
+    assert len(hit.tokens) == 32
+    assert s.lookup(toks[:16], b"") is None  # would leave no suffix
+    assert s.lookup(np.arange(100) + 1, b"") is None  # different content
+    assert s.lookup(toks[:40], b"img") is None  # different extras
+
+
+def test_prefix_store_lru_eviction_under_tight_budget():
+    s = PrefixStore(1000.0)
+    a, b, c = (np.arange(20) + k * 100 for k in range(3))
+    assert s.insert(a, b"", 400.0, data="a")
+    assert s.insert(b, b"", 400.0, data="b")
+    assert s.lookup(np.concatenate([a, [1]]), b"") is not None  # touch a
+    assert s.insert(c, b"", 400.0, data="c")  # evicts b (LRU)
+    assert s.evictions == 1
+    assert s.lookup(np.concatenate([b, [1]]), b"") is None
+    assert s.lookup(np.concatenate([a, [1]]), b"") is not None
+    assert s.lookup(np.concatenate([c, [1]]), b"") is not None
+    # an entry larger than the whole budget is refused outright
+    assert not s.insert(np.arange(99), b"", 5000.0)
+
+
+def test_session_store_budget_and_resume_consumes():
+    s = SessionStore(1000.0)
+    assert s.park("a", ParkedSession(np.arange(4), b"", 600.0))
+    assert s.park("b", ParkedSession(np.arange(4), b"", 600.0))  # evicts a
+    assert "a" not in s and "b" in s
+    assert s.resume("b") is not None
+    assert "b" not in s  # consumed
+    dead = SessionStore(0.0)
+    assert not dead.enabled
+    assert not dead.park("x", ParkedSession(np.arange(4), b"", 1.0))
+
+
+# ---------------------------------------------------------------------------
+# engine: warm vs cold token parity, suffix-only prefill
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", FAMILY_PARAMS)
+def test_prefix_hit_matches_cold(family, family_model):
+    """A prompt extending a stored prefix decodes token-for-token like a
+    cold full prefill, while the engine prefills ONLY the suffix."""
+    cfg, params = family_model(family)
+    base, ext, extras = _family_inputs(cfg)
+    full = np.concatenate([base, ext])
+
+    cold = make_engine(cfg, params)
+    cold.submit(0, full, max_new=8, extras=dict(extras))
+    want = _drain_tokens(cold, 0)
+
+    warm = make_engine(cfg, params, prefix_cache_mb=64.0)
+    warm.submit(0, base, max_new=8, extras=dict(extras))
+    _drain_tokens(warm, 0)
+    pf0 = warm.prefill_tokens
+    warm.submit(1, full, max_new=8, extras=dict(extras))
+    assert _drain_tokens(warm, 1) == want
+    assert warm.prefix_hits == 1
+    # cached counts reused cache POSITIONS: vision prefix included
+    vis = cfg.num_patches if extras else 0
+    assert warm.prefix_hit_tokens == len(base) + vis
+    # ONLY the suffix was prefilled on the hit
+    assert warm.prefill_tokens - pf0 == len(ext)
+
+
+@pytest.mark.parametrize("family", FAMILY_PARAMS)
+def test_resumed_session_matches_cold(family, family_model):
+    """Turn k+1 resuming a parked session decodes token-for-token like cold
+    prefilling the whole history, charging only the new tokens."""
+    cfg, params = family_model(family)
+    base, ext, extras = _family_inputs(cfg)
+
+    eng = make_engine(cfg, params)
+    eng.submit(0, base, max_new=6, extras=dict(extras), session="s")
+    gen1 = _drain_tokens(eng, 0)
+    assert eng.parks == 1 and "s" in eng.sessions
+    hist = np.concatenate([base, np.asarray(gen1, np.int32), ext])
+    pf0 = eng.prefill_tokens
+    eng.submit(1, hist, max_new=6, extras=dict(extras), session="s")
+    got = _drain_tokens(eng, 1)
+
+    cold = make_engine(cfg, params)
+    cold.submit(0, hist, max_new=6, extras=dict(extras))
+    assert got == _drain_tokens(cold, 0)
+    assert eng.resumed_sessions == 1
+    # suffix = the last generated token (sampled, never fed) + new tokens
+    assert eng.prefill_tokens - pf0 == len(ext) + 1
+    assert "s" in eng.sessions  # turn 2 re-parked
+
+
+def test_prefix_store_disabled_is_default(family_model):
+    cfg, params = family_model("dense")
+    eng = make_engine(cfg, params)
+    assert not eng.prefix_store.enabled
+    base, ext, _ = _family_inputs(cfg)
+    eng.submit(0, base, max_new=4)
+    _drain_tokens(eng, 0)
+    pf0 = eng.prefill_tokens
+    eng.submit(1, np.concatenate([base, ext]), max_new=4)
+    _drain_tokens(eng, 1)
+    assert eng.prefix_hits == 0
+    assert eng.prefill_tokens - pf0 == len(base) + len(ext)  # full prefill
+
+
+def test_engine_lru_eviction_under_tight_prefix_budget(family_model):
+    """A prefix budget too small for two prompts keeps only the most
+    recent one's rows (and the evicted prompt misses back to cold)."""
+    cfg, params = family_model("dense")
+    rng = np.random.default_rng(3)
+    a = rng.integers(4, 200, size=48).astype(np.int32)
+    b = rng.integers(4, 200, size=48).astype(np.int32)
+    # budget sized to roughly ONE prompt's ladder of rows
+    one = make_engine(cfg, params, prefix_cache_mb=64.0)
+    one.submit(0, a, max_new=2)
+    _drain_tokens(one, 0)
+    need_mb = one.prefix_store.lru.bytes / 1e6
+    eng = make_engine(cfg, params, prefix_cache_mb=need_mb * 1.2)
+    eng.submit(0, a, max_new=2)
+    _drain_tokens(eng, 0)
+    eng.submit(1, b, max_new=2)
+    _drain_tokens(eng, 1)
+    assert eng.prefix_store.evictions > 0
+    # b's prefixes survived; a's longest prefix was evicted
+    hit_b = eng.prefix_store.lookup(np.concatenate([b, [5]]), b"")
+    assert hit_b is not None and len(hit_b.tokens) == len(b)
+    hit_a = eng.prefix_store.lookup(np.concatenate([a, [5]]), b"")
+    assert hit_a is None or len(hit_a.tokens) < len(a)
+
+
+def test_session_park_respects_budget(family_model):
+    cfg, params = family_model("dense")
+    base, ext, _ = _family_inputs(cfg)
+    eng = make_engine(cfg, params, session_cache_mb=0.0)
+    eng.submit(0, base, max_new=4, session="s")
+    _drain_tokens(eng, 0)
+    assert eng.parks == 0 and "s" not in eng.sessions
+    pf0 = eng.prefill_tokens
+    hist = np.concatenate([base, ext])
+    eng.submit(1, hist, max_new=4, session="s")
+    _drain_tokens(eng, 1)
+    assert eng.resumed_sessions == 0  # nothing parked: cold fallback
+    assert eng.prefill_tokens - pf0 == len(hist)
+
+
+def test_park_session_marks_inflight_request(family_model):
+    cfg, params = family_model("dense")
+    base, _, _ = _family_inputs(cfg)
+    eng = make_engine(cfg, params)
+    eng.submit(0, base, max_new=30)
+    assert eng.park_session(0, "late")  # still waiting
+    eng.step()
+    eng.submit(1, base, max_new=30)
+    assert eng.park_session(1, "late2")  # waiting while 0 decodes
+    assert not eng.park_session(99, "nope")
+    eng.run_until_drained()
+    assert "late" in eng.sessions and "late2" in eng.sessions
+
+
+def test_session_wire_roundtrip_preserves_prompt_tokens(family_model):
+    """A parked payload survives the versioned wire format with its prompt
+    tokens and extras fingerprint (cross-tier session moves ship these)."""
+    from repro.serving.engine import SlotPayload
+
+    cfg, params = family_model("dense")
+    base, ext, _ = _family_inputs(cfg)
+    eng = make_engine(cfg, params)
+    eng.submit(0, base, max_new=4, session="s")
+    _drain_tokens(eng, 0)
+    parked = eng.sessions.peek("s")
+    wire = parked.data.to_bytes()
+    back = SlotPayload.from_bytes(wire)
+    assert np.array_equal(back.prompt_tokens, base)
+    assert back.extras_fp == parked.data.extras_fp
+    assert back.seq.session == "s"
+    # a second engine adopts it and the next turn resumes warm
+    eng2 = make_engine(cfg, params)
+    assert eng2.adopt_session("s", back)
+    hist = np.concatenate([base,
+                           np.asarray(parked.data.seq.generated, np.int32),
+                           ext])
+    eng2.submit(7, hist, max_new=4, session="s")
+    _drain_tokens(eng2, 7)
+    assert eng2.resumed_sessions == 1
+
+
+def test_adopt_rejects_incompatible_payload(family_model):
+    import dataclasses
+
+    cfg, params = family_model("dense")
+    base, _, _ = _family_inputs(cfg)
+    eng = make_engine(cfg, params)
+    eng.submit(0, base, max_new=4, session="s")
+    _drain_tokens(eng, 0)
+    payload = eng.sessions.resume("s").data
+    other = make_engine(cfg, params, max_seq=64)  # different geometry
+    assert not other.adopt_session("s", payload)
+    wrong = dataclasses.replace(payload, model="other-model", _wire=None)
+    assert not eng.adopt_session("s", wrong)
+
+
+# ---------------------------------------------------------------------------
+# cluster runtime: sticky routing, parity, analytic discounting
+# ---------------------------------------------------------------------------
+
+
+def _twin_topo_servers(sv=None, **kw):
+    topo = get_topology("edge-edge-cloud")
+    sv = sv or ServingConfig(max_batch=2, max_seq=256)
+    return ClusterServer(
+        build_cluster_engines(topo, sv), topology=topo,
+        scheduler=MoAOffScheduler(policy=make_policy(
+            "moa-off", PolicyConfig(adaptive_tau=False), topology=topo)),
+        **kw)
+
+
+def _two_tier_server(sv=None, **kw):
+    topo = two_tier_topology()
+    sv = sv or ServingConfig(max_batch=2, max_seq=256)
+    return ClusterServer(
+        build_cluster_engines(topo, sv), topology=topo,
+        scheduler=MoAOffScheduler(policy=make_policy(
+            "moa-off", PolicyConfig(adaptive_tau=False),
+            topology=topo)), **kw)
+
+
+@pytest.mark.slow
+def test_sim_and_live_agree_on_multiturn_sessions():
+    """Three turns of one chat through both backends: identical routing,
+    sticky decisions and hit/miss (resume/park) traces, and the live
+    engine's prefill counter proves only suffixes were prefilled on warm
+    turns."""
+    server = _two_tier_server(sessions=True)
+    sim = ClusterSimulator(SimConfig(seed=0),
+                           policy_cfg=PolicyConfig(adaptive_tau=False),
+                           topology=two_tier_topology(), sessions=True)
+    sim_reqs = []
+    for turn in range(3):
+        req = server.build_turn(
+            "chat-1", f"turn {turn}: please describe the Scene more. ",
+            max_new=6, complexity={"text": 0.05})
+        sreq = copy.deepcopy(req)
+        sreq.arrival_s = 100.0 * (turn + 1)
+        sim_reqs.append(sreq)
+        server.submit_request(req)
+        server.run()  # turns are sequential: each extends the last
+    for r in sim_reqs:
+        sim.submit(r)
+    sim.run()
+
+    live = {r.rid: r for r in server.results}
+    ana = {o.rid: o for o in sim.outcomes}
+    for i, r in enumerate(sim_reqs):
+        lt = server.runtime.records[r.rid].trace()
+        at = sim.runtime.records[r.rid].trace()
+        assert lt == at  # identical lifecycle incl. sticky/resume/park
+        assert live[r.rid].warm == ana[r.rid].warm
+        assert live[r.rid].warm == ("" if i == 0 else "resume")
+    # live engine really skipped the history prefill on warm turns
+    eng = server.engines[server.results[-1].tier]
+    assert eng.resumed_sessions == 2
+    m = sim.metrics()
+    assert m["resumed"] == pytest.approx(2 / 3)
+    assert m["warm_tokens"] > 0
+
+
+def _equal_twin_topology():
+    """Two IDENTICAL local edges (same model and speed: any queue imbalance
+    flips the argmin) plus the standard remote cloud."""
+    from repro.config import ClusterTopology, TierSpec
+
+    return ClusterTopology("equal-twin", (
+        TierSpec("edge", "qwen2-vl-2b", 1, 35.6e12, 936e9, mfu=0.25,
+                 capability=0.0),
+        TierSpec("edge2", "qwen2-vl-2b", 1, 35.6e12, 936e9, mfu=0.25,
+                 capability=0.0),
+        TierSpec("cloud", "qwen2.5-vl-7b", 1, 312e12, 1_555e9, mfu=0.42,
+                 uplink_bps=300e6, rtt_s=0.02, capability=1.0),
+    ))
+
+
+@pytest.mark.slow
+def test_session_move_ships_parked_state_to_preferred_tier():
+    """With a move threshold, a turn whose parked tier is busier than an
+    idle identical twin ships the parked payload there instead of sticking
+    — and still resumes warm. Identical decision through both backends."""
+    topo = _equal_twin_topology()
+    sv = ServingConfig(max_batch=1, max_seq=256)
+    server = ClusterServer(
+        build_cluster_engines(topo, sv), topology=topo,
+        scheduler=MoAOffScheduler(policy=make_policy(
+            "moa-off", PolicyConfig(adaptive_tau=False), topology=topo)),
+        sessions=True, session_move_threshold=1)
+    # turn 1 parks on edge (idle tie-break picks the first twin)
+    server.submit_turn("s", "hello there friend. ", max_new=4,
+                       complexity={"text": 0.05})
+    server.run()
+    assert server.results[0].tier == "edge"
+    # a blocker queues on edge; turn 2 then prefers the idle twin and the
+    # parked state moves ahead of it
+    server.submit("block the edge tier for a while please. " * 2,
+                  max_new=60, complexity={"text": 0.05})
+    rid2 = server.submit_turn("s", "tell me more. ", max_new=4,
+                              complexity={"text": 0.05})
+    server.run()
+    res2 = next(r for r in server.results if r.rid == rid2)
+    trace = server.runtime.records[rid2].trace()
+    assert res2.tier == "edge2"
+    assert ("session_move", "edge2") in trace
+    assert res2.warm == "resume"  # moved AND resumed warm
+    assert server.runtime.session_moves == 1
+
+    # analytic mirror: same decisions on the same topology
+    sim = ClusterSimulator(SimConfig(seed=0),
+                           policy_cfg=PolicyConfig(adaptive_tau=False),
+                           topology=_equal_twin_topology(),
+                           sessions=True, session_move_threshold=1)
+    from repro.core.request import ModalityInput, Request
+
+    def sim_req(rid, t, tokens, decode, sid):
+        return Request(rid=rid, arrival_s=t, modalities={
+            "text": ModalityInput("text", size_bytes=tokens * 4,
+                                  complexity=0.05,
+                                  meta={"tokens": tokens, "entities": 0,
+                                        "sentences": 1})},
+            decode_tokens=decode, slo_s=30.0, session=sid)
+
+    sim.submit(sim_req(0, 1.0, 8, 4, "s"))
+    sim.submit(sim_req(1, 10.0, 16, 200, None))  # queues on edge
+    sim.submit(sim_req(2, 10.001, 16, 4, "s"))
+    sim.run()
+    at = sim.runtime.records[2].trace()
+    assert ("session_move", "edge2") in at
+    assert ("resume", "edge2") in at
+    assert sim.runtime.session_moves == 1
+
+
+def test_sticky_turn_overrides_modality_routes():
+    """A sticky session turn serves ENTIRELY on the parked tier even when
+    the scheduler would route a modality elsewhere: no phantom off-fusion
+    encode or WAN transfer is charged for work that never happens."""
+    from repro.core.request import ModalityInput, Request
+
+    def turn(rid, t, tokens, sid, cx):
+        return Request(rid=rid, arrival_s=t, modalities={
+            "text": ModalityInput("text", size_bytes=tokens * 4,
+                                  complexity=cx,
+                                  meta={"tokens": tokens, "entities": 0,
+                                        "sentences": 1})},
+            decode_tokens=8, slo_s=30.0, session=sid)
+
+    sim = ClusterSimulator(SimConfig(seed=0),
+                           policy_cfg=PolicyConfig(adaptive_tau=False),
+                           topology=two_tier_topology(), sessions=True)
+    sim.submit(turn(0, 1.0, 32, "s", 0.05))  # parks on edge
+    # turn 2 is complex enough that the scheduler would pick cloud — but
+    # the parked KV lives on edge, so the turn sticks and serves there
+    sim.submit(turn(1, 100.0, 96, "s", 0.95))
+    sim.run()
+    out = {o.rid: o for o in sim.outcomes}
+    assert out[1].warm == "resume"
+    assert out[1].served_tier == "edge"
+    assert out[1].routes == {"text": "edge"}  # overridden with the stick
+    assert out[1].transfer_bytes == 0.0  # nothing crossed the WAN
+    trace = sim.runtime.records[1].trace()
+    assert ("sticky", "edge") in trace
+    assert not any(s.startswith("encode") or s == "transfer"
+                   for s, _ in trace)
+    # control: without a session the same request goes to cloud
+    ctl = ClusterSimulator(SimConfig(seed=0),
+                           policy_cfg=PolicyConfig(adaptive_tau=False),
+                           topology=two_tier_topology())
+    ctl.submit(turn(0, 1.0, 96, None, 0.95))
+    ctl.run()
+    assert ctl.outcomes[0].served_tier == "cloud"
+
+
+def test_analytic_sessions_charge_suffix_only():
+    """With sessions on, turn 2's service pays less prefill than the same
+    request cold: lower flops AND lower latency, with the warm trace."""
+    from repro.core.request import ModalityInput, Request
+
+    def turn(rid, t, tokens, sid):
+        return Request(rid=rid, arrival_s=t, modalities={
+            "text": ModalityInput("text", size_bytes=tokens * 4,
+                                  complexity=0.05,
+                                  meta={"tokens": tokens, "entities": 0,
+                                        "sentences": 1})},
+            decode_tokens=16, slo_s=30.0, session=sid)
+
+    def run(sessions):
+        sim = ClusterSimulator(SimConfig(seed=0),
+                               policy_cfg=PolicyConfig(adaptive_tau=False),
+                               topology=two_tier_topology(),
+                               sessions=sessions)
+        sim.submit(turn(0, 1.0, 64, "s"))
+        sim.submit(turn(1, 100.0, 200, "s"))  # extends the history
+        sim.run()
+        return sim
+
+    warm = run(True)
+    cold = run(False)
+    w1 = next(o for o in warm.outcomes if o.rid == 1)
+    c1 = next(o for o in cold.outcomes if o.rid == 1)
+    assert w1.warm == "resume" and c1.warm == ""
+    assert w1.warm_tokens > 0
+    assert sum(w1.tier_flops.values()) < sum(c1.tier_flops.values())
+    assert w1.latency_s < c1.latency_s
+    assert ("park", w1.served_tier) in warm.runtime.records[0].trace()
+    m = warm.metrics()
+    assert {"resumed", "prefix_hits", "warm_tokens",
+            "session_moves"} <= set(m)
+    assert "resumed" not in cold.metrics()  # gated: golden key set intact
+
+
+def test_analytic_prefix_mirror_hits_on_real_ids():
+    """Requests carrying real token ids hit the analytic prefix mirror the
+    same way the live engine does: same content rule, suffix-only cost."""
+    from repro.core.request import ModalityInput, Request
+
+    rng = np.random.default_rng(0)
+    base = rng.integers(4, 200, size=64).astype(np.int32)
+    full = np.concatenate([base, rng.integers(4, 200, 32).astype(np.int32)])
+
+    def req(rid, t, ids):
+        return Request(rid=rid, arrival_s=t, modalities={
+            "text": ModalityInput("text", data=ids,
+                                  size_bytes=len(ids) * 4, complexity=0.05,
+                                  meta={"tokens": len(ids), "entities": 0,
+                                        "sentences": 1})},
+            decode_tokens=8, slo_s=30.0)
+
+    sim = ClusterSimulator(SimConfig(seed=0),
+                           policy_cfg=PolicyConfig(adaptive_tau=False),
+                           topology=two_tier_topology(),
+                           prefix_cache_mb=64.0)
+    sim.submit(req(0, 1.0, base))
+    sim.submit(req(1, 100.0, full))
+    sim.submit(req(2, 200.0, full[:32]))  # shares only the 16/32 buckets
+    sim.run()
+    out = {o.rid: o for o in sim.outcomes}
+    assert out[0].warm == ""
+    assert out[1].warm == "prefix" and out[1].warm_tokens == len(base)
+    assert out[2].warm == "prefix" and out[2].warm_tokens == 16
+    assert sim.backend.prefix_hits == 2
+
+
+def test_live_session_turns_resume_and_park():
+    """Fast live path: two turns of one session through ClusterServer's
+    submit_turn — turn 2 routes sticky, resumes the parked state, and
+    prefills only its suffix (prefill counter proof)."""
+    server = _two_tier_server(sessions=True)
+    server.submit_turn("chat", "hello there, introduce Yourself please. ",
+                       max_new=4, complexity={"text": 0.05})
+    server.run()
+    (r1,) = server.results
+    assert r1.warm == ""
+    eng = server.engines[r1.tier]
+    pf0 = eng.prefill_tokens
+    server.submit_turn("chat", "now expand on that Thought. ",
+                       max_new=4, complexity={"text": 0.05})
+    server.run()
+    r2 = server.results[1]
+    assert r2.warm == "resume" and r2.warm_tokens > 0
+    trace = server.runtime.records[r2.rid].trace()
+    assert ("sticky", r1.tier) in trace
+    assert ("resume", r2.tier) in trace
+    assert ("park", r1.tier) in trace  # turn 2 re-parked for turn 3
+    # only the new tokens (last generated + new text) were prefilled
+    hist_len = len(server._session_hist["chat"]["ids"])
+    assert eng.prefill_tokens - pf0 < hist_len
+    assert server.backend.parked_sessions()[r1.tier] == 1
+
+
+def test_ssm_warm_scan_prefix_hit_fast(family_model):
+    """The recurrent-state warm path (per-token decode scan, exact-length
+    store entries) on the smoke lane: state families hit only on prompts
+    extending the EXACT stored sequence."""
+    cfg, params = family_model("ssm")
+    base, ext, _ = _family_inputs(cfg, base_len=24, ext_len=6)
+    cold = make_engine(cfg, params)
+    cold.submit(0, np.concatenate([base, ext]), max_new=4)
+    want = _drain_tokens(cold, 0)
+
+    warm = make_engine(cfg, params, prefix_cache_mb=64.0)
+    warm.submit(0, base, max_new=4)
+    _drain_tokens(warm, 0)
+    # a shorter prefix of the stored sequence cannot hit (no slicing of
+    # point-in-time state): different suffix start -> cold
+    warm.submit(1, np.concatenate([base[:20], ext]), max_new=4)
+    _drain_tokens(warm, 1)
+    assert warm.prefix_hits == 0
+    warm.submit(2, np.concatenate([base, ext]), max_new=4)
+    assert _drain_tokens(warm, 2) == want
+    assert warm.prefix_hits == 1 and warm.prefix_hit_tokens == len(base)
+
+
+def test_live_prefix_cache_across_requests_two_tier():
+    """Two independent requests sharing a system prefix: the second is a
+    prefix hit on the live path, with identical tokens to a cold replay."""
+    sv = ServingConfig(max_batch=2, max_seq=256, prefix_cache_mb=64.0)
+    server = _two_tier_server(sv)
+    system = "you are a Helpful assistant; answer with Care please. " * 2
+    server.submit(system + "first question about the Weather. ",
+                  max_new=4, complexity={"text": 0.05})
+    server.run()
+    server.submit(system + "second question about the Ocean. ",
+                  max_new=4, complexity={"text": 0.05})
+    server.run()
+    warm_res = server.results[1]
+    assert warm_res.warm == "prefix"
+    assert warm_res.warm_tokens > 0
+    trace = server.runtime.records[warm_res.rid].trace()
+    assert ("prefix", warm_res.tier) in trace
+
+    cold = _two_tier_server()
+    cold.submit(system + "first question about the Weather. ",
+                max_new=4, complexity={"text": 0.05})
+    cold.run()
+    cold.submit(system + "second question about the Ocean. ",
+                max_new=4, complexity={"text": 0.05})
+    cold.run()
+    assert server.results[1].tokens == cold.results[1].tokens
