@@ -210,6 +210,69 @@ def run_hedge_migration(args) -> dict:
     return out
 
 
+def run_sessions(args) -> dict:
+    """Multi-turn chat through the WHOLE control plane: N sessions x T
+    turns (shared system prompt) on the two-tier cluster, with sessions +
+    prefix cache ON vs the sessionless replay (every turn re-submits and
+    re-prefills its full history). Reports per-turn mean TTFT, the warm
+    fraction, and the engines' prefill-token counters — the proof that
+    only suffixes were prefilled on warm turns."""
+    topo = get_topology("edge-cloud")
+    n_sessions = 2 if args.smoke else 4
+    turns = 3 if args.smoke else 4
+    warmup = 2  # compile-warmup sessions (excluded from the stats)
+    system = "you are a Helpful assistant; answer with Care. " * 40
+    out = {}
+    for mode in ("cold", "warm"):
+        sv = ServingConfig(
+            max_batch=4, max_seq=1024,
+            prefix_cache_mb=64.0 if mode == "warm" else 0.0,
+            session_cache_mb=64.0 if mode == "warm" else 0.0)
+        server = ClusterServer(
+            build_cluster_engines(topo, sv), topology=topo,
+            scheduler=MoAOffScheduler(policy=make_policy(
+                "moa-off", topology=topo)),
+            sessions=(mode == "warm"))
+        # compile warmup: throwaway sessions with the same turn lengths
+        # (session 1 additionally traces the cross-session prefix-hit path)
+        for s in range(n_sessions + warmup):
+            for turn in range(turns):
+                text = (system if turn == 0 else "") + (
+                    f"turn {turn}: expand on Topic {s} with Detail. ")
+                # submit_turn builds the full-history prompt either way;
+                # with the runtime's sessions off this is the sessionless
+                # replay — every turn re-prefills the whole conversation
+                server.submit_turn(f"chat-{s}", text, max_new=12,
+                                   slo_s=args.slo,
+                                   complexity={"text": 0.05})
+                server.run(timeout_s=args.timeout)
+        results = server.results
+        timed = results[warmup * turns:]  # warmup sessions excluded
+        per_turn = [[] for _ in range(turns)]
+        for i, r in enumerate(timed):
+            per_turn[i % turns].append(r.ttft_s)
+        out[mode] = {
+            "n": len(timed),
+            "turn_ttft_s": [float(np.mean(t)) for t in per_turn],
+            "warm_frac": float(np.mean([bool(r.warm) for r in timed])),
+            "warm_tokens": float(sum(r.warm_tokens for r in timed)),
+            "prefill_tokens": {t_: e.prefill_tokens
+                               for t_, e in server.engines.items()},
+        }
+        print(f"  [sessions/{mode}] per-turn ttft "
+              f"{[f'{v * 1e3:.1f}' for v in out[mode]['turn_ttft_s']]} ms "
+              f"warm={out[mode]['warm_frac']:.2f} "
+              f"prefill={out[mode]['prefill_tokens']}", flush=True)
+    warm_t = np.mean(out["warm"]["turn_ttft_s"][1:])
+    cold_t = np.mean(out["cold"]["turn_ttft_s"][1:])
+    out["warm_turn_ttft_speedup"] = float(cold_t / max(warm_t, 1e-9))
+    out["config"] = {"sessions": n_sessions, "turns": turns,
+                     "system_prompt_words": len(system.split())}
+    print(f"  [sessions] warm-turn ttft speedup "
+          f"{out['warm_turn_ttft_speedup']:.2f}x", flush=True)
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=24)
@@ -254,6 +317,10 @@ def main() -> None:
     print("[hedge migration] re-prefill clones vs cross-tier KV migration "
           "on edge-edge-cloud…", flush=True)
     results["hedge_migration"] = run_hedge_migration(args)
+
+    print("[sessions] multi-turn chat with prefix & session KV reuse vs "
+          "sessionless replay on edge-cloud…", flush=True)
+    results["multiturn_sessions"] = run_sessions(args)
 
     payload = {
         "bench": "cluster_live",
