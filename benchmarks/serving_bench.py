@@ -223,6 +223,141 @@ def bench_multiturn(cfg, params, max_batch: int, max_seq: int,
     return out
 
 
+def _dense_kv_bytes(eng: TierEngine) -> float:
+    """Device bytes the dense engine's KV cache reserves (allocated up
+    front for max_batch x max_seq, used or not)."""
+    return float(sum(leaf.nbytes for leaf in jax.tree.leaves(eng.cache)))
+
+
+def bench_concurrency_sweep(cfg, params, base_batch: int, max_seq: int,
+                            fused: int, decode_impl: str,
+                            factors: List[int], prompt_len: int,
+                            max_new: int) -> dict:
+    """Paged vs dense at EQUAL device KV bytes, concurrency swept up to
+    64x the dense slot count.
+
+    The dense engine reserves ``base_batch`` full-length rows, so it can
+    never run more than ``base_batch`` requests at once — excess requests
+    queue. The paged engine gets the SAME pool bytes
+    (``base_batch * max_seq / page`` pages) but slots are cheap (a page
+    table each), so short requests pack the pool: at 8-64x concurrency it
+    decodes everyone together while dense serializes. Reported per level:
+    tokens/s over the drain, p95 TTFT, and peak KV bytes actually used
+    (paged: high-water pages; dense: the full up-front reservation)."""
+    page = 32
+    pool_pages = base_batch * max_seq // page
+    model = build_model(cfg)
+    out = {"base_batch": base_batch, "max_seq": max_seq,
+           "kv_page_size": page, "equal_pool_pages": pool_pages,
+           "prompt_len": prompt_len, "max_new": max_new, "levels": []}
+    for f in factors:
+        n = base_batch * f
+        row = {"factor": f, "concurrency": n}
+        for mode in ("dense", "paged"):
+            if mode == "dense":
+                sv = ServingConfig(max_batch=base_batch, max_seq=max_seq,
+                                   fused_steps=fused,
+                                   decode_impl=decode_impl)
+            else:
+                sv = ServingConfig(max_batch=n, max_seq=max_seq,
+                                   fused_steps=fused, decode_impl=decode_impl,
+                                   paged=True, kv_page_size=page,
+                                   kv_pool_pages=pool_pages)
+            eng = TierEngine(model, params, sv, eos_id=-1)
+
+            def round_once():
+                for rid in range(n):
+                    eng.submit(rid, _prompt(prompt_len + rid % 4),
+                               max_new=max_new)
+                t0 = time.perf_counter()
+                eng.run_until_drained()
+                dt = time.perf_counter() - t0
+                states, eng.finished = eng.finished, []
+                return dt, [s.t_first_token - s.t_submit for s in states]
+
+            round_once()  # compile warmup (same shapes as the timed round)
+            tok0 = eng.decode_tokens
+            dt, ttft = round_once()
+            g = eng.kv_gauges()
+            row[mode] = {
+                "tok_s": (eng.decode_tokens - tok0) / dt,
+                "p95_ttft_ms": float(np.percentile(ttft, 95) * 1e3),
+                "peak_kv_bytes": (g["pages_high_water"] * g["page_bytes"]
+                                  if mode == "paged"
+                                  else _dense_kv_bytes(eng)),
+            }
+        row["tok_s_ratio"] = row["paged"]["tok_s"] / row["dense"]["tok_s"]
+        out["levels"].append(row)
+        print(f"  conc={n:3d} ({f:2d}x): paged "
+              f"{row['paged']['tok_s']:8.0f} tok/s "
+              f"p95 {row['paged']['p95_ttft_ms']:8.1f} ms "
+              f"{row['paged']['peak_kv_bytes'] / 1e6:7.2f} MB | dense "
+              f"{row['dense']['tok_s']:8.0f} tok/s "
+              f"p95 {row['dense']['p95_ttft_ms']:8.1f} ms "
+              f"{row['dense']['peak_kv_bytes'] / 1e6:7.2f} MB | "
+              f"ratio {row['tok_s_ratio']:.2f}x")
+    return out
+
+
+def bench_prefix_fanout(cfg, params, max_seq: int, fused: int,
+                        decode_impl: str, n_clients: int, sys_len: int,
+                        max_new: int) -> dict:
+    """Shared-prefix fan-out: ``n_clients`` concurrent requests extend ONE
+    long system prompt. Paged serving maps the stored prefix pages into
+    every client copy-on-write (one physical copy, refcounted), so peak KV
+    bytes stay near one prefix + n short tails; dense duplicates the
+    prefix rows into every slot."""
+    model = build_model(cfg)
+    sys_ids = _prompt(sys_len)
+    rng = np.random.default_rng(3)
+    out = {"n_clients": n_clients, "system_prompt_len": sys_len,
+           "max_new": max_new}
+    for mode in ("dense", "paged"):
+        kw = dict(max_batch=n_clients, max_seq=max_seq, fused_steps=fused,
+                  decode_impl=decode_impl, prefix_cache_mb=64.0)
+        if mode == "paged":
+            kw.update(paged=True, kv_page_size=32)
+        eng = TierEngine(model, params, ServingConfig(**kw), eos_id=-1)
+
+        def round_once(rid0):
+            eng.submit(rid0, sys_ids, max_new=1)  # seed the prefix store
+            eng.run_until_drained()
+            for i in range(n_clients):
+                tail = rng.integers(4, 200, 8 + i % 4).astype(np.int32)
+                eng.submit(rid0 + 1 + i, np.concatenate([sys_ids, tail]),
+                           max_new=max_new)
+            t0 = time.perf_counter()
+            eng.run_until_drained()
+            dt = time.perf_counter() - t0
+            states = [s for s in eng.finished if s.rid > rid0]
+            eng.finished.clear()
+            return dt, [s.t_first_token - s.t_submit for s in states]
+
+        round_once(0)  # compile warmup
+        tok0, pf0 = eng.decode_tokens, eng.prefill_tokens
+        dt, ttft = round_once(1000)
+        g = eng.kv_gauges()
+        out[mode] = {
+            "tok_s": (eng.decode_tokens - tok0) / dt,
+            "p95_ttft_ms": float(np.percentile(ttft, 95) * 1e3),
+            "prefill_tokens": eng.prefill_tokens - pf0,
+            "prefix_hits": eng.prefix_hits,
+            "peak_kv_bytes": (g["pages_high_water"] * g["page_bytes"]
+                              if mode == "paged" else _dense_kv_bytes(eng)),
+        }
+        if mode == "paged":
+            out[mode]["pages_shared_peak"] = g["pages_shared"]
+    out["kv_bytes_ratio_dense_over_paged"] = (
+        out["dense"]["peak_kv_bytes"] / max(out["paged"]["peak_kv_bytes"], 1))
+    print(f"  fanout x{n_clients}: paged {out['paged']['tok_s']:.0f} tok/s, "
+          f"{out['paged']['peak_kv_bytes'] / 1e6:.2f} MB peak "
+          f"({out['paged']['prefill_tokens']} tok prefilled) | dense "
+          f"{out['dense']['tok_s']:.0f} tok/s, "
+          f"{out['dense']['peak_kv_bytes'] / 1e6:.2f} MB | KV bytes "
+          f"{out['kv_bytes_ratio_dense_over_paged']:.1f}x smaller paged")
+    return out
+
+
 def run(batches: List[int], max_seq: int, fused_steps: int, prompt_len: int,
         decode_tokens: int, prefill_rounds: int, model_name: str,
         decode_impl: str) -> dict:
@@ -319,6 +454,17 @@ def main() -> None:
         n_sessions=1 if args.smoke else 3,
         turns=3 if args.smoke else 4, sys_len=320, turn_len=12,
         max_new=12)
+    print("paged KV concurrency sweep (equal pool bytes)…")
+    out["paged_concurrency_sweep"] = bench_concurrency_sweep(
+        cfg, params, base_batch=4, max_seq=args.max_seq,
+        fused=args.fused_steps, decode_impl=args.decode_impl,
+        factors=[1, 8] if args.smoke else [1, 8, 16, 32, 64],
+        prompt_len=args.prompt_len, max_new=16)
+    print("shared-prefix fan-out (copy-free CoW sharing)…")
+    out["paged_prefix_fanout"] = bench_prefix_fanout(
+        cfg, params, max_seq=args.max_seq, fused=args.fused_steps,
+        decode_impl=args.decode_impl,
+        n_clients=8 if args.smoke else 16, sys_len=128, max_new=8)
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
         f.write("\n")

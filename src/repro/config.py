@@ -360,7 +360,26 @@ class ClusterTopology:
 class ServingConfig:
     max_batch: int = 32
     max_seq: int = 4_096
+    # --- paged KV pool ---
+    # KV rows live in fixed-size pages; each slot holds a page table into a
+    # shared physical pool, so concurrency is bounded by POOL pages, not by
+    # max_batch * max_seq dense rows. Admission is continuous (a request is
+    # admitted the moment enough pages free up, splitting the fused block at
+    # the page-pressure boundary) and prefix/session hits map shared pages
+    # copy-on-write into the new slot's table. ``paged=False`` keeps the
+    # dense per-slot pool (the parity baseline).
+    paged: bool = False
     kv_page_size: int = 256
+    # physical pages in the pool, EXCLUDING the null page. 0 -> auto-size to
+    # max_batch * (max_seq // kv_page_size): every slot can hold a full
+    # sequence, so admission order (and thus decode output) is identical to
+    # the dense pool. Benchmarks shrink this to trade capacity for memory.
+    kv_pool_pages: int = 0
+    # warm admissions for recurrent families (ssm/hybrid) replay the suffix
+    # in ONE chunked pass seeded from the cached state (decode_chunk_recurrent)
+    # instead of a per-token warm scan. Bit-identical state trajectory; flip
+    # off to fall back to the sequential scan.
+    chunked_recurrent_suffix: bool = True
     prefill_chunk: int = 2_048
     hedge_after_s: float = 1.5  # straggler mitigation: hedged re-issue
     retry_limit: int = 2
@@ -404,6 +423,47 @@ class ServingConfig:
     session_cache_mb: float = 64.0
     # smallest prefix worth storing/hitting (shorter prompts re-prefill)
     prefix_min_tokens: int = 16
+
+    def __post_init__(self):
+        ps = self.kv_page_size
+        if ps <= 0 or ps & (ps - 1):
+            raise ValueError(
+                f"kv_page_size must be a positive power of two, got {ps} "
+                f"(page-table arithmetic uses shifts/masks)")
+        if ps < 8:
+            raise ValueError(
+                f"kv_page_size {ps} < 8: page tables would carry "
+                f"max_seq/page_size = {self.max_seq // max(ps, 1)} entries "
+                f"per slot; use >= 8")
+        if self.paged and self.max_seq % ps:
+            raise ValueError(
+                f"kv_page_size {ps} must divide max_seq {self.max_seq} so "
+                f"every slot's page table has a whole number of pages")
+        if self.paged and ps > self.max_seq:
+            raise ValueError(
+                f"kv_page_size {ps} exceeds max_seq {self.max_seq}: the "
+                f"context-bucket ladder (min 32) could never cover a page")
+        if self.kv_pool_pages < 0:
+            raise ValueError(
+                f"kv_pool_pages must be >= 0 (0 = auto-size), got "
+                f"{self.kv_pool_pages}")
+        if self.paged and self.kv_pool_pages:
+            need = self.max_seq // ps
+            if self.kv_pool_pages < need:
+                raise ValueError(
+                    f"kv_pool_pages {self.kv_pool_pages} < {need} pages "
+                    f"needed to hold ONE max_seq={self.max_seq} sequence at "
+                    f"kv_page_size={ps}; no request could ever be admitted")
+
+    @property
+    def pages_per_slot(self) -> int:
+        """Page-table length: logical pages covering one full sequence."""
+        return self.max_seq // self.kv_page_size
+
+    @property
+    def pool_pages(self) -> int:
+        """Physical pages in the paged pool (excluding the null page)."""
+        return self.kv_pool_pages or self.max_batch * self.pages_per_slot
 
 
 @dataclass(frozen=True)

@@ -91,6 +91,7 @@ class MoAOffScheduler:
                 bandwidth_bps: Optional[float] = None,
                 latency_s: Optional[float] = None,
                 parked: Optional[Dict[str, int]] = None,
+                kv: Optional[Dict[str, float]] = None,
                 edge_load: Optional[float] = None,
                 cloud_load: Optional[float] = None) -> None:
         """Feed one batch of system observations into the EWMA estimator.
@@ -99,7 +100,9 @@ class MoAOffScheduler:
         ``queue_depths`` / per-remote-tier ``bandwidths``, plus the scalar
         Eq. 5 WAN ``bandwidth_bps`` and per-request ``latency_s`` feedback.
         ``parked`` is the cache-affinity signal: parked multi-turn sessions
-        per tier, whose next turns will route sticky to that tier.
+        per tier, whose next turns will route sticky to that tier. ``kv``
+        is the per-tier KV-pool headroom (free page fraction) — real memory
+        pressure, finer-grained than slot occupancy.
         ``edge_load=`` / ``cloud_load=`` are a deprecated two-tier shim kept
         for out-of-tree callers; they fold into ``loads``.
         """
@@ -120,6 +123,8 @@ class MoAOffScheduler:
             self.estimator.observe_queue_depths(queue_depths)
         if parked:
             self.estimator.observe_parked_sessions(parked)
+        if kv:
+            self.estimator.observe_kv_headroom(kv)
         if bandwidth_bps is not None:
             self.estimator.observe_bandwidth(bandwidth_bps)
         if bandwidths:

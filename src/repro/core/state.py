@@ -47,6 +47,10 @@ class SystemState:
         # next turns will stick there, i.e. near-future load the raw queue
         # depths don't show yet)
         self.parked_sessions: Dict[str, int] = {}
+        # real per-tier KV headroom (free fraction of the paged KV pool,
+        # [0, 1]): finer-grained than slot occupancy — a tier can have free
+        # slots but no pages (long contexts) or free pages but no slots
+        self.kv_headroom: Dict[str, float] = {}
 
     # -- per-tier access ----------------------------------------------------
 
@@ -55,6 +59,10 @@ class SystemState:
 
     def parked(self, tier: str) -> int:
         return self.parked_sessions.get(tier, 0)
+
+    def kv(self, tier: str) -> float:
+        """KV-pool headroom toward ``tier`` (1.0 when untracked)."""
+        return self.kv_headroom.get(tier, 1.0)
 
     def queue_depth(self, tier: str) -> int:
         return self.queue_depths.get(tier, 0)
@@ -147,6 +155,11 @@ class StateEstimator:
         for tier, n in parked.items():
             self.state.parked_sessions[tier] = int(n)
 
+    def observe_kv_headroom(self, kv: Dict[str, float]) -> None:
+        """Per-tier KV-pool headroom (exact page counts, not smoothed)."""
+        for tier, h in kv.items():
+            self.state.kv_headroom[tier] = float(h)
+
     def observe_latency(self, seconds: float) -> None:
         self._lat_window.append(float(seconds))
 
@@ -163,4 +176,5 @@ class StateEstimator:
                            queue_depths=dict(s.queue_depths),
                            bandwidths=dict(s.bandwidths))
         snap.parked_sessions = dict(s.parked_sessions)
+        snap.kv_headroom = dict(s.kv_headroom)
         return snap

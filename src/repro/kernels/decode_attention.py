@@ -65,6 +65,84 @@ def _kernel(q_ref, k_ref, v_ref, posq_ref, posc_ref, o_ref,
                        jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
 
 
+def _paged_kernel(pages_ref, q_ref, k_ref, v_ref, posq_ref, posc_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, scale: float,
+                  window: Optional[int], n_t: int):
+    # the page table is consumed by the k/v index_maps (scalar prefetch);
+    # the block body is the exact dense flash-decode update
+    del pages_ref
+    _kernel(q_ref, k_ref, v_ref, posq_ref, posc_ref, o_ref,
+            acc_ref, m_ref, l_ref, scale=scale, window=window, n_t=n_t)
+
+
+def decode_attention_pallas_paged(q: jax.Array, k_pool: jax.Array,
+                                  v_pool: jax.Array, pages: jax.Array,
+                                  pos_q: jax.Array, pos_cache: jax.Array, *,
+                                  window: Optional[int] = None,
+                                  interpret: Optional[bool] = None
+                                  ) -> jax.Array:
+    """Paged flash-decode: the KV context is gathered page-by-page THROUGH
+    the page table, straight out of the shared physical pool.
+
+    q: (B,1,H,hd); k/v_pool: (P, page, K, hd) physical pages; pages: (B, NP)
+    int32 page table rows (0 = the engine's null page); pos_q: (B,);
+    pos_cache: (B, T<=NP*page) absolute positions per logical row.
+
+    The page table rides in as a scalar-prefetch operand: the kv BlockSpec
+    index_map reads ``pages[b, it]`` to pick the PHYSICAL page for grid step
+    ``it``, so each page streams from HBM exactly once and no gathered copy
+    of the context is ever materialized. Entries past ``pos_cache``'s width
+    (the partial last page) and null-page garbage carry pos = -1 and mask to
+    an exact zero, like the dense kernel's empty slots.
+    """
+    if interpret is None:
+        interpret = auto_interpret()
+    b, _, h, hd = q.shape
+    kh = k_pool.shape[2]
+    g = h // kh
+    page = k_pool.shape[1]
+    n_p = pages.shape[1]
+    t = pos_cache.shape[1]
+    if t < n_p * page:  # pad the ragged tail; pos -1 masks the pad entries
+        pos_cache = jnp.pad(pos_cache, ((0, 0), (0, n_p * page - t)),
+                            constant_values=-1)
+    scale = hd ** -0.5
+
+    qg = q[:, 0].reshape(b, kh, g, hd)
+    posq2 = pos_q.reshape(b, 1).astype(jnp.int32)
+    posc = pos_cache
+
+    kernel = functools.partial(_paged_kernel, scale=scale, window=window,
+                               n_t=n_p)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kh, n_p),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda pg, b_, kh_, it: (b_, kh_, 0, 0)),
+            pl.BlockSpec((1, page, 1, hd),
+                         lambda pg, b_, kh_, it: (pg[b_, it], 0, kh_, 0)),
+            pl.BlockSpec((1, page, 1, hd),
+                         lambda pg, b_, kh_, it: (pg[b_, it], 0, kh_, 0)),
+            pl.BlockSpec((1, 1), lambda pg, b_, kh_, it: (b_, 0)),
+            pl.BlockSpec((1, page), lambda pg, b_, kh_, it: (b_, it)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda pg, b_, kh_, it: (b_, kh_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, hd), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, hd), q.dtype),
+        interpret=interpret,
+    )(pages.astype(jnp.int32), qg, k_pool, v_pool, posq2, posc)
+    return out.reshape(b, 1, h, hd)
+
+
 def decode_attention_pallas(q: jax.Array, k_cache: jax.Array,
                             v_cache: jax.Array, pos_q: jax.Array,
                             pos_cache: jax.Array, *,

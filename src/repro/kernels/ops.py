@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ComplexityConfig
-from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.decode_attention import (decode_attention_pallas,
+                                            decode_attention_pallas_paged)
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.image_complexity import image_stats_pallas
 from repro.kernels.runtime import auto_interpret as _auto_interpret
@@ -105,4 +106,21 @@ def decode_attention(q, k_cache, v_cache, pos_q, pos_cache, *,
     qp = qp * (qp.shape[-1] ** 0.5) * (hd ** -0.5)
     out = decode_attention_pallas(qp, kp, vp, pos_q, pos_cache, window=window,
                                   block_t=block_t, interpret=interpret)
+    return out[..., :hd]
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def decode_attention_paged(q, k_pool, v_pool, pages, pos_q, pos_cache, *,
+                           window: Optional[int] = None,
+                           interpret: Optional[bool] = None):
+    """Paged flash-decode: k/v_pool (P, page, K, hd) physical pages, pages
+    (B, NP) int32 page-table rows, pos_cache (B, T) absolute positions."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    qp, hd = _pad_head(q)
+    kp, _ = _pad_head(k_pool)
+    vp, _ = _pad_head(v_pool)
+    qp = qp * (qp.shape[-1] ** 0.5) * (hd ** -0.5)
+    out = decode_attention_pallas_paged(qp, kp, vp, pages, pos_q, pos_cache,
+                                        window=window, interpret=interpret)
     return out[..., :hd]

@@ -95,12 +95,22 @@ def main() -> None:
     ap.add_argument("--max-seq", type=int, default=128,
                     help="engine cache capacity (grow it for long "
                          "multi-turn histories)")
+    ap.add_argument("--paged", dest="paged", action="store_true",
+                    default=True,
+                    help="paged KV pool with continuous admission and "
+                         "copy-free CoW prefix sharing (launcher default)")
+    ap.add_argument("--no-paged", dest="paged", action="store_false",
+                    help="escape hatch: dense per-slot KV cache")
+    ap.add_argument("--kv-page-size", type=int, default=64,
+                    help="KV rows per physical page (power of two dividing "
+                         "--max-seq; with --paged)")
     args = ap.parse_args()
 
     sv = ServingConfig(max_batch=args.max_batch, max_seq=args.max_seq,
                        fused_steps=args.fused_steps,
                        decode_impl=args.decode_impl,
-                       prefix_cache_mb=args.prefix_cache_mb)
+                       prefix_cache_mb=args.prefix_cache_mb,
+                       paged=args.paged, kv_page_size=args.kv_page_size)
     topo = get_topology(args.topology)
     if args.bandwidth is not None:
         topo = dataclasses.replace(topo, tiers=tuple(
@@ -179,6 +189,14 @@ def main() -> None:
           f"{pre} prompt tokens prefilled, {enc} patch tokens encoded "
           f"({server.backend.offloaded_encodes} images encoded off-fusion; "
           f"fused_steps={args.fused_steps})")
+    if args.paged:
+        for tier, eng in sorted(server.engines.items()):
+            g = eng.kv_gauges()
+            print(f"  kv[{tier}]: {g['pages_free']}/{g['pages_total']} "
+                  f"pages free, {g['pages_shared']} shared (CoW), "
+                  f"high-water {g['pages_high_water']} "
+                  f"({g['pages_high_water'] * g['page_bytes'] / 1e6:.2f} MB "
+                  f"peak)")
     for r in sorted(results, key=lambda r: r.rid)[:10]:
         flags = "".join(f" {f}" for f, on in
                         (("hedged", r.hedged), ("truncated", r.truncated),

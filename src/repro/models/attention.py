@@ -229,6 +229,55 @@ def decode_attention_xla(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return o.reshape(b, 1, h, d).astype(q.dtype)
 
 
+def decode_attention_paged_xla(q: jax.Array, k_pool: jax.Array,
+                               v_pool: jax.Array, pages: jax.Array,
+                               pos_q: jax.Array, pos_cache: jax.Array, *,
+                               window: Optional[int] = None) -> jax.Array:
+    """One-token decode through a page table into a shared physical pool.
+
+    q: (B, 1, H, hd); k/v_pool: (P, page, K, hd) physical pages (page 0 is
+    the engine's null page); pages: (B, NP) int32 page table covering the
+    attended context; pos_q: (B,); pos_cache: (B, T<=NP*page) absolute
+    position per LOGICAL row (-1 = empty/unwritten — null-page garbage is
+    masked here, which is what makes unmapped entries safe to gather).
+
+    The gather materializes each row's attended context (the same bytes the
+    attention contraction reads anyway) and then defers to the dense decode
+    path SLICED to ``pos_cache``'s width — so paged and dense decode see
+    byte-identical operands and reduce in the same order: token-for-token
+    parity is by construction, not by tolerance.
+    """
+    b, np_ = pages.shape
+    page = k_pool.shape[1]
+    t = pos_cache.shape[1]
+    # (B, NP, page, K, hd) -> (B, NP*page, K, hd), sliced to the exact
+    # context width the dense path would attend
+    k_ctx = k_pool[pages].reshape(b, np_ * page, *k_pool.shape[2:])[:, :t]
+    v_ctx = v_pool[pages].reshape(b, np_ * page, *v_pool.shape[2:])[:, :t]
+    return decode_attention_xla(q, k_ctx, v_ctx, pos_q, pos_cache,
+                                window=window)
+
+
+def decode_attention_paged(q, k_pool, v_pool, pages, pos_q, pos_cache, *,
+                           window: Optional[int] = None, impl: str = "auto"):
+    """Paged decode dispatcher. impl: auto | xla | pallas.
+
+    "pallas" streams pages straight out of the pool via a scalar-prefetched
+    page table (no gathered copy of the context); "xla" gathers then reuses
+    the dense decode path (bit-identical to dense serving).
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.decode_attention_paged(q, k_pool, v_pool, pages, pos_q,
+                                           pos_cache, window=window)
+    if impl == "xla":
+        return decode_attention_paged_xla(q, k_pool, v_pool, pages, pos_q,
+                                          pos_cache, window=window)
+    raise ValueError(impl)
+
+
 def decode_attention(q, k_cache, v_cache, pos_q, pos_cache, *,
                      window: Optional[int] = None, impl: str = "auto"):
     """Decode dispatcher. impl: auto | xla | pallas.

@@ -274,7 +274,8 @@ class DecoderLM:
 
     def _attn_block(self, lp, x, cos, sin, pos_q, pos_kv, mode, window,
                     lcache, idx, moe: bool, layer: Optional[int] = None,
-                    ctx: Optional[int] = None):
+                    ctx: Optional[int] = None,
+                    pages: Optional[jax.Array] = None):
         cfg = self.cfg
         b, s, d = x.shape
         h_, k_, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
@@ -309,6 +310,68 @@ class DecoderLM:
                 kr, vr, pr = kr[:, :ctx], vr[:, :ctx], pos_kv[:, :ctx]
             out = attn_mod.attention(q, kr, vr, pos_q, pr, causal=True,
                                      window=window, impl=self.attn_impl)
+            new_cache = {"k": kc, "v": vc}
+        elif mode == "ringchunk":
+            # multi-token decode against a RING-BUFFER window cache (hybrid
+            # family suffix prefill): each suffix token attends the old ring
+            # content plus the suffix's own KV, masked by absolute position.
+            # Exact for ANY suffix length: whatever a per-token decode would
+            # have overwritten before token t carries a position <= t - window
+            # and is window-masked regardless. The new ring is rebuilt from
+            # the suffix tail under the invariant "position p lives at slot
+            # p % w".
+            w = lcache["k"].shape[1]
+            kcat = jnp.concatenate([lcache["k"].astype(k.dtype), k], axis=1)
+            vcat = jnp.concatenate([lcache["v"].astype(v.dtype), v], axis=1)
+            pcat = jnp.concatenate([pos_kv, pos_q.astype(jnp.int32)], axis=1)
+            # local/pallas impls assume a self-attention layout (no cache
+            # positions); force a position-aware path for the concat layout
+            impl = self.attn_impl if self.attn_impl in ("dense", "flash") \
+                else "auto"
+            out = attn_mod.attention(q, kcat, vcat, pos_q, pcat, causal=True,
+                                     window=window, impl=impl)
+            bi = jnp.arange(b)
+            if s < w:
+                widx = (idx[:, None] + jnp.arange(s)[None]) % w  # (B,S)
+                kc = lcache["k"].at[bi[:, None], widx].set(
+                    k.astype(lcache["k"].dtype))
+                vc = lcache["v"].at[bi[:, None], widx].set(
+                    v.astype(lcache["v"].dtype))
+            else:
+                roll = jax.vmap(lambda a, r: jnp.roll(a, r, axis=0))
+                r0 = pos_q[:, s - w] % w
+                kc = roll(k[:, s - w:], r0).astype(lcache["k"].dtype)
+                vc = roll(v[:, s - w:], r0).astype(lcache["v"].dtype)
+            new_cache = {"k": kc, "v": vc}
+        elif mode == "decode" and pages is not None:
+            # paged decode: KV rows live in a shared physical pool
+            # ((L,)P,page,K,hd); the slot's int32 page table maps logical
+            # page -> physical page (0 = null page). The write scatters one
+            # row THROUGH the table; attention gathers whole pages through
+            # it and masks unwritten entries via pos (so null-page garbage
+            # contributes an exact zero).
+            bi = jnp.arange(b)
+            page = lcache["k"].shape[-3]
+            pg = pages[bi, idx // page]  # (B,) physical page of the write
+            off = idx % page
+            if layer is None:
+                kc = lcache["k"].at[pg, off].set(
+                    k[:, 0].astype(lcache["k"].dtype))
+                vc = lcache["v"].at[pg, off].set(
+                    v[:, 0].astype(lcache["v"].dtype))
+                kp, vp = kc, vc
+            else:
+                kc = lcache["k"].at[layer, pg, off].set(
+                    k[:, 0].astype(lcache["k"].dtype))
+                vc = lcache["v"].at[layer, pg, off].set(
+                    v[:, 0].astype(lcache["v"].dtype))
+                kp, vp = kc[layer], vc[layer]
+            cap = pos_kv.shape[1]
+            ctx_eff = ctx if (ctx is not None and ctx < cap) else cap
+            npg = -(-ctx_eff // page)  # whole pages covering the context
+            out = attn_mod.decode_attention_paged(
+                q, kp, vp, pages[:, :npg], pos_q[:, 0],
+                pos_kv[:, :ctx_eff], window=window, impl=self.decode_impl)
             new_cache = {"k": kc, "v": vc}
         elif mode == "decode":
             # per-slot write position (continuous batching: slots independent)
@@ -362,6 +425,11 @@ class DecoderLM:
         cfg = self.cfg
         if mode == "decode":
             x, new_cache = rglru_mod.rglru_decode(lp, x, cfg, lcache)
+        elif mode == "ringchunk":
+            # stateful suffix pass: fold the cached decode state (conv window
+            # + LRU hidden) into the full-sequence scan
+            x, new_cache = rglru_mod.rglru_forward(
+                lp, x, cfg, conv_state=lcache["conv"], h_state=lcache["h"])
         else:
             x, new_cache = rglru_mod.rglru_forward(lp, x, cfg)
             if mode == "train":
@@ -387,6 +455,7 @@ class DecoderLM:
         policy = self.sharding.remat_policy if remat_on else "none"
         idx = cache["index"] if (cache is not None and "index" in cache) else None
         pos_kv = cache["pos"] if (cache is not None and "pos" in cache) else None
+        pages = cache.get("pages") if cache is not None else None
 
         if cfg.family in ("dense", "vlm", "moe"):
             aux_total = jnp.zeros((), jnp.float32)
@@ -396,14 +465,14 @@ class DecoderLM:
                 if mode == "decode" and self.decode_unroll and gcache is not None:
                     return self._run_group_unrolled(
                         x, aux_total, gparams, gcache, moe_flag, cos, sin,
-                        positions, pos_kv, idx, ctx)
+                        positions, pos_kv, idx, ctx, pages)
 
                 def body(carry, xs):
                     xx, aux = carry
                     lp, lc = xs
                     xx, a, nc = self._attn_block(
                         lp, xx, cos, sin, positions, pos_kv, mode, None,
-                        lc, idx, moe_flag, ctx=ctx)
+                        lc, idx, moe_flag, ctx=ctx, pages=pages)
                     return (xx, aux + a), nc
                 bodyc = _remat(body, policy)
                 if gcache is None:
@@ -455,7 +524,8 @@ class DecoderLM:
         raise ValueError(cfg.family)
 
     def _run_group_unrolled(self, x, aux_total, gparams, gcache, moe_flag,
-                            cos, sin, positions, pos_kv, idx, ctx=None):
+                            cos, sin, positions, pos_kv, idx, ctx=None,
+                            pages=None):
         """Decode-mode layer loop unrolled; the stacked KV leaves thread
         through and receive one in-place (l, slot, idx) scatter per layer
         (numerically identical to the scanned form, no per-token copy)."""
@@ -465,7 +535,7 @@ class DecoderLM:
             lp = jax.tree.map(lambda p: p[l], gparams)
             x, a, cache = self._attn_block(
                 lp, x, cos, sin, positions, pos_kv, "decode", None,
-                cache, idx, moe_flag, layer=l, ctx=ctx)
+                cache, idx, moe_flag, layer=l, ctx=ctx, pages=pages)
             aux_total = aux_total + a
         return x, aux_total, cache
 
@@ -744,4 +814,62 @@ class DecoderLM:
         logits = unembed(hl.astype(jnp.float32),
                          self._unembed_table(params).astype(jnp.float32),
                          cfg.vocab_size)[:, 0]
+        return logits, new_cache
+
+    def decode_chunk_recurrent(self, params, cache, batch):
+        """Multi-token decode for the RECURRENT families (ssm/hybrid) — the
+        suffix prefill of a prefix-cache hit / resumed session. batch:
+        tokens (B,S), absolute positions (B,S) continuing the cached state
+        (no padding: every token advances the recurrence). Returns
+        (last-token logits (B,V), cache).
+
+        The cached state (conv window + SSM/LRU hidden) summarizes the
+        whole prefix at a point in time, so the suffix replays in ONE
+        chunked pass: ``ssd_forward``/``rglru_forward`` fold the initial
+        state into their scans instead of stepping token-by-token. The
+        hybrid family's sliding-window ring is handled by the "ringchunk"
+        attention branch (old ring + suffix KV under absolute-position
+        window masking — exact for any suffix length).
+        """
+        cfg = self.cfg
+        assert cfg.family in ("ssm", "hybrid"), (
+            "decode_chunk_recurrent seeds point-in-time recurrent state; "
+            f"use decode_chunk for {cfg.family}")
+        x, _ = self._embed_inputs(params, batch, "chunk")
+        b, s, _ = x.shape
+        positions = batch["positions"].astype(jnp.int32)  # (B,S)
+        new_cache = dict(cache)
+
+        if cfg.family == "ssm":
+            def body(xx, xs):
+                lp, lc = xs
+                xx, nc = ssm_mod.ssd_forward(
+                    lp, xx, cfg, conv_state=lc["conv"], h_state=lc["h"])
+                return xx, nc
+            x, ys = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+            new_cache["blocks"] = ys
+        else:
+            cos, sin = self._rope(positions)
+            x, _, layer_caches = self._hybrid_stack(
+                params, x, positions, cos, sin, "ringchunk", cache)
+            for key, val in layer_caches.items():
+                new_cache[key] = val
+            # ring bookkeeping (invariant: position p lives at slot p % w)
+            w = cache["pos"].shape[1]
+            idx = cache["index"]
+            bi = jnp.arange(b)
+            if s < w:
+                widx = (idx[:, None] + jnp.arange(s)[None]) % w
+                new_cache["pos"] = cache["pos"].at[bi[:, None], widx].set(
+                    positions)
+            else:
+                roll = jax.vmap(lambda a, r: jnp.roll(a, r, axis=0))
+                new_cache["pos"] = roll(positions[:, s - w:],
+                                        positions[:, s - w] % w)
+            new_cache["index"] = ((idx + s) % w).astype(jnp.int32)
+
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = unembed(x[:, -1:].astype(jnp.float32),
+                        self._unembed_table(params).astype(jnp.float32),
+                        cfg.vocab_size)[:, 0]
         return logits, new_cache

@@ -56,6 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig, ServingConfig
+from repro.serving.paged import PagePool, pages_needed
 from repro.serving.prefix import (ParkedSession, PrefixStore, SessionStore,
                                   extension_suffix, extras_fingerprint,
                                   prefix_buckets)
@@ -332,6 +333,96 @@ class TierEngine:
         self.sessions = SessionStore(serving.session_cache_mb * 1e6)
         self._slot_prompt: List[Optional[np.ndarray]] = [None] * b
         self._slot_extras_fp: List[bytes] = [b""] * b
+
+        # -- paged KV pool: block allocator + copy-free CoW prefix sharing --
+        # sliceable families move their big KV leaves into a shared physical
+        # pool ((L, P, page, K, hd) + an int32 page table per slot); the
+        # recurrent families keep exact-length dense state but share the pool
+        # ACCOUNTING so cross-family tiers report comparable headroom.
+        self.pool: Optional[PagePool] = None
+        self._paged_names: tuple = ()
+        self._dense_spec_tree = None  # dense cache template (paged engines)
+        self._pt: Optional[np.ndarray] = None  # host page tables (B, n_pt)
+        self._slot_pages: List[List[int]] = [[] for _ in range(b)]
+        self._page_pressure = False  # set when admission starved for pages
+        self._slot_page_charge = 1  # accounting charge (recurrent families)
+        self._n_pt = 0
+        self._slots_hw = 0  # dense-mode occupied-slot high-water (gauges)
+        if serving.paged:
+            ps = serving.kv_page_size
+            self._n_pt = serving.pages_per_slot
+            self._dense_spec_tree = jax.eval_shape(
+                lambda: model.init_cache(b, t))
+            page_bytes = 0.0
+            if self._sliceable:
+                paged_names = []
+                for path, leaf in jax.tree_util.tree_leaves_with_path(
+                        self._dense_spec_tree):
+                    name = jax.tree_util.keystr(path)
+                    if name in ("['pos']", "['index']"):
+                        continue  # per-slot bookkeeping stays dense
+                    bax, sax = self._axis_by_name[name]
+                    if sax == bax + 1 and leaf.shape[sax] == t:
+                        paged_names.append(name)
+                        rowb = (float(np.prod(leaf.shape, dtype=np.float64))
+                                / leaf.shape[bax] / leaf.shape[sax]
+                                * jnp.dtype(leaf.dtype).itemsize)
+                        page_bytes += rowb * ps
+                self._paged_names = tuple(sorted(paged_names))
+                npages = serving.pool_pages + 1  # + pinned null page 0
+
+                def repage(path, leaf):
+                    name = jax.tree_util.keystr(path)
+                    if name not in self._paged_names:
+                        return leaf
+                    bax = self._axis_by_name[name][0]
+                    shape = (leaf.shape[:bax] + (npages, ps)
+                             + leaf.shape[bax + 2:])
+                    return jnp.zeros(shape, leaf.dtype)
+
+                self.cache = jax.tree_util.tree_map_with_path(
+                    repage, self.cache)
+                self.cache["pages"] = jnp.zeros((b, self._n_pt), jnp.int32)
+                self._pt = np.zeros((b, self._n_pt), np.int32)
+            else:
+                # per-slot state is point-in-time (no positional pages);
+                # charge each slot the pages its largest time-axis leaf
+                # would occupy so admission answers to the same pool
+                max_rows = 0
+                slot_bytes = 0.0
+                for name, leaf, bax in self._leaf_rows():
+                    slot_bytes += leaf.nbytes / leaf.shape[bax]
+                    sax = self._axis_by_name[name][1]
+                    if sax >= 0 and name not in ("['pos']", "['index']"):
+                        max_rows = max(max_rows, leaf.shape[sax])
+                self._slot_page_charge = max(
+                    1, pages_needed(max_rows, ps, t))
+                page_bytes = slot_bytes / self._slot_page_charge
+            self.pool = PagePool(serving.pool_pages, ps,
+                                 page_bytes=page_bytes)
+        # dense per-slot row geometry (name -> (shape, dtype)) for payload
+        # validation — structure-independent, so paged and dense engines
+        # speak the same migration wire format
+        spec_src = (self._dense_spec_tree if self._dense_spec_tree is not None
+                    else self.cache)
+        self._row_specs: Dict[str, tuple] = {}
+        for path, leaf in jax.tree_util.tree_leaves_with_path(spec_src):
+            name = jax.tree_util.keystr(path)
+            bax = self._axis_by_name[name][0]
+            self._row_specs[name] = (
+                leaf.shape[:bax] + leaf.shape[bax + 1:], str(leaf.dtype))
+        if self.pool is not None:
+            # dropping a store reference and freeing its physical pages must
+            # never diverge: EVERY store removal (LRU eviction, overwrite,
+            # explicit pop) decrefs through this hook
+            self.prefix_store.lru.on_evict = self._on_prefix_evict
+        self._warm_chunk_recurrent = None
+        if (serving.chunked_recurrent_suffix
+                and self.cfg.family in ("ssm", "hybrid")
+                and hasattr(model, "decode_chunk_recurrent")):
+            self._warm_chunk_recurrent = jax.jit(
+                model.decode_chunk_recurrent, donate_argnums=(1,))
+
         self._warm_scan = jax.jit(self._make_warm_scan(),
                                   donate_argnums=(1,), static_argnums=(4,))
         max_seq = self.serving.max_seq
@@ -346,9 +437,10 @@ class TierEngine:
         self._ctx_buckets = (serving.context_buckets
                              and self.cfg.family in ("dense", "vlm", "moe"))
         self._fused = jax.jit(self._make_fused(), donate_argnums=(1, 2),
-                              static_argnums=(6,))
-        self._prefill_insert = jax.jit(self._make_prefill_insert(),
-                                       donate_argnums=(1,))
+                              static_argnums=(6, 7))
+        self._prefill_insert = jax.jit(
+            self._make_prefill_insert(), donate_argnums=(1,),
+            static_argnums=(6,) if self._pt is not None else ())
 
     # ------------------------------------------------------------------
     # jitted hot-path builders
@@ -367,7 +459,7 @@ class TierEngine:
         row (entries past a prompt carry pos=-1), and the engine picks
         ``teff`` above the longest position reached inside the block.
         """
-        model, K = self.model, self.fused_steps
+        model = self.model
         temp, eos = float(self.temp), int(self.eos_id)
         max_seq = int(self.serving.max_seq)
         # ssm/hybrid carry recurrent state (and a ring window whose write
@@ -379,7 +471,12 @@ class TierEngine:
         freeze_rows = self.cfg.family in ("ssm", "hybrid")
         bax_tree = self._cache_batch_axis
 
-        def fused(params, cache, keys, tokens, positions, budgets, teff):
+        def fused(params, cache, keys, tokens, positions, budgets, teff,
+                  k_steps):
+            # ``k_steps`` (static) shrinks the block below ``fused_steps``
+            # under page pressure: the host re-checks admission the moment a
+            # finishing request can free pages (continuous admission splits
+            # the scan at the pressure boundary instead of waiting K steps)
             ctx = teff if teff < max_seq else None
 
             def body(carry, _):
@@ -427,8 +524,8 @@ class TierEngine:
             produced0 = jnp.zeros_like(budgets)
             (cache, keys, *_), toks = jax.lax.scan(
                 body, (cache, keys, tokens, positions, alive0, produced0),
-                None, length=K)
-            return jnp.transpose(toks), cache, keys  # (B, K)
+                None, length=k_steps)
+            return jnp.transpose(toks), cache, keys  # (B, k_steps)
 
         return fused
 
@@ -438,13 +535,18 @@ class TierEngine:
         ``slots`` (R,) are the destination slot ids (duplicates allowed only
         for padded rows carrying identical values); ``total`` (R,) is each
         row's true sequence length INCLUDING any vision prefix.
+
+        Paged engines take an extra ``pt_rows`` (R, n_pt) page-table
+        argument: the big KV leaves scatter THROUGH the tables into the
+        physical pool (a row's unreserved tail maps to the null page — its
+        writes are garbage-by-construction and masked via ``pos``), while
+        pos/index keep the per-slot scatter.
         """
         model = self.model
         capacity = self.serving.max_seq
         pad_ok = self.cfg.family in _PADDED_FAMILIES
 
-        def fn(params, pool, batch, slots, total):
-            logits, cache1 = model.prefill(params, batch, capacity)
+        def remask(cache1, total):
             if pad_ok and "pos" in cache1:
                 cache1 = dict(cache1)
                 cap = cache1["pos"].shape[1]
@@ -454,15 +556,56 @@ class TierEngine:
                                           cache1["pos"], -1)
                 cache1["index"] = (jnp.minimum(total, cap) % cap).astype(
                     jnp.int32)
+            return cache1
 
-            def ins(pool_leaf, one, bax):
-                idx = (slice(None),) * bax + (slots,)
+        if self._pt is None:
+            def fn(params, pool, batch, slots, total):
+                logits, cache1 = model.prefill(params, batch, capacity)
+                cache1 = remask(cache1, total)
+
+                def ins(pool_leaf, one, bax):
+                    idx = (slice(None),) * bax + (slots,)
+                    return pool_leaf.at[idx].set(one.astype(pool_leaf.dtype))
+
+                pool = jax.tree.map(ins, pool, cache1,
+                                    self._cache_batch_axis)
+                return logits, pool
+
+            return fn
+
+        n_pt, page = self._n_pt, self.serving.kv_page_size
+        paged_names = self._paged_names
+        axis_by_name = self._axis_by_name
+
+        def fn_paged(params, pool, batch, slots, total, pt_rows, npg):
+            # ``npg`` (static) is the group's reserved-page high-water: only
+            # the leading npg pages per row scatter into the pool (the tail
+            # past a prompt's reservation is all null-page writes — skipping
+            # it keeps the scatter near the dense path's cost)
+            logits, cache1 = model.prefill(params, batch, capacity)
+            cache1 = remask(cache1, total)
+            pool = dict(pool)
+            pages_leaf = pool.pop("pages")
+            pt_sl = pt_rows[:, :npg]
+
+            def ins(path, pool_leaf, one):
+                name = jax.tree_util.keystr(path)
+                bax = axis_by_name[name][0]
+                if name in paged_names:
+                    one = one.reshape(one.shape[:bax + 1] + (n_pt, page)
+                                      + one.shape[bax + 2:])
+                    one = one[(slice(None),) * (bax + 1)
+                              + (slice(0, npg),)]
+                    idx = (slice(None),) * bax + (pt_sl,)
+                else:
+                    idx = (slice(None),) * bax + (slots,)
                 return pool_leaf.at[idx].set(one.astype(pool_leaf.dtype))
 
-            pool = jax.tree.map(ins, pool, cache1, self._cache_batch_axis)
+            pool = jax.tree_util.tree_map_with_path(ins, pool, cache1)
+            pool["pages"] = pages_leaf.at[slots].set(pt_rows)
             return logits, pool
 
-        return fn
+        return fn_paged
 
     def _make_warm_scan(self):
         """Suffix prefill for prefix-cache hits / resumed sessions: run the
@@ -543,6 +686,7 @@ class TierEngine:
         for i, s in enumerate(self.slots):
             if s is not None and s.rid == rid:
                 self.slots[i] = None  # KV rows are overwritten on next admit
+                self._release_pages(i)
                 self.journal.append(("cancel", {"rid": rid}))
                 return True
         return False
@@ -564,8 +708,11 @@ class TierEngine:
         DEVICE-resident (``jnp.take`` copies out of the donated pool); the
         wire format converts to host bytes lazily, so a payload parked and
         resumed on the same tier never round-trips through the host."""
-        leaves = {name: jnp.take(leaf, slot, axis=bax)
-                  for name, leaf, bax in self._leaf_rows()}
+        if self._pt is not None:
+            leaves = self._gather_slot_rows(slot)
+        else:
+            leaves = {name: jnp.take(leaf, slot, axis=bax)
+                      for name, leaf, bax in self._leaf_rows()}
         return SlotPayload(
             version=MIGRATION_WIRE_VERSION, model=self.cfg.name,
             family=self.cfg.family, max_seq=self.serving.max_seq,
@@ -587,6 +734,7 @@ class TierEngine:
         payload = self._slot_payload(slot)
         if remove:
             self.slots[slot] = None  # KV rows overwritten on the next admit
+            self._release_pages(slot)
         self.journal.append(("extract", {"rid": rid, "removed": remove}))
         return payload
 
@@ -612,31 +760,32 @@ class TierEngine:
         if slot is None:
             raise MigrationError("no free decode slot to inject into")
         rows = dict(payload.leaves)
-        expect = {name: (leaf, bax) for name, leaf, bax in self._leaf_rows()}
-        if set(expect) != set(rows):
+        if set(self._row_specs) != set(rows):
             raise MigrationError(
                 f"cache leaf mismatch: payload has {sorted(rows)}, engine "
-                f"expects {sorted(expect)}")
-        for name, (leaf, bax) in expect.items():
-            want = leaf.shape[:bax] + leaf.shape[bax + 1:]
+                f"expects {sorted(self._row_specs)}")
+        for name, (want, dtype) in self._row_specs.items():
             row = rows[name]
             if tuple(row.shape) != tuple(want):
                 raise MigrationError(
                     f"leaf {name}: payload row shape {tuple(row.shape)} != "
                     f"engine row shape {tuple(want)} (max_seq "
                     f"{payload.max_seq} vs {self.serving.max_seq}?)")
-            if str(row.dtype) != str(leaf.dtype):
+            if str(row.dtype) != dtype:
                 raise MigrationError(
                     f"leaf {name}: payload dtype {row.dtype} != engine "
-                    f"dtype {leaf.dtype}")
-
-        def put(path, leaf, bax):
-            row = rows[jax.tree_util.keystr(path)]
-            idx = (slice(None),) * bax + (slot,)
-            return leaf.at[idx].set(jnp.asarray(row))
-
-        self.cache = jax.tree_util.tree_map_with_path(
-            put, self.cache, self._cache_batch_axis)
+                    f"dtype {dtype}")
+        if self.pool is not None:
+            seq = payload.seq
+            total = min(payload.position
+                        + max(int(seq.max_new) - len(seq.generated), 0) + 1,
+                        self.serving.max_seq)
+            pages = self._reserve_pages(self._page_need(total))
+            if pages is None:
+                raise MigrationError(
+                    "no free KV pages to inject into (pool exhausted)")
+            self._assign_pages(slot, pages)
+        self._install_rows(slot, rows)
         self.slots[slot] = self._copy_seq(payload.seq)
         self.positions[slot] = payload.position
         self._keys = self._keys.at[slot].set(jnp.asarray(payload.key))
@@ -658,15 +807,15 @@ class TierEngine:
 
     def _rows_compatible(self, rows: Dict[str, np.ndarray]) -> bool:
         """True when ``rows`` (keystr -> per-slot row) matches this engine's
-        cache geometry exactly (same leaves, shapes and dtypes)."""
-        expect = {name: (leaf, bax) for name, leaf, bax in self._leaf_rows()}
-        if set(rows) != set(expect):
+        DENSE per-slot row geometry exactly (same leaves, shapes, dtypes).
+        Paged and dense engines share the geometry — the wire format is
+        structure-independent, so payloads migrate across pool designs."""
+        if set(rows) != set(self._row_specs):
             return False
-        for name, (leaf, bax) in expect.items():
-            want = leaf.shape[:bax] + leaf.shape[bax + 1:]
+        for name, (shape, dtype) in self._row_specs.items():
             row = rows[name]
-            if (tuple(row.shape) != tuple(want)
-                    or str(row.dtype) != str(leaf.dtype)):
+            if (tuple(row.shape) != tuple(shape)
+                    or str(row.dtype) != dtype):
                 return False
         return True
 
@@ -759,13 +908,17 @@ class TierEngine:
                 if (suffix is not None and isinstance(p, SlotPayload)
                         and self._payload_resumable(p)
                         and p.position + len(suffix) + 1 < cap):
-                    self.sessions.resume(sid)  # rows consumed by this turn
+                    # the parked rows are popped at COMMIT time (in
+                    # _admit_warm_hits) — page reservation may still defer
+                    # this admission, and a deferred plan must not have
+                    # consumed the session
                     # cached counts the cache POSITIONS reused (vision
                     # prefix included) — the same accounting the analytic
                     # backend's context-token mirror reports
                     return {"kind": "resume", "rows": p.leaves,
                             "start": p.position, "time_len": None,
-                            "suffix": suffix, "cached": p.position}
+                            "suffix": suffix, "cached": p.position,
+                            "sid": sid}
         if self.prefix_store.enabled:
             e = self.prefix_store.lookup(tokens, self._job_fp(job))
             if e is None:
@@ -775,9 +928,15 @@ class TierEngine:
                 vis = self._prompt_prefix(job["extras"])
                 start = vis + len(e.tokens)
                 if start + len(suffix) + 1 < cap:
-                    return {"kind": "prefix", "rows": e.data, "start": start,
+                    plan = {"kind": "prefix", "rows": e.data, "start": start,
                             "time_len": start, "suffix": suffix,
                             "cached": start}
+                    if self._pt is not None:
+                        # paged entry: {"pages", "t_len"} — rows are
+                        # gathered (and full pages CoW-shared) at admit
+                        plan["rows"] = None
+                        plan["pages_entry"] = e.data
+                    return plan
             else:
                 start = int(e.data["position"])
                 rows = e.data["rows"]
@@ -799,8 +958,42 @@ class TierEngine:
             if plan is None:
                 i += 1
                 continue
+            if self.pool is not None and not self._reserve_warm(job, plan):
+                # starved for pages: stop admitting (FIFO within warm hits)
+                # and let the fused block split at the pressure boundary
+                self._page_pressure = True
+                return
+            if plan.get("sid"):
+                self.sessions.resume(plan["sid"])  # rows consumed this turn
             del self.waiting[i]
             self._admit_warm(job, slot, plan)
+
+    def _reserve_warm(self, job: Dict[str, Any],
+                      plan: Dict[str, Any]) -> bool:
+        """Reserve ``job``'s full page budget for a warm admission. FULL
+        pages strictly behind the reused frontier are CoW-shared from the
+        store entry (incref, no copy); the boundary page and the growth tail
+        come from fresh pages. All-or-nothing: on failure every reference
+        taken here is dropped."""
+        start = int(plan["start"])
+        total = min(start + len(plan["suffix"]) + int(job["max_new"]),
+                    self.serving.max_seq)
+        need = self._page_need(total)
+        ent = plan.get("pages_entry")
+        shared: List[int] = []
+        if ent is not None:
+            ps = self.serving.kv_page_size
+            shared = [int(p) for p in ent["pages"][:int(ent["t_len"]) // ps]]
+            # pin BEFORE allocating: _reserve_pages may evict this very
+            # store entry under pressure, and its pages must survive
+            self.pool.incref(shared)
+        fresh = self._reserve_pages(need - len(shared))
+        if fresh is None:
+            if shared:
+                self.pool.decref(shared)
+            return False
+        plan["_pages"] = shared + fresh
+        return True
 
     def _admit_warm(self, job: Dict[str, Any], slot: int,
                     plan: Dict[str, Any]) -> None:
@@ -808,7 +1001,15 @@ class TierEngine:
         suffix through the jitted decode scan, and scatter the result into
         ``slot``. ``prefill_tokens`` moves by the suffix length alone."""
         cap = self.serving.max_seq
+        pages = plan.pop("_pages", None)
+        if pages is not None:
+            self._assign_pages(slot, pages)
         rows = plan["rows"]
+        if rows is None and plan.get("pages_entry") is not None:
+            # copy-free hit: the shared pages are already mapped into the
+            # slot's table; gather them once into seq-sliced dense pieces
+            # for the batch-1 suffix prefill below
+            rows = self._gather_prefix_rows(plan["pages_entry"])
         t_len = plan["time_len"]
         start = int(plan["start"])
         suffix = np.asarray(plan["suffix"], np.int32)
@@ -839,7 +1040,9 @@ class TierEngine:
                 out = jnp.zeros(shape, leaf.dtype)
             return jnp.expand_dims(out, bax)
 
-        cache1 = jax.tree_util.tree_map_with_path(build, self.cache)
+        tmpl = (self._dense_spec_tree if self._dense_spec_tree is not None
+                else self.cache)
+        cache1 = jax.tree_util.tree_map_with_path(build, tmpl)
         n = len(suffix)
         total = start + n
         np_ = n
@@ -862,6 +1065,16 @@ class TierEngine:
                 batch["lengths"] = jnp.asarray([n], jnp.int32)
             logits1, cache1 = self._warm_chunk(self.params, cache1, batch,
                                                teff)
+            first_logits = np.asarray(logits1)[0]
+        elif self._warm_chunk_recurrent is not None:
+            # chunked recurrent suffix prefill: ONE pass seeding the ssd /
+            # rglru chunk kernels from the cached state — a weights pass
+            # per suffix instead of per token (np_ == n here: recurrent
+            # state admits no padding, every token advances the scan)
+            batch = {"tokens": jnp.asarray(toks[None]),
+                     "positions": jnp.asarray(positions[None])}
+            logits1, cache1 = self._warm_chunk_recurrent(self.params,
+                                                         cache1, batch)
             first_logits = np.asarray(logits1)[0]
         else:
             # point-in-time state families step their own decode path over
@@ -906,6 +1119,26 @@ class TierEngine:
         need = [L for L in prefix_buckets(len(tokens), store.min_prefix)
                 if not store.contains(tokens[:L], fp)]
         if not need:
+            return
+        if self._pt is not None:
+            # copy-free deposit: the entry is a page-id list increfing the
+            # slot's own pages — no row duplication. The boundary page is
+            # increfed for CONTENT liveness only (warm hits CoW-share just
+            # the full pages strictly behind t_len; the depositor keeps
+            # writing rows >= t_len on that page, which readers never see
+            # because they slice to t_len).
+            ps = self.serving.kv_page_size
+            for L in need:
+                t_len = vis + L
+                npg = pages_needed(t_len, ps, self.serving.max_seq)
+                pages = [int(p) for p in self._pt[slot][:npg]]
+                self.pool.incref(pages)
+                ok = store.insert(tokens[:L], fp,
+                                  npg * self.pool.page_bytes,
+                                  {"pages": pages, "t_len": t_len},
+                                  sliceable=True)
+                if not ok:
+                    self.pool.decref(pages)
             return
         # rows stay device-resident: jnp.take copies out of the (donated)
         # pool and the bucket slices are device slices — depositing a
@@ -964,8 +1197,184 @@ class TierEngine:
                 return i
         return None
 
+    # -- paged KV pool ------------------------------------------------------
+
+    def _page_need(self, total_rows: int) -> int:
+        """Pages a request occupying ``total_rows`` cache rows reserves.
+        Recurrent families charge a fixed per-slot amount (their state has
+        no positional pages)."""
+        if not self._sliceable:
+            return self._slot_page_charge
+        return pages_needed(total_rows, self.serving.kv_page_size,
+                            self.serving.max_seq)
+
+    def _reserve_pages(self, n: int) -> Optional[List[int]]:
+        """Allocate ``n`` fresh pages, reclaiming prefix-store LRU entries
+        under pressure (store-held pages are spare capacity: a live request
+        always beats a cached prefix). None when the pool is truly short."""
+        if n <= 0:
+            return []
+        pool = self.pool
+        if not pool.can_alloc(n) and self._pt is not None:
+            while not pool.can_alloc(n):
+                if self.prefix_store.evict_oldest() is None:
+                    break
+        return pool.alloc(n)
+
+    def _assign_pages(self, slot: int, pages: List[int]) -> None:
+        """Record ``slot``'s page list and host page table. The DEVICE page
+        table row is written by the insert path that follows (prefill
+        scatter / batch-1 insert / migration install)."""
+        self._slot_pages[slot] = list(pages)
+        if self._pt is not None:
+            row = np.zeros((self._n_pt,), np.int32)
+            row[:len(pages)] = pages
+            self._pt[slot] = row
+
+    def _release_pages(self, slot: int) -> None:
+        """Drop ``slot``'s page references (pages whose last reader this was
+        rejoin the free list) and retarget its DEVICE page table at the null
+        page: a freed slot keeps stepping inside the fused block, and its
+        dead writes must never land on a page that may be re-allocated."""
+        if self.pool is None:
+            return
+        if self._slot_pages[slot]:
+            self.pool.decref(self._slot_pages[slot])
+            self._slot_pages[slot] = []
+        if self._pt is not None:
+            self._pt[slot] = 0
+            cache = dict(self.cache)
+            cache["pages"] = cache["pages"].at[slot].set(
+                jnp.zeros((self._n_pt,), jnp.int32))
+            self.cache = cache
+
+    def _on_prefix_evict(self, entry) -> None:
+        """Store removal hook: decref a paged entry's shared pages."""
+        data = getattr(entry, "data", None)
+        if isinstance(data, dict) and "pages" in data:
+            self.pool.decref(data["pages"])
+
+    def _gather_slot_rows(self, slot: int) -> Dict[str, Any]:
+        """Dense-geometry per-slot rows gathered THROUGH the page table —
+        the paged engine's side of the (unchanged) migration wire format.
+        Rows past the written frontier come from the null page; their
+        positions are -1, so they are masked wherever they land."""
+        n_pt, page = self._n_pt, self.serving.kv_page_size
+        pt = jnp.asarray(self._pt[slot])
+        rows = {}
+        for path, leaf in jax.tree_util.tree_leaves_with_path(self.cache):
+            name = jax.tree_util.keystr(path)
+            if name == "['pages']":
+                continue
+            bax = self._axis_by_name[name][0]
+            if name in self._paged_names:
+                g = jnp.take(leaf, pt, axis=bax)  # (..., n_pt, page, ...)
+                rows[name] = g.reshape(g.shape[:bax] + (n_pt * page,)
+                                       + g.shape[bax + 2:])
+            else:
+                rows[name] = jnp.take(leaf, slot, axis=bax)
+        return rows
+
+    def _gather_prefix_rows(self, ent: Dict[str, Any]) -> Dict[str, Any]:
+        """Materialize a paged prefix-store entry ({"pages", "t_len"}) into
+        the seq-sliced dense pieces the warm-admission build step pastes —
+        the deposit itself was copy-free (page increfs, no row copies)."""
+        page = self.serving.kv_page_size
+        t_len = int(ent["t_len"])
+        npg = len(ent["pages"])
+        pt = jnp.asarray(np.asarray(ent["pages"], np.int32))
+        rows = {}
+        for path, leaf in jax.tree_util.tree_leaves_with_path(self.cache):
+            name = jax.tree_util.keystr(path)
+            if name not in self._paged_names:
+                continue
+            bax = self._axis_by_name[name][0]
+            g = jnp.take(leaf, pt, axis=bax)
+            g = g.reshape(g.shape[:bax] + (npg * page,) + g.shape[bax + 2:])
+            rows[name] = g[(slice(None),) * bax + (slice(0, t_len),)]
+        return rows
+
+    def _install_rows(self, slot: int, rows: Dict[str, Any]) -> None:
+        """Scatter dense-geometry per-slot rows into ``slot`` (through the
+        page table on paged engines). Inverse of ``_gather_slot_rows``."""
+        if self._pt is None:
+            def put(path, leaf, bax):
+                row = rows[jax.tree_util.keystr(path)]
+                idx = (slice(None),) * bax + (slot,)
+                return leaf.at[idx].set(jnp.asarray(row))
+
+            self.cache = jax.tree_util.tree_map_with_path(
+                put, self.cache, self._cache_batch_axis)
+            return
+        n_pt, page = self._n_pt, self.serving.kv_page_size
+        pt = jnp.asarray(self._pt[slot])
+        pool = dict(self.cache)
+        pages_leaf = pool.pop("pages")
+
+        def put(path, leaf):
+            name = jax.tree_util.keystr(path)
+            row = jnp.asarray(rows[name])
+            bax = self._axis_by_name[name][0]
+            if name in self._paged_names:
+                row = row.reshape(row.shape[:bax] + (n_pt, page)
+                                  + row.shape[bax + 1:])
+                idx = (slice(None),) * bax + (pt,)
+            else:
+                idx = (slice(None),) * bax + (slot,)
+            return leaf.at[idx].set(row.astype(leaf.dtype))
+
+        pool = jax.tree_util.tree_map_with_path(put, pool)
+        pool["pages"] = pages_leaf.at[slot].set(pt)
+        self.cache = pool
+
+    def kv_gauges(self) -> Dict[str, float]:
+        """KV occupancy gauges the scheduler observes: pages_total / free /
+        shared + high-water. Dense engines synthesize slot-granular numbers
+        so both pool designs report comparable headroom."""
+        if self.pool is not None:
+            return self.pool.gauges()
+        npp = max(1, -(-self.serving.max_seq // self.serving.kv_page_size))
+        used = sum(1 for s in self.slots if s is not None)
+        self._slots_hw = max(self._slots_hw, used)
+        return {"pages_total": len(self.slots) * npp,
+                "pages_free": (len(self.slots) - used) * npp,
+                "pages_shared": 0,
+                "pages_high_water": self._slots_hw * npp,
+                "page_bytes": 0.0}
+
+    def kv_headroom(self) -> float:
+        """Free fraction of the KV pool in [0, 1]."""
+        g = self.kv_gauges()
+        return g["pages_free"] / max(1, g["pages_total"])
+
     def _insert_cache(self, cache1, slot: int) -> None:
-        """Legacy path: copy a batch-1 prefill cache into slot ``slot``."""
+        """Copy a batch-1 prefill cache into slot ``slot`` (through the
+        page table on paged engines — shared CoW pages receive the very
+        bytes that were gathered out of them, unreserved tail entries land
+        on the null page)."""
+        if self._pt is not None:
+            n_pt, page = self._n_pt, self.serving.kv_page_size
+            pt = jnp.asarray(self._pt[slot])
+            pool = dict(self.cache)
+            pages_leaf = pool.pop("pages")
+
+            def insp(path, pool_leaf, one):
+                name = jax.tree_util.keystr(path)
+                bax = self._axis_by_name[name][0]
+                row = one[(slice(None),) * bax + (0,)]
+                if name in self._paged_names:
+                    row = row.reshape(row.shape[:bax] + (n_pt, page)
+                                      + row.shape[bax + 1:])
+                    idx = (slice(None),) * bax + (pt,)
+                else:
+                    idx = (slice(None),) * bax + (slot,)
+                return pool_leaf.at[idx].set(row.astype(pool_leaf.dtype))
+
+            pool = jax.tree_util.tree_map_with_path(insp, pool, cache1)
+            pool["pages"] = pages_leaf.at[slot].set(pt)
+            self.cache = pool
+            return
+
         def ins(pool, one, bax):
             idx = (slice(None),) * bax + (slot,)
             sel = (slice(None),) * bax + (0,)
@@ -1030,6 +1439,7 @@ class TierEngine:
         self.finished.append(st)
         self.journal.append(("finish", {"rid": st.rid}))
         self.slots[slot] = None
+        self._release_pages(slot)
 
     def _prompt_prefix(self, extras: Dict[str, Any]) -> int:
         if self.cfg.frontend == "vision_stub" and "patches" in extras:
@@ -1039,6 +1449,10 @@ class TierEngine:
     # -- admission ----------------------------------------------------------
 
     def _admit(self) -> None:
+        # page pressure is re-evaluated every admission pass: pages freed by
+        # finished slots (or store eviction) clear it, a starved reservation
+        # below re-raises it and the next fused block splits early
+        self._page_pressure = False
         if any(j.get("deadline") is not None for j in self.waiting):
             # EDF admission: earliest deadline first, FIFO among ties /
             # deadline-free requests (stable sort keeps submit order)
@@ -1061,6 +1475,16 @@ class TierEngine:
             slot = self._free_slot()
             if slot is None:
                 return
+            job = self.waiting[0]  # peek: only admitted once pages reserve
+            if self.pool is not None:
+                vis = self._prompt_prefix(job["extras"])
+                total = min(vis + len(job["tokens"]) + int(job["max_new"]),
+                            self.serving.max_seq)
+                pages = self._reserve_pages(self._page_need(total))
+                if pages is None:
+                    self._page_pressure = True
+                    return
+                self._assign_pages(slot, pages)
             job = self.waiting.pop(0)
             toks = job["tokens"][None]  # (1, S)
             batch = {"tokens": jnp.asarray(toks, jnp.int32)}
@@ -1077,6 +1501,26 @@ class TierEngine:
         if not free or not self.waiting:
             return
         jobs = self.waiting[:len(free)]
+        if self.pool is not None:
+            # eager reservation: each job reserves its FULL page budget
+            # (prompt + max_new, capped) up front, so an admitted request
+            # can always run to completion — no mid-decode page faults, no
+            # deadlock. Starved jobs stay queued; the fused block splits at
+            # the pressure boundary and re-admits the moment pages free.
+            admitted = []
+            for job in jobs:
+                vis = self._prompt_prefix(job["extras"])
+                total = min(vis + len(job["tokens"]) + int(job["max_new"]),
+                            self.serving.max_seq)
+                pages = self._reserve_pages(self._page_need(total))
+                if pages is None:
+                    self._page_pressure = True
+                    break
+                job["_pages"] = pages
+                admitted.append(job)
+            jobs = admitted
+            if not jobs:
+                return
         del self.waiting[:len(jobs)]
         pad_ok = self.cfg.family in _PADDED_FAMILIES
         groups: Dict[tuple, List[dict]] = {}
@@ -1121,10 +1565,23 @@ class TierEngine:
             batch["lengths"] = jnp.asarray(lengths)
         prefix = self._prompt_prefix(jobs[0]["extras"])
         total = lengths + prefix
+        for job, slot in zip(jobs, slots):
+            pages = job.pop("_pages", None)
+            if pages is not None:
+                self._assign_pages(slot, pages)
         slots_arr = np.asarray(slots + [slots[0]] * (rp - r), np.int32)
-        logits, self.cache = self._prefill_insert(
-            self.params, self.cache, batch, jnp.asarray(slots_arr),
-            jnp.asarray(total))
+        if self._pt is not None:
+            # pad rows replicate row 0's page table too — their duplicate
+            # scatters write identical content to the same pages
+            pt_rows = self._pt[slots_arr]
+            npg = max(1, max(len(self._slot_pages[s]) for s in slots))
+            logits, self.cache = self._prefill_insert(
+                self.params, self.cache, batch, jnp.asarray(slots_arr),
+                jnp.asarray(total), jnp.asarray(pt_rows), npg)
+        else:
+            logits, self.cache = self._prefill_insert(
+                self.params, self.cache, batch, jnp.asarray(slots_arr),
+                jnp.asarray(total))
         logits = np.asarray(logits)  # one host sync per admitted group
         for i, (job, slot) in enumerate(zip(jobs, slots)):
             self._start_seq(job, slot, int(total[i]), logits[i])
@@ -1157,23 +1614,33 @@ class TierEngine:
             tokens[i] = st.generated[-1]
             positions[i] = self.positions[i]
             budgets[i] = max(0, st.max_new - len(st.generated))
+        k = self.fused_steps
+        if self.pool is not None and self._page_pressure and self.waiting:
+            # continuous admission under page pressure: split the fused
+            # block at the earliest point a slot can finish (and free its
+            # pages), so starved requests admit mid-block instead of
+            # waiting out a full K steps. k is a jit-static arg — each
+            # distinct split length is one cached trace on the power-of-two
+            # budget ladder of remaining tokens
+            rem = min(max(1, self.slots[i].max_new
+                          - len(self.slots[i].generated)) for i in active)
+            k = max(1, min(k, rem))
         teff = self.serving.max_seq
         if self._ctx_buckets:
             # smallest bucket covering every position the block can write;
             # ladder = {2^n, 1.5*2^n} so the attended width tracks the live
             # context within ~33% (each bucket is one cached trace)
-            teff = self._context_bucket(
-                int(positions.max()) + self.fused_steps + 1)
+            teff = self._context_bucket(int(positions.max()) + k + 1)
         block, self.cache, self._keys = self._fused(
             self.params, self.cache, self._keys, jnp.asarray(tokens),
-            jnp.asarray(positions), jnp.asarray(budgets), teff)
+            jnp.asarray(positions), jnp.asarray(budgets), teff, k)
         block = np.asarray(block)  # the ONLY host sync: (B, K) per K tokens
         now = time.monotonic()
         for i in active:
             st = self.slots[i]
             if st is None:
                 continue  # cancelled mid-block by an on_token callback
-            for j in range(self.fused_steps):
+            for j in range(k):
                 nxt = int(block[i, j])
                 st.generated.append(nxt)
                 self.decode_tokens += 1
@@ -1243,7 +1710,7 @@ class TierEngine:
                 if s else None)
 
     def snapshot(self) -> dict:
-        return {
+        out = {
             "cache": jax.tree.map(np.asarray, self.cache),
             "slots": [self._copy_seq(s) for s in self.slots],
             "positions": self.positions.copy(),
@@ -1254,6 +1721,13 @@ class TierEngine:
                             for p in self._slot_prompt],
             "slot_fp": list(self._slot_extras_fp),
         }
+        if self.pool is not None:
+            out["paged"] = {
+                "pt": None if self._pt is None else self._pt.copy(),
+                "slot_pages": [list(p) for p in self._slot_pages],
+                "high_water": self.pool.high_water,
+            }
+        return out
 
     def restore(self, snap: dict) -> None:
         self.cache = jax.tree.map(jnp.asarray, snap["cache"])
@@ -1268,5 +1742,27 @@ class TierEngine:
                              for p in snap.get("slot_prompt",
                                                [None] * b)]
         self._slot_extras_fp = list(snap.get("slot_fp", [b""] * b))
+        if self.pool is not None:
+            # prefix-store entries hold page refs into the PRE-failure pool;
+            # drain them first (decrefs fire against the old pool), then
+            # derive a fresh allocator from the snapshot's ownership lists
+            while self.prefix_store.evict_oldest() is not None:
+                pass
+            pv = snap.get("paged") or {}
+            self._slot_pages = [list(p) for p in
+                                pv.get("slot_pages",
+                                       [[] for _ in self.slots])]
+            old = self.pool
+            self.pool = PagePool(self.serving.pool_pages,
+                                 self.serving.kv_page_size,
+                                 page_bytes=old.page_bytes)
+            self.pool.reown([p for sp in self._slot_pages for p in sp])
+            self.pool.high_water = max(self.pool.high_water,
+                                       int(pv.get("high_water", 0)))
+            if self.prefix_store.lru.on_evict is None:
+                self.prefix_store.lru.on_evict = self._on_prefix_evict
+            if self._pt is not None:
+                self._pt = (np.zeros_like(self._pt) if pv.get("pt") is None
+                            else np.asarray(pv["pt"], np.int32).copy())
         self.healthy = True
         self.last_heartbeat = time.monotonic()

@@ -94,6 +94,10 @@ class _LRUBytes:
         self._d: OrderedDict = OrderedDict()
         self.bytes = 0.0
         self.evictions = 0
+        # fired with the entry on EVERY removal (evict / pop / overwrite):
+        # the paged engine decrefs an entry's pool pages here, so dropping
+        # a store reference and freeing physical pages can never diverge
+        self.on_evict = None
 
     def __len__(self) -> int:
         return len(self._d)
@@ -110,16 +114,22 @@ class _LRUBytes:
         old = self._d.pop(key, None)
         if old is not None:
             self.bytes -= old.nbytes
+            if self.on_evict is not None:
+                self.on_evict(old)
         self._d[key] = entry
         self.bytes += nbytes
         while self.bytes > self.budget and len(self._d) > 1:
             _, ev = self._d.popitem(last=False)
             self.bytes -= ev.nbytes
             self.evictions += 1
+            if self.on_evict is not None:
+                self.on_evict(ev)
         if self.bytes > self.budget:  # the sole entry is itself too big
-            self._d.popitem(last=False)
+            _, ev = self._d.popitem(last=False)
             self.bytes = 0.0
             self.evictions += 1
+            if self.on_evict is not None:
+                self.on_evict(ev)
             return False
         return True
 
@@ -127,6 +137,8 @@ class _LRUBytes:
         e = self._d.pop(key, None)
         if e is not None:
             self.bytes -= e.nbytes
+            if self.on_evict is not None:
+                self.on_evict(e)
         return e
 
     def contains(self, key) -> bool:
@@ -187,6 +199,19 @@ class PrefixStore:
                 del self._lengths[n]
         for k in after - before:
             self._lengths[k[1]] = self._lengths.get(k[1], 0) + 1
+
+    def evict_oldest(self) -> Optional[PrefixEntry]:
+        """Force out the least-recently-used entry (fires ``on_evict``).
+        The paged engine calls this under page pressure: store-held pages
+        are spare capacity, reclaimed before a request is ever blocked."""
+        if not len(self.lru):
+            return None
+        before = set(self.lru.keys())
+        key = next(iter(self.lru.keys()))
+        e = self.lru.pop(key)
+        self.lru.evictions += 1
+        self._recount(before)
+        return e
 
     def contains(self, tokens: np.ndarray, extras_fp: bytes) -> bool:
         """Exact-prefix membership probe (no recency touch)."""

@@ -189,13 +189,15 @@ class ClusterRuntime:
         if wan is None:
             wan = (self.topology.default_remote.uplink_bps if remote
                    else self.backend.fallback_bandwidth_bps)
+        kv_fn = getattr(self.backend, "kv_headroom", None)
         self.scheduler.observe(
             loads=self.backend.tier_loads(),
             bandwidth_bps=wan,
             bandwidths={t.name: t.uplink_bps for t in remote},
             queue_depths=self.backend.queue_depths(),
             parked=(self.backend.parked_sessions()
-                    if self.sessions else None))
+                    if self.sessions else None),
+            kv=kv_fn() if kv_fn is not None else None)
 
     # -- lifecycle: arrival ------------------------------------------------
 
@@ -1171,6 +1173,11 @@ class LiveBackend:
 
     def queue_depths(self) -> Dict[str, int]:
         return {t: len(e.waiting) for t, e in self.engines.items()}
+
+    def kv_headroom(self) -> Dict[str, float]:
+        """Per-tier free fraction of the KV pool (real page accounting on
+        paged engines, slot-granular on dense ones)."""
+        return {t: e.kv_headroom() for t, e in self.engines.items()}
 
     def score_cost_s(self, policy_name: str) -> float:
         return 0.0  # the real scoring time already elapsed on the clock

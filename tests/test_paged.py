@@ -1,0 +1,400 @@
+"""Paged KV pool: paged serving is token-for-token identical to dense
+serving at temp=0 for every family (cold, warm prefix-hit, resumed
+session), admission back-pressures instead of failing when the pool runs
+out of pages, CoW refcounts free pages exactly when the last reader drops,
+paged slots migrate across pool designs on the unchanged wire format, and
+the allocator invariants hold under property fuzzing of page size x prompt
+length x admission order."""
+import numpy as np
+import pytest
+
+from repro.config import ServingConfig
+from repro.models import build_model
+from repro.serving.engine import SlotPayload, TierEngine
+from repro.serving.paged import PagePool, pages_needed
+
+FAMILY_PARAMS = [
+    "dense",
+    # the heavier families ride the slow mark to keep the smoke lane fast
+    pytest.param("vlm", marks=pytest.mark.slow),
+    pytest.param("moe", marks=pytest.mark.slow),
+    pytest.param("ssm", marks=pytest.mark.slow),
+    pytest.param("hybrid", marks=pytest.mark.slow),
+]
+
+
+def make_engine(cfg, params, max_batch=2, max_seq=256, paged=False, **sv_kw):
+    sv = ServingConfig(max_batch=max_batch, max_seq=max_seq, paged=paged,
+                       **({"kv_page_size": 32} if paged else {}), **sv_kw)
+    return TierEngine(build_model(cfg), params, sv, eos_id=-1)
+
+
+def _family_inputs(cfg, base_len=40, ext_len=10, seed=0):
+    rng = np.random.default_rng(seed)
+    base = rng.integers(4, 200, size=base_len).astype(np.int32)
+    ext = rng.integers(4, 200, size=ext_len).astype(np.int32)
+    extras = {}
+    if cfg.frontend == "vision_stub":
+        extras["patches"] = rng.standard_normal(
+            (cfg.num_patches, cfg.frontend_dim)).astype(np.float32)
+    return base, ext, extras
+
+
+def _drain(eng):
+    done = {s.rid: list(s.generated) for s in eng.run_until_drained()}
+    eng.finished.clear()
+    return done
+
+
+# ---------------------------------------------------------------------------
+# allocator unit behavior (pure host logic)
+# ---------------------------------------------------------------------------
+
+
+def test_pages_needed_ceil_and_cap():
+    assert pages_needed(0, 32, 256) == 0
+    assert pages_needed(1, 32, 256) == 1
+    assert pages_needed(32, 32, 256) == 1
+    assert pages_needed(33, 32, 256) == 2
+    assert pages_needed(10_000, 32, 256) == 8  # capped at a full sequence
+
+
+def test_pool_alloc_free_refcount():
+    pool = PagePool(4, 32)
+    a = pool.alloc(3)
+    assert pool.pages_free == 1 and pool.pages_used == 3
+    assert pool.alloc(2) is None  # short: nothing handed out
+    assert pool.pages_free == 1
+    pool.incref(a[:2])
+    assert pool.pages_shared == 2
+    assert pool.decref(a) == 1  # only the unshared page frees
+    assert pool.pages_free == 2
+    assert pool.decref(a[:2]) == 2  # last readers drop -> pages free
+    assert pool.pages_free == 4
+    pool.check()
+
+
+def test_pool_null_page_pinned():
+    pool = PagePool(2, 32)
+    pool.incref([0])
+    pool.decref([0])  # both are no-ops on the null page
+    assert int(pool.refcnt[0]) == 1
+    assert 0 not in pool.free_list
+    pool.check()
+
+
+def test_pool_reown_rebuilds_from_references():
+    pool = PagePool(4, 32)
+    pool.alloc(4)
+    pool.reown([1, 1, 3])  # page 1 shared twice, 3 once; 2 and 4 free
+    assert int(pool.refcnt[1]) == 2 and int(pool.refcnt[3]) == 1
+    assert sorted(pool.free_list) == [2, 4]
+    pool.check()
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        ServingConfig(kv_page_size=48)  # not a power of two
+    with pytest.raises(ValueError):
+        ServingConfig(max_seq=192, paged=True, kv_page_size=256)  # > max_seq
+    with pytest.raises(ValueError):
+        ServingConfig(max_seq=192, paged=True, kv_page_size=128)  # no divide
+    with pytest.raises(ValueError):
+        ServingConfig(max_seq=256, paged=True, kv_page_size=32,
+                      kv_pool_pages=4)  # pool below one full sequence
+    sv = ServingConfig(max_batch=3, max_seq=256, paged=True, kv_page_size=32)
+    assert sv.pages_per_slot == 8
+    assert sv.pool_pages == 24
+
+
+# ---------------------------------------------------------------------------
+# paged vs dense token parity (cold / warm prefix-hit / resumed session)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", FAMILY_PARAMS)
+def test_paged_matches_dense_all_paths(family, family_model):
+    cfg, params = family_model(family)
+    base, ext, extras = _family_inputs(cfg)
+
+    def serve(paged):
+        eng = make_engine(cfg, params, paged=paged, prefix_cache_mb=64,
+                          session_cache_mb=64)
+        out = {}
+        # cold
+        eng.submit(0, base, max_new=8, extras=dict(extras), session="s")
+        out.update(_drain(eng))
+        # warm: extends the stored prefix / parked session
+        t2 = np.concatenate([base, ext]).astype(np.int32)
+        eng.submit(1, t2, max_new=8, extras=dict(extras), session="s")
+        out.update(_drain(eng))
+        # resumed session: extends turn 1's full conversation
+        t3 = np.concatenate([t2, np.asarray(out[1][:-1], np.int32),
+                             ext[:5]]).astype(np.int32)
+        eng.submit(2, t3, max_new=8, extras=dict(extras), session="s")
+        out.update(_drain(eng))
+        return out, eng
+
+    dense, _ = serve(paged=False)
+    paged, eng = serve(paged=True)
+    assert dense == paged
+    assert eng.resumed_sessions >= 1
+    eng.pool.check()
+
+
+def test_paged_warm_hit_is_copy_free(family_model):
+    """A warm prefix hit maps the store's full pages CoW-shared (refcount >
+    1) instead of duplicating rows."""
+    cfg, params = family_model("dense")
+    base, ext, _ = _family_inputs(cfg, base_len=64)
+    eng = make_engine(cfg, params, paged=True, prefix_cache_mb=64)
+    eng.submit(0, base, max_new=4)
+    _drain(eng)
+    assert eng.pool.pages_shared > 0  # store deposit shares the slot's pages
+    eng.submit(1, np.concatenate([base, ext]).astype(np.int32), max_new=4)
+    eng.step()
+    assert eng.prefix_hits == 1
+    # the hit's full pages are mapped by BOTH the store and the live slot
+    assert eng.pool.pages_shared >= 64 // 32
+    _drain(eng)
+    eng.pool.check()
+
+
+# ---------------------------------------------------------------------------
+# back-pressure & continuous admission
+# ---------------------------------------------------------------------------
+
+
+def test_page_exhaustion_backpressures(family_model):
+    """With pages for ~one full sequence, six concurrent long requests must
+    all finish (admissions defer, never fail) with dense-identical tokens,
+    and every page must return to the free list."""
+    cfg, params = family_model("dense")
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(4, 200, size=30).astype(np.int32)
+               for _ in range(6)]
+
+    def serve(sv):
+        eng = TierEngine(build_model(cfg), params, sv, eos_id=-1)
+        for r, p in enumerate(prompts):
+            eng.submit(r, p, max_new=100)
+        return _drain(eng), eng
+
+    dense, _ = serve(ServingConfig(max_batch=4, max_seq=256))
+    tight = ServingConfig(max_batch=4, max_seq=256, paged=True,
+                          kv_page_size=32, kv_pool_pages=8)
+    paged, eng = serve(tight)
+    assert dense == paged
+    assert eng.pool.pages_free == eng.pool.num_pages  # all pages returned
+    eng.pool.check()
+
+
+def test_store_pages_reclaimed_under_pressure(family_model):
+    """Prefix-store pages are spare capacity: a reservation that cannot be
+    served from the free list evicts store entries rather than starving."""
+    cfg, params = family_model("dense")
+    rng = np.random.default_rng(1)
+    sv = ServingConfig(max_batch=2, max_seq=256, paged=True, kv_page_size=32,
+                       kv_pool_pages=8, prefix_cache_mb=64)
+    eng = TierEngine(build_model(cfg), params, sv, eos_id=-1)
+    eng.submit(0, rng.integers(4, 200, size=40).astype(np.int32), max_new=4)
+    _drain(eng)
+    held = eng.pool.num_pages - eng.pool.pages_free
+    assert held > 0  # the store holds pages after the request finished
+    # a request needing more than the free list forces store eviction
+    eng.submit(1, rng.integers(4, 200, size=60).astype(np.int32), max_new=150)
+    out = _drain(eng)
+    assert 1 in out
+    assert eng.prefix_store.evictions > 0
+    eng.pool.check()
+
+
+def test_refcount_frees_on_last_reader(family_model):
+    """Pages shared between a finished depositor, the store, and a warm
+    reader free exactly when the LAST reference drops."""
+    cfg, params = family_model("dense")
+    base, ext, _ = _family_inputs(cfg, base_len=64)
+    eng = make_engine(cfg, params, paged=True, prefix_cache_mb=64)
+    eng.submit(0, base, max_new=4)
+    _drain(eng)
+    eng.submit(1, np.concatenate([base, ext]).astype(np.int32), max_new=4)
+    eng.step()  # admitted: slot + store both reference the shared pages
+    shared_before = eng.pool.pages_shared
+    assert shared_before > 0
+    _drain(eng)  # reader finished -> its references dropped
+    # store still holds its entries; drain it and every page must free
+    while eng.prefix_store.evict_oldest() is not None:
+        pass
+    assert eng.pool.pages_free == eng.pool.num_pages
+    eng.pool.check()
+
+
+# ---------------------------------------------------------------------------
+# migration & snapshot round-trips across pool designs
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("src_paged,dst_paged",
+                         [(True, True), (True, False), (False, True)])
+def test_migration_roundtrip_across_pool_designs(src_paged, dst_paged,
+                                                 family_model):
+    cfg, params = family_model("dense")
+    base, _, _ = _family_inputs(cfg, base_len=25)
+
+    def decode_after_move(a_paged, b_paged):
+        src = make_engine(cfg, params, paged=a_paged)
+        src.submit(7, base, max_new=40)
+        src.step()
+        wire = src.extract_slot(7, remove=True).to_bytes()
+        if a_paged:
+            src.pool.check()
+        dst = make_engine(cfg, params, paged=b_paged)
+        dst.inject_slot(SlotPayload.from_bytes(wire))
+        out = _drain(dst)
+        if b_paged:
+            dst.pool.check()
+        return out[7]
+
+    moved = decode_after_move(src_paged, dst_paged)
+    ref = decode_after_move(False, False)
+    assert moved == ref
+
+
+def test_paged_snapshot_restore_midflight(family_model):
+    cfg, params = family_model("dense")
+    rng = np.random.default_rng(2)
+    sv = ServingConfig(max_batch=4, max_seq=256, paged=True, kv_page_size=32,
+                       kv_pool_pages=8)
+    eng = TierEngine(build_model(cfg), params, sv, eos_id=-1)
+    for r in range(3):
+        eng.submit(r, rng.integers(4, 200, size=20 + r).astype(np.int32),
+                   max_new=30)
+    eng.step()
+    eng.step()
+    snap = eng.snapshot()
+    ref = _drain(eng)
+    eng2 = TierEngine(build_model(cfg), params, sv, eos_id=-1)
+    eng2.restore(snap)
+    eng2.pool.check()
+    assert _drain(eng2) == ref
+    eng2.pool.check()
+
+
+def test_inject_rejects_when_pool_exhausted(family_model):
+    from repro.serving.engine import MigrationError
+    cfg, params = family_model("dense")
+    base, _, _ = _family_inputs(cfg, base_len=30)
+    src = make_engine(cfg, params, paged=False)
+    src.submit(1, base, max_new=200)
+    src.step()
+    payload = src.extract_slot(1, remove=True)
+    dst = TierEngine(build_model(cfg), params,
+                     ServingConfig(max_batch=4, max_seq=256, paged=True,
+                                   kv_page_size=32, kv_pool_pages=8),
+                     eos_id=-1)
+    dst.submit(2, base, max_new=190)
+    dst.step()  # the resident request reserved the whole pool
+    with pytest.raises(MigrationError):
+        dst.inject_slot(payload)
+    assert all(s is None or s.rid == 2 for s in dst.slots)
+    dst.pool.check()
+
+
+# ---------------------------------------------------------------------------
+# scheduler gauges
+# ---------------------------------------------------------------------------
+
+
+def test_kv_gauges_and_headroom(family_model):
+    cfg, params = family_model("dense")
+    base, _, _ = _family_inputs(cfg, base_len=30)
+    eng = make_engine(cfg, params, paged=True)
+    assert eng.kv_headroom() == 1.0
+    eng.submit(0, base, max_new=60)
+    eng.step()
+    g = eng.kv_gauges()
+    assert g["pages_free"] < g["pages_total"]
+    assert 0.0 <= eng.kv_headroom() < 1.0
+    assert g["pages_high_water"] > 0 and g["page_bytes"] > 0
+    # dense engines synthesize slot-granular numbers from the same API
+    d = make_engine(cfg, params, paged=False)
+    assert d.kv_headroom() == 1.0
+    d.submit(0, base, max_new=64)
+    d.step()  # still mid-decode: one of two slots occupied
+    assert d.kv_headroom() < 1.0
+
+
+def test_runtime_observes_kv_headroom(family_model):
+    """The live cluster runtime feeds per-tier KV headroom into the
+    scheduler's SystemState."""
+    from repro.config import PolicyConfig, ServingConfig, get_topology
+    from repro.core.baselines import make_policy
+    from repro.core.scheduler import MoAOffScheduler
+    from repro.serving.tiers import ClusterServer, build_cluster_engines
+
+    topo = get_topology("edge-cloud")
+    sv = ServingConfig(max_batch=2, max_seq=192, paged=True, kv_page_size=32)
+    server = ClusterServer(
+        build_cluster_engines(topo, sv), topology=topo,
+        scheduler=MoAOffScheduler(policy=make_policy(
+            "moa-off", PolicyConfig(adaptive_tau=False), topology=topo)))
+    server.submit("tell me about paging " * 3, max_new=4)
+    server.run()
+    st = server.scheduler.estimator.state
+    assert set(st.kv_headroom) == set(topo.names)
+    for h in st.kv_headroom.values():
+        assert 0.0 <= h <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# property fuzzing: page size x prompt length x admission order
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_fuzz_page_size_prompt_length_admission_order(family_model):
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    cfg, params = family_model("dense")
+    model = build_model(cfg)
+
+    @settings(max_examples=6, deadline=None)
+    @given(data=st.data())
+    def prop(data):
+        page = data.draw(st.sampled_from([8, 16, 32, 64]), label="page")
+        pool_pages = data.draw(
+            st.integers(min_value=128 // page, max_value=4 * 128 // page),
+            label="pool_pages")
+        lens = data.draw(st.lists(
+            st.integers(min_value=4, max_value=60), min_size=1, max_size=5),
+            label="prompt_lens")
+        order = data.draw(st.permutations(range(len(lens))), label="order")
+        rng = np.random.default_rng(data.draw(
+            st.integers(min_value=0, max_value=2**16), label="seed"))
+        prompts = [rng.integers(4, 200, size=n).astype(np.int32)
+                   for n in lens]
+
+        def serve(sv):
+            eng = TierEngine(model, params, sv, eos_id=-1)
+            for r in order:
+                eng.submit(r, prompts[r], max_new=10)
+            return _drain(eng)
+
+        dense = serve(ServingConfig(max_batch=2, max_seq=128))
+        sv = ServingConfig(max_batch=2, max_seq=128, paged=True,
+                           kv_page_size=page, kv_pool_pages=pool_pages,
+                           prefix_cache_mb=8)
+        eng = TierEngine(model, params, sv, eos_id=-1)
+        for r in order:
+            eng.submit(r, prompts[r], max_new=10)
+        paged = _drain(eng)
+        assert dense == paged
+        eng.pool.check()
+        while eng.prefix_store.evict_oldest() is not None:
+            pass
+        assert eng.pool.pages_free == eng.pool.num_pages
+        eng.pool.check()
+
+    prop()
