@@ -18,6 +18,11 @@ re-prefilling clones (baseline) and once with cross-tier KV migration
 reporting p50/p95 and the receiving tiers' prefill-token deltas, which
 prove migrated requests never prefill twice.
 
+A **chaos comparison** runs the same burst under a deterministic fault
+storm (crashed edge tier, throttled twin, degraded cloud uplink) with the
+resilience layer off vs on — tier health + circuit breaking must convert
+terminal failures into degraded-but-on-time completions (goodput gain).
+
 This is the first end-to-end live-cluster number in the perf trajectory —
 the serving bench (``serving_bench.py``) measures one engine's hot path;
 this one measures the whole control plane. Emits ``BENCH_cluster.json`` at
@@ -273,6 +278,86 @@ def run_sessions(args) -> dict:
     return out
 
 
+def run_chaos(args) -> dict:
+    """Graceful degradation under a deterministic fault storm: the SAME
+    burst on edge-edge-cloud with the edge tier crashed for the whole run,
+    its twin throttled 2x and the cloud uplink at half bandwidth — once
+    with the resilience layer off (bounded retries hammer the dead tier
+    until every routed request fails terminally) and once with tier health
+    on (the circuit opens after two failures, arrivals and retries re-route
+    to the best surviving tier, sheddable work is dropped at the deadline).
+    Health-on must win on goodput: the storm is survivable, the baseline
+    just doesn't route around it."""
+    from repro.config import PolicyConfig, ResilienceConfig
+    from repro.serving.faults import FaultEvent, FaultPlan
+
+    topo = get_topology("edge-edge-cloud")
+    n = 6 if args.smoke else 12
+    sv = ServingConfig(max_batch=4, max_seq=192, heartbeat_timeout_s=0.2)
+    plan = FaultPlan([
+        FaultEvent("crash", "edge", t=0.0, duration=120.0),
+        FaultEvent("slow", "edge1", t=0.0, duration=120.0, magnitude=2.0),
+        FaultEvent("degrade", "cloud", t=0.0, duration=120.0, magnitude=0.5),
+    ])
+    rng = np.random.default_rng(7)
+    workload, t = [], 0.0
+    for i in range(n):
+        t += rng.exponential(1.0 / 4.0)
+        workload.append((t, f"Request {i}: describe the Scene. "
+                         + "and explain why the Detail matters. " * 4))
+    modes = {
+        "health_off": None,
+        "health_on": ResilienceConfig(
+            health=True, quarantine_after=2, probe_after_s=10.0,
+            retry_backoff=True, shed=True, transfer_timeout_s=2.0),
+    }
+    out = {}
+    for mode, res_cfg in modes.items():
+        server = ClusterServer(
+            build_cluster_engines(topo, sv), topology=topo,
+            scheduler=MoAOffScheduler(policy=make_policy(
+                "moa-off", PolicyConfig(adaptive_tau=False), topology=topo)),
+            fault_plan=plan, resilience=res_cfg)
+        for i, eng in enumerate(server.engines.values()):  # compile warmup
+            eng.submit(90_000 + i, (np.arange(24) % 300 + 4)
+                       .astype(np.int32), max_new=24)
+            eng.run_until_drained()
+        t0 = time.perf_counter()
+        for delay, text in workload:
+            server.submit(text, max_new=16, slo_s=args.slo, delay_s=delay,
+                          complexity={"text": 0.05})
+        results = server.run(timeout_s=args.timeout)
+        wall = time.perf_counter() - t0
+        done = [r for r in results if not r.failed]
+        lats = (np.array([r.latency_s for r in done]) if done
+                else np.array([float("inf")]))
+        health = server.runtime.health
+        ok = sum((not r.failed) and r.on_time for r in results)
+        out[mode] = {
+            "n": len(results),
+            "completed": len(done),
+            "failed": sum(r.fail_reason == "retries" for r in results),
+            "shed": sum(r.fail_reason == "shed" for r in results),
+            "degraded": sum(r.degraded for r in results),
+            "goodput_frac": ok / max(len(results), 1),
+            "goodput_rps": ok / wall,
+            # latency percentiles over COMPLETED requests (a terminal
+            # failure resolves fast — it must not flatter the percentile)
+            "p50_latency_s": float(np.percentile(lats, 50)),
+            "p95_latency_s": float(np.percentile(lats, 95)),
+            "quarantines": health.quarantine_count if health else 0,
+            "restores": server.backend.restores,
+        }
+        print(f"  [chaos/{mode}] goodput={out[mode]['goodput_frac']:.2f} "
+              f"failed={out[mode]['failed']} shed={out[mode]['shed']} "
+              f"degraded={out[mode]['degraded']} "
+              f"p95={out[mode]['p95_latency_s']:.3f}s "
+              f"quarantines={out[mode]['quarantines']}", flush=True)
+    out["goodput_gain"] = (out["health_on"]["goodput_frac"]
+                           - out["health_off"]["goodput_frac"])
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=24)
@@ -321,6 +406,10 @@ def main() -> None:
     print("[sessions] multi-turn chat with prefix & session KV reuse vs "
           "sessionless replay on edge-cloud…", flush=True)
     results["multiturn_sessions"] = run_sessions(args)
+
+    print("[chaos] deterministic fault storm, resilience layer off vs on, "
+          "on edge-edge-cloud…", flush=True)
+    results["chaos"] = run_chaos(args)
 
     payload = {
         "bench": "cluster_live",

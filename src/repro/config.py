@@ -467,6 +467,58 @@ class ServingConfig:
 
 
 @dataclass(frozen=True)
+class ResilienceConfig:
+    """Tier-health / graceful-degradation knobs for the cluster runtime.
+
+    Everything defaults OFF: a default-constructed config leaves the
+    runtime's behavior (and the golden analytic metrics) untouched.
+    ``health=True`` turns on the per-tier circuit breaker
+    (healthy -> suspect -> quarantined -> probing -> healthy, see
+    ``serving/health.py``); the other switches gate retry backoff,
+    deadline-aware load shedding and WAN transfer timeouts independently.
+    """
+
+    # circuit breaker: quarantine a tier after this many consecutive
+    # failures; 0 < suspect_after <= quarantine_after
+    health: bool = False
+    suspect_after: int = 1
+    quarantine_after: int = 3
+    # failure-rate EWMA (informational health signal published to the
+    # scheduler alongside the state machine)
+    failure_ewma_alpha: float = 0.3
+    # a quarantined tier admits one probe request after this cool-down;
+    # the probe's outcome decides healthy vs re-quarantined
+    probe_after_s: float = 5.0
+    # retries wait cap(min(base * 2^(n-1))) * (1 + jitter) instead of
+    # re-enqueueing immediately; jitter is deterministic per (rid, attempt)
+    retry_backoff: bool = False
+    backoff_base_s: float = 0.25
+    backoff_cap_s: float = 4.0
+    backoff_jitter: float = 0.25
+    # shed (terminal Outcome, fail_reason="shed") instead of queueing when
+    # the request's SLO deadline is provably unmeetable
+    shed: bool = False
+    # WAN transfers/migrations older than this are abandoned (0 = never);
+    # required for progress under a full link partition
+    transfer_timeout_s: float = 0.0
+    # evacuate parked sessions off a tier entering quarantine onto the
+    # best available compatible tier (existing SlotPayload transport)
+    rescue_sessions: bool = True
+
+    def __post_init__(self):
+        if not 0 < self.suspect_after <= self.quarantine_after:
+            raise ValueError(
+                "need 0 < suspect_after <= quarantine_after, got "
+                f"{self.suspect_after}/{self.quarantine_after}")
+
+    @property
+    def enabled(self) -> bool:
+        """Any resilience feature on (gates the new metric keys)."""
+        return (self.health or self.retry_backoff or self.shed
+                or self.transfer_timeout_s > 0)
+
+
+@dataclass(frozen=True)
 class SimConfig:
     """Discrete-event cluster simulation of the paper's testbed."""
 

@@ -105,25 +105,38 @@ class OffloadingPolicy:
         return min(tiers, key=lambda t: tier_cost_estimate(
             t, request, modality, state)).name
 
+    @staticmethod
+    def _routable(tiers: Sequence[TierSpec],
+                  state: SystemState) -> Sequence[TierSpec]:
+        """Drop circuit-open (quarantined/probing) tiers from a candidate
+        pool. Falls back to the unfiltered pool when the breaker excluded
+        everything — the runtime's degraded-routing layer then decides, so
+        the policy never deadlocks on an all-quarantined cluster (and with
+        the health layer off the pool passes through untouched)."""
+        ok = [t for t in tiers if state.healthy(t.name)]
+        return ok or tiers
+
     def _route_modality(self, request, modality: str, c: float, tau: float,
                         state: SystemState) -> str:
         topo = self.topology
         eligible_local = [
-            t for t in topo.local_tiers
+            t for t in self._routable(topo.local_tiers, state)
             if decide_modality(c, tau, state, self.cfg,
                                load=state.load(t.name)) == EDGE]
         if eligible_local:
             return self._argmin_tier(eligible_local, request, modality, state)
-        remotes = topo.remote_tiers
+        remotes = self._routable(topo.remote_tiers, state)
         if not remotes:  # pure-edge cluster: least-loaded local keeps it
-            pool = topo.local_tiers
+            pool = self._routable(topo.local_tiers, state)
             return min(pool, key=lambda t: state.load(t.name)).name
         # capability-scaled Eq. 5 threshold: a tier of capability κ accepts
         # complexity up to τ + (1-τ)κ — the cloud (κ=1) accepts everything
         eligible = [t for t in remotes
                     if c <= tau + (1.0 - tau) * t.capability]
         if not eligible:
-            return topo.default_remote.name
+            fallback = [t for t in remotes
+                        if t.name == topo.default_remote.name]
+            return (fallback or remotes)[0].name
         return self._argmin_tier(eligible, request, modality, state)
 
     def decide(self, request: Request, scores: Dict[str, float],

@@ -26,9 +26,14 @@ MODALITIES = ("image", "text", "audio")
 #: ``sticky``/``session_move`` are session-routing decisions made at
 #: arrival; ``prefix``/``resume`` mark warm (suffix-only) admissions and
 #: ``park`` marks a finished turn's state being retained for the next one.
+#: Degradation edges: ``degraded`` (re-routed off an unavailable tier),
+#: ``quarantine`` (this request's failure opened the tier's circuit),
+#: ``timeout`` (a WAN transfer was abandoned), and the terminal states
+#: ``failed`` (retry budget exhausted) / ``shed`` (SLO provably unmeetable).
 LIFECYCLE = ("arrival", "routed", "sticky", "session_move", "encode",
              "transfer", "enqueue", "prefix", "resume", "serve", "hedged",
-             "retry", "preempt", "migrate", "park", "complete")
+             "retry", "preempt", "migrate", "park", "degraded", "quarantine",
+             "timeout", "shed", "failed", "complete")
 
 
 @dataclass
@@ -107,6 +112,7 @@ class RequestRecord:
     migration_bytes: float = 0.0  # total slot-payload bytes shipped
     warm: str = ""  # "prefix" | "resume" when admitted onto reused KV rows
     warm_tokens: float = 0.0  # cached tokens whose prefill was skipped
+    degraded: bool = False  # re-routed off an unavailable/quarantined tier
     tokens: List[int] = field(default_factory=list)  # live: streamed tokens
     outcome: Optional["Outcome"] = None
 
@@ -181,6 +187,11 @@ class Outcome:
     migration_bytes: float = 0.0  # slot-payload bytes shipped for this request
     warm: str = ""  # "prefix" | "resume": admitted onto reused KV rows
     warm_tokens: float = 0.0  # cached tokens whose prefill was skipped
+    # graceful degradation: a request that could NOT be served ends in a
+    # terminal failed Outcome instead of silently vanishing
+    failed: bool = False  # terminal: never completed
+    fail_reason: str = ""  # "retries" | "shed" | "" (completed)
+    degraded: bool = False  # served, but re-routed off an unavailable tier
 
     @property
     def edge_flops(self) -> float:

@@ -92,6 +92,7 @@ class MoAOffScheduler:
                 latency_s: Optional[float] = None,
                 parked: Optional[Dict[str, int]] = None,
                 kv: Optional[Dict[str, float]] = None,
+                health: Optional[Dict[str, str]] = None,
                 edge_load: Optional[float] = None,
                 cloud_load: Optional[float] = None) -> None:
         """Feed one batch of system observations into the EWMA estimator.
@@ -125,6 +126,8 @@ class MoAOffScheduler:
             self.estimator.observe_parked_sessions(parked)
         if kv:
             self.estimator.observe_kv_headroom(kv)
+        if health:
+            self.estimator.observe_health(health)
         if bandwidth_bps is not None:
             self.estimator.observe_bandwidth(bandwidth_bps)
         if bandwidths:

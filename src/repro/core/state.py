@@ -51,6 +51,10 @@ class SystemState:
         # [0, 1]): finer-grained than slot occupancy — a tier can have free
         # slots but no pages (long contexts) or free pages but no slots
         self.kv_headroom: Dict[str, float] = {}
+        # circuit-breaker states from the runtime's HealthMonitor (tier ->
+        # "healthy" | "suspect" | "quarantined" | "probing"); empty when
+        # the health layer is off — every tier then reads as healthy
+        self.health: Dict[str, str] = {}
 
     # -- per-tier access ----------------------------------------------------
 
@@ -66,6 +70,12 @@ class SystemState:
 
     def queue_depth(self, tier: str) -> int:
         return self.queue_depths.get(tier, 0)
+
+    def healthy(self, tier: str) -> bool:
+        """False only when the tier's circuit is OPEN (quarantined/probing
+        admit no regular traffic); untracked tiers read healthy."""
+        return self.health.get(tier, "healthy") not in ("quarantined",
+                                                        "probing")
 
     def bandwidth_to(self, tier: str) -> float:
         """Uplink bandwidth toward ``tier`` (the global b when untracked)."""
@@ -160,6 +170,12 @@ class StateEstimator:
         for tier, h in kv.items():
             self.state.kv_headroom[tier] = float(h)
 
+    def observe_health(self, health: Dict[str, str]) -> None:
+        """Circuit-breaker states (exact, not smoothed — the monitor's
+        EWMA already did the smoothing)."""
+        for tier, s in health.items():
+            self.state.health[tier] = str(s)
+
     def observe_latency(self, seconds: float) -> None:
         self._lat_window.append(float(seconds))
 
@@ -177,4 +193,5 @@ class StateEstimator:
                            bandwidths=dict(s.bandwidths))
         snap.parked_sessions = dict(s.parked_sessions)
         snap.kv_headroom = dict(s.kv_headroom)
+        snap.health = dict(s.health)
         return snap

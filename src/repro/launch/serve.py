@@ -6,7 +6,11 @@ registered ``ClusterTopology`` (e.g. ``edge-regional-cloud``) and spins up
 one reduced-model engine per tier. ``--arrival-rate`` paces arrivals as an
 open-loop Poisson process, and ``--hedge-after`` / ``--fail-rate`` exercise
 straggler hedging and snapshot/restore fault recovery against the live
-engines (the same lifecycle the simulator models virtually).
+engines (the same lifecycle the simulator models virtually). ``--fault-plan``
+injects a deterministic chaos schedule (timed crash/slow/degrade/flap
+windows), and ``--quarantine-after`` / ``--retry-backoff`` / ``--shed``
+enable the tier-health circuit breaker, retry backoff and deadline-aware
+load shedding.
 
 PYTHONPATH=src python -m repro.launch.serve --requests 16 --bandwidth 300e6
 PYTHONPATH=src python -m repro.launch.serve --topology edge-regional-cloud
@@ -16,12 +20,15 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 import time
 
 import numpy as np
 
-from repro.config import TOPOLOGIES, ServingConfig, get_topology
+from repro.config import (TOPOLOGIES, ResilienceConfig, ServingConfig,
+                          get_topology)
 from repro.data.synthetic import make_image
+from repro.serving.faults import FaultPlan
 from repro.serving.tiers import ClusterServer, build_cluster_engines
 
 build_engines = build_cluster_engines  # legacy alias
@@ -55,6 +62,23 @@ def main() -> None:
     ap.add_argument("--fail-rate", type=float, default=0.0,
                     help="probability an enqueued request kills its node; "
                          "the engine is rebuilt from its last snapshot")
+    ap.add_argument("--fault-plan", default=None, metavar="JSON",
+                    help="deterministic chaos schedule: inline JSON (or a "
+                         "path to a JSON file) of timed crash/slow/degrade/"
+                         "flap windows — see repro.serving.faults.FaultPlan")
+    ap.add_argument("--retry-backoff", action="store_true",
+                    help="capped exponential backoff with deterministic "
+                         "jitter between fault retries (instead of "
+                         "immediate re-enqueue)")
+    ap.add_argument("--shed", action="store_true",
+                    help="load shedding: fail a request up front (terminal "
+                         "'shed' outcome) when it is already past its SLO "
+                         "at first enqueue or at a retry")
+    ap.add_argument("--quarantine-after", type=int, default=0,
+                    help="open a tier's circuit breaker after this many "
+                         "consecutive service failures and re-route its "
+                         "traffic to the best available tier until a probe "
+                         "succeeds (0 = health tracking off)")
     ap.add_argument("--migrate", action="store_true",
                     help="cross-tier KV migration: hedged clones of "
                          "in-service stragglers receive the donor's "
@@ -117,13 +141,26 @@ def main() -> None:
             dataclasses.replace(t, uplink_bps=args.bandwidth)
             if t.is_remote else t for t in topo.tiers))
     print(f"topology {topo.name}: tiers {', '.join(topo.names)}")
+    plan = None
+    if args.fault_plan:
+        raw = args.fault_plan
+        if os.path.exists(raw):
+            raw = open(raw).read()
+        plan = FaultPlan.from_json(raw)
+    resilience = None
+    if args.quarantine_after > 0 or args.retry_backoff or args.shed:
+        resilience = ResilienceConfig(
+            health=args.quarantine_after > 0,
+            quarantine_after=max(args.quarantine_after, 1),
+            retry_backoff=args.retry_backoff, shed=args.shed)
     server = ClusterServer(build_engines(topo, sv), topology=topo,
                            hedge_after_s=args.hedge_after,
                            fail_rate=args.fail_rate, migrate=args.migrate,
                            migrate_threshold=args.migrate_threshold,
                            hedge_in_service=args.hedge_in_service,
                            sessions=args.sessions > 0,
-                           session_move_threshold=args.session_move_threshold)
+                           session_move_threshold=args.session_move_threshold,
+                           fault_plan=plan, resilience=resilience)
 
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()
@@ -170,6 +207,20 @@ def main() -> None:
     if hedged or retries or trunc:
         print(f"hedged={hedged} retries={retries} truncated={trunc} "
               f"engine restores={server.backend.restores}")
+    failed = sum(r.failed for r in results)
+    if plan is not None or resilience is not None or failed:
+        shed = sum(r.fail_reason == "shed" for r in results)
+        degraded = sum(r.degraded for r in results)
+        ok = sum((not r.failed) and r.on_time for r in results)
+        health = server.runtime.health
+        states = (" ".join(f"{t}={s}" for t, s in
+                           sorted(health.snapshot().items()))
+                  if health is not None else "off")
+        print(f"resilience: failed={failed - shed} shed={shed} "
+              f"degraded={degraded} | goodput {ok}/{len(results)} | "
+              f"quarantines={health.quarantine_count if health else 0} "
+              f"rescued-sessions={server.runtime.rescued_sessions} | "
+              f"health {states}")
     if server.runtime.migrate:
         mig = sum(r.migrated for r in results)
         mb = sum(r.migration_bytes for r in results)

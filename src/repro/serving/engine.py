@@ -277,6 +277,10 @@ class TierEngine:
         self.finished: List[SeqState] = []
         self.journal: List[tuple] = []  # (op, payload) event journal
         self.healthy = True
+        # chaos knob: a slow-node fault window sets this > 1 and each step
+        # sleeps (throttle-1)x its own duration — the live analogue of the
+        # analytic backend's stretched service times
+        self.throttle = 1.0
         self.last_heartbeat = time.monotonic()
         self.steps = 0
         # perf counters (read by benchmarks/serving_bench.py and launch/serve)
@@ -1597,14 +1601,22 @@ class TierEngine:
         p /= p.sum()
         return int(self.rng.choice(len(p), p=p))
 
+    def _throttle_sleep(self, t_in: float) -> None:
+        if self.throttle > 1.0:
+            time.sleep((self.throttle - 1.0)
+                       * max(0.0, time.monotonic() - t_in))
+
     def step(self) -> int:
         """Admit + one decode block for all active slots. Returns #active."""
+        t_in = time.monotonic()
         self._admit()
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return 0
         if self.fused_steps <= 1:
-            return self._step_legacy(active)
+            n = self._step_legacy(active)
+            self._throttle_sleep(t_in)
+            return n
         b = len(self.slots)
         tokens = np.zeros((b,), np.int32)
         positions = np.zeros((b,), np.int32)
@@ -1654,6 +1666,7 @@ class TierEngine:
                     break
         self.steps += 1
         self.last_heartbeat = now
+        self._throttle_sleep(t_in)
         return len(active)
 
     def _step_legacy(self, active: List[int]) -> int:

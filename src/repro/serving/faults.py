@@ -1,0 +1,186 @@
+"""Declarative, deterministic fault plans for chaos-testing the runtime.
+
+A :class:`FaultPlan` is a schedule of :class:`FaultEvent` windows on the
+**epoch-relative** clock (seconds since the runtime's first event), so one
+plan drives the analytic backend's virtual clock and the live backend's
+monotonic clock identically — the acceptance bar for sim-vs-live chaos
+parity. Four event kinds:
+
+* ``crash`` — the tier's node is down for the window: every service attempt
+  started inside it faults (heartbeat-detected, then retried/failed through
+  the runtime's shared retry budget).
+* ``slow`` — service on the tier takes ``magnitude``× as long while the
+  window is open (a thermally-throttled / contended node).
+* ``degrade`` — the tier's WAN link runs at ``magnitude``× bandwidth;
+  ``magnitude == 0`` is a full partition (transfers black-hole and only a
+  configured transfer timeout releases them).
+* ``flap`` — sugar for periodic crashing: expands into crash windows of
+  ``magnitude`` duty cycle (down fraction) every ``period`` seconds.
+
+The scalar ``fail_rate`` the runtime always supported is kept as a shim:
+``FaultPlan.from_fail_rate(p)`` compiles it into a plan whose Bernoulli
+draws flow through the exact same rng stream as before, so golden metrics
+stay bit-identical. Plans are plain data: JSON round-trip via
+``to_json``/``from_json`` (the ``--fault-plan`` launcher flag), and
+``FaultPlan.storm(seed=...)`` builds a seeded pseudo-random storm for
+benchmarks — deterministic given the seed, never drawing at query time.
+"""
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import asdict, dataclass
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["FaultEvent", "FaultPlan"]
+
+KINDS = ("crash", "slow", "degrade", "flap")
+INF = float("inf")
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One fault window. ``t`` is epoch-relative (seconds since the
+    runtime's first event); ``duration`` may be infinite (never recovers).
+    ``magnitude``: slow -> service-time multiplier (>1), degrade ->
+    bandwidth multiplier in [0, 1] (0 = partition), flap -> down duty
+    cycle in (0, 1]. ``period`` is the flap cycle length."""
+
+    kind: str
+    tier: str
+    t: float = 0.0
+    duration: float = INF
+    magnitude: float = 1.0
+    period: float = 1.0
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+        if self.t < 0 or self.duration < 0:
+            raise ValueError("fault windows cannot start/extend before 0")
+        if self.kind == "flap" and (self.period <= 0
+                                    or not 0 < self.magnitude <= 1):
+            raise ValueError("flap needs period > 0 and duty in (0, 1]")
+        if self.kind == "degrade" and not 0 <= self.magnitude:
+            raise ValueError("degrade magnitude is a bandwidth multiplier")
+
+
+class FaultPlan:
+    """Immutable compiled schedule answering point-in-time queries."""
+
+    def __init__(self, events: Sequence[FaultEvent] = (),
+                 fail_rate: float = 0.0):
+        self.events: Tuple[FaultEvent, ...] = tuple(events)
+        self.fail_rate = float(fail_rate)
+        # compile: flap -> crash windows; bucket windows per tier
+        self._crash: Dict[str, List[Tuple[float, float]]] = {}
+        self._slow: Dict[str, List[Tuple[float, float, float]]] = {}
+        self._link: Dict[str, List[Tuple[float, float, float]]] = {}
+        for e in self.events:
+            if e.kind == "crash":
+                self._crash.setdefault(e.tier, []).append(
+                    (e.t, e.t + e.duration))
+            elif e.kind == "flap":
+                if math.isinf(e.duration):
+                    raise ValueError("flap needs a finite duration")
+                cycles = max(1, int(math.ceil(e.duration / e.period)))
+                for k in range(cycles):
+                    t0 = e.t + k * e.period
+                    t1 = min(t0 + e.magnitude * e.period, e.t + e.duration)
+                    if t1 > t0:
+                        self._crash.setdefault(e.tier, []).append((t0, t1))
+            elif e.kind == "slow":
+                self._slow.setdefault(e.tier, []).append(
+                    (e.t, e.t + e.duration, e.magnitude))
+            elif e.kind == "degrade":
+                self._link.setdefault(e.tier, []).append(
+                    (e.t, e.t + e.duration, e.magnitude))
+        for wins in self._crash.values():
+            wins.sort()
+
+    # -- queries (t is epoch-relative) --------------------------------------
+
+    @property
+    def has_crashes(self) -> bool:
+        return bool(self._crash)
+
+    def crashed(self, tier: str, t: float) -> bool:
+        return any(t0 <= t < t1 for t0, t1 in self._crash.get(tier, ()))
+
+    def slow_multiplier(self, tier: str, t: float) -> float:
+        mult = 1.0
+        for t0, t1, m in self._slow.get(tier, ()):
+            if t0 <= t < t1:
+                mult *= m
+        return mult
+
+    def link_multiplier(self, tier: str, t: float) -> float:
+        mult = 1.0
+        for t0, t1, m in self._link.get(tier, ()):
+            if t0 <= t < t1:
+                mult *= m
+        return mult
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def from_fail_rate(cls, fail_rate: float) -> "FaultPlan":
+        """Shim for the legacy scalar knob: the plan carries the Bernoulli
+        rate and no windows, and the backends draw it through the SAME rng
+        stream the bare ``fail_rate`` used (golden metrics bit-identical)."""
+        return cls((), fail_rate=fail_rate)
+
+    @classmethod
+    def storm(cls, seed: int, tiers: Sequence[str], duration: float,
+              crash_frac: float = 0.5, slow_mult: float = 4.0,
+              degrade_mult: float = 0.25) -> "FaultPlan":
+        """Seeded pseudo-random fault storm over ``tiers``: one crash
+        window, one slow window and one link-degrade window land on rng-
+        chosen tiers at rng-chosen offsets inside ``duration``. All draws
+        happen HERE — the compiled plan is deterministic data."""
+        rng = np.random.default_rng(seed)
+        tiers = list(tiers)
+        ev = []
+        crash_tier = tiers[int(rng.integers(len(tiers)))]
+        t0 = float(rng.uniform(0.05, 0.3) * duration)
+        ev.append(FaultEvent("crash", crash_tier, t=t0,
+                             duration=crash_frac * duration))
+        slow_tier = tiers[int(rng.integers(len(tiers)))]
+        ev.append(FaultEvent("slow", slow_tier,
+                             t=float(rng.uniform(0.0, 0.4) * duration),
+                             duration=0.5 * duration, magnitude=slow_mult))
+        link_tier = tiers[int(rng.integers(len(tiers)))]
+        ev.append(FaultEvent("degrade", link_tier,
+                             t=float(rng.uniform(0.1, 0.5) * duration),
+                             duration=0.4 * duration,
+                             magnitude=degrade_mult))
+        return cls(ev)
+
+    # -- JSON round-trip ------------------------------------------------------
+
+    def to_json(self) -> str:
+        events = []
+        for e in self.events:
+            d = asdict(e)
+            if math.isinf(d["duration"]):
+                d["duration"] = "inf"
+            events.append(d)
+        return json.dumps({"fail_rate": self.fail_rate, "events": events},
+                          sort_keys=True)
+
+    @classmethod
+    def from_json(cls, raw: str) -> "FaultPlan":
+        obj = json.loads(raw)
+        events = []
+        for d in obj.get("events", ()):
+            d = dict(d)
+            if d.get("duration") == "inf":
+                d["duration"] = INF
+            events.append(FaultEvent(**d))
+        return cls(events, fail_rate=float(obj.get("fail_rate", 0.0)))
+
+    def __repr__(self) -> str:
+        return (f"FaultPlan({len(self.events)} events, "
+                f"fail_rate={self.fail_rate})")

@@ -269,6 +269,10 @@ class SessionStore:
         parked.nbytes = float(parked.nbytes)
         return self.lru.put(sid, parked, parked.nbytes)
 
+    def ids(self) -> List[str]:
+        """Parked session ids, LRU order (oldest first)."""
+        return list(self.lru.keys())
+
     def peek(self, sid: str) -> Optional[ParkedSession]:
         return self.lru.get(sid)
 

@@ -35,11 +35,14 @@ from typing import Callable, Dict, List, Optional, Protocol, Tuple
 
 import numpy as np
 
-from repro.config import ClusterTopology, ModelConfig, TierSpec
+from repro.config import (ClusterTopology, ModelConfig, ResilienceConfig,
+                          ServingConfig, TierSpec)
 from repro.core.request import Job, Outcome, Request, RequestRecord
 from repro.core.scheduler import MoAOffScheduler
 from repro.serving import cost_model as cm
 from repro.serving.engine import MigrationError, SlotPayload
+from repro.serving.faults import FaultPlan
+from repro.serving.health import HealthMonitor, retry_backoff_s
 from repro.serving.prefix import (ParkedSession, PrefixStore, SessionStore,
                                   extras_fingerprint, prefix_buckets)
 
@@ -122,7 +125,9 @@ class ClusterRuntime:
                  observed_bandwidth_bps: Optional[float] = None,
                  migrate: bool = False, migrate_threshold: int = 0,
                  hedge_in_service: bool = False, sessions: bool = False,
-                 session_move_threshold: int = 0):
+                 session_move_threshold: int = 0,
+                 resilience: Optional[ResilienceConfig] = None,
+                 fault_plan: Optional[FaultPlan] = None):
         self.topology = topology
         self.scheduler = scheduler
         self.policy_name = policy_name
@@ -150,6 +155,21 @@ class ClusterRuntime:
         self.sessions = bool(sessions)
         self.session_move_threshold = int(session_move_threshold)
         self.session_moves = 0
+        # resilience layer: per-tier circuit breaker, retry backoff,
+        # deadline shedding, transfer timeouts. The default (all off) makes
+        # every path below byte-identical to the pre-resilience runtime.
+        self.resilience = resilience or ResilienceConfig()
+        self.plan = fault_plan
+        self.health: Optional[HealthMonitor] = (
+            HealthMonitor([t.name for t in topology.tiers], self.resilience)
+            if self.resilience.health else None)
+        # epoch anchor: fault plans are authored in seconds-since-first-
+        # event so one plan drives the virtual AND the monotonic clock
+        self.t0: Optional[float] = None
+        self.shed_count = 0  # deadline-shed requests (terminal)
+        self.failed_count = 0  # retry-budget-exhausted requests (terminal)
+        self.degraded_routes = 0  # requests re-routed off an open circuit
+        self.rescued_sessions = 0  # parked sessions evacuated at quarantine
         self.specs: Dict[str, TierSpec] = {t.name: t for t in topology.tiers}
         self.links: Dict[str, Station] = {
             t.name: Station(f"link:{t.name}", 1)
@@ -165,6 +185,9 @@ class ClusterRuntime:
             "hedge_check": self._on_hedge_check,
             "migrate_done": self._on_migrate_done,
             "session_done": self._on_session_done,
+            "retry_enqueue": self._on_retry_enqueue,
+            "transfer_timeout": self._on_transfer_timeout,
+            "session_rescue_done": self._on_session_rescue_done,
         }
         backend.bind(self)
         self.handlers.update(backend.handlers())
@@ -173,6 +196,12 @@ class ClusterRuntime:
 
     def _push(self, t: float, kind: str, **payload):
         heapq.heappush(self.events, Event(t, next(self._seq), kind, payload))
+
+    def rel(self, t: float) -> float:
+        """Epoch-relative time (seconds since the first processed event):
+        the clock :class:`FaultPlan` windows and quarantine cool-downs are
+        authored on, bridging virtual and monotonic backend clocks."""
+        return t - self.t0 if self.t0 is not None else 0.0
 
     def submit(self, req: Request) -> None:
         """Schedule a request's arrival (``req.arrival_s`` is on the
@@ -197,7 +226,9 @@ class ClusterRuntime:
             queue_depths=self.backend.queue_depths(),
             parked=(self.backend.parked_sessions()
                     if self.sessions else None),
-            kv=kv_fn() if kv_fn is not None else None)
+            kv=kv_fn() if kv_fn is not None else None,
+            health=(self.health.snapshot() if self.health is not None
+                    else None))
 
     # -- lifecycle: arrival ------------------------------------------------
 
@@ -253,7 +284,25 @@ class ClusterRuntime:
                         decision,
                         routes={m: parked_tier for m in decision.routes},
                         reason=decision.reason + "+sticky")
+        # graceful degradation: when the serving tier's circuit is open the
+        # whole request re-homes to the best available tier (the probe goes
+        # through when the cool-down elapsed). Only the FUSION tier gates —
+        # quarantined encode-side tiers are already steered around by the
+        # health-aware policy, and gating here would leak probe slots.
+        if self.health is not None and not self.health.admit(fusion,
+                                                             self.rel(ev.t)):
+            fb = self._fallback_tier(ev.t, exclude=fusion)
+            if fb != fusion:
+                fusion = fb
+                sticky = move_src = None
+                decision = dataclasses.replace(
+                    decision, routes={m: fb for m in decision.routes},
+                    reason=decision.reason + "+degraded")
+                rec.degraded = True
+                self.degraded_routes += 1
         rec.mark("routed", fusion)
+        if rec.degraded:
+            rec.mark("degraded", fusion)
         if sticky is not None:
             rec.mark("sticky", sticky)
         job = Job(request=req, decision=decision, fusion=fusion, tier=fusion,
@@ -304,9 +353,37 @@ class ClusterRuntime:
 
     # -- lifecycle: WAN links ----------------------------------------------
 
-    def _link_seconds(self, tier: str, num_bytes: float) -> float:
+    def _link_seconds(self, tier: str, num_bytes: float,
+                      t: Optional[float] = None) -> float:
         spec = self.specs[tier]
-        return cm.transfer_seconds(num_bytes, spec.uplink_bps, spec.rtt_s)
+        sec = cm.transfer_seconds(num_bytes, spec.uplink_bps, spec.rtt_s)
+        if self.plan is not None and t is not None:
+            mult = self.plan.link_multiplier(tier, self.rel(t))
+            if mult <= 0.0:
+                return float("inf")  # partitioned: the transfer black-holes
+            sec /= mult
+        return sec
+
+    def _link_dispatch(self, t: float, xfer: dict) -> None:
+        """Start one transfer on its (already reserved) link server. A
+        partitioned link (multiplier 0) never lands the transfer — only a
+        configured transfer timeout releases the server then."""
+        sec = self._link_seconds(xfer["tier"], xfer["bytes"], t)
+        if sec != float("inf"):
+            self._push(t + sec, "transfer_done", xfer=xfer)
+        if self.resilience.transfer_timeout_s > 0:
+            self._push(t + self.resilience.transfer_timeout_s,
+                       "transfer_timeout", xfer=xfer)
+
+    def _link_release(self, t: float, tier: str) -> None:
+        """Free one link server and dispatch the next queued transfer."""
+        link = self.links[tier]
+        link.utilization_update(t)
+        link.busy -= 1
+        if link.queue:
+            nxt = link.queue.pop(0)
+            link.busy += 1
+            self._link_dispatch(t, nxt)
 
     def _enqueue_link(self, t: float, tier: str, job: Job, num_bytes: float,
                       kind: str = "data"):
@@ -324,28 +401,66 @@ class ClusterRuntime:
         link.utilization_update(t)
         if link.busy < link.servers:
             link.busy += 1
-            sec = self._link_seconds(tier, num_bytes)
-            self._push(t + sec, "transfer_done", xfer=xfer)
+            self._link_dispatch(t, xfer)
         else:
             link.queue.append(xfer)
 
     def _on_transfer_done(self, ev: Event):
         xfer = ev.payload["xfer"]
-        link = self.links[xfer["tier"]]
-        link.utilization_update(ev.t)
-        link.busy -= 1
-        if link.queue:
-            nxt = link.queue.pop(0)
-            link.busy += 1
-            sec = self._link_seconds(nxt["tier"], nxt["bytes"])
-            self._push(ev.t + sec, "transfer_done", xfer=nxt)
+        if xfer.get("timed_out"):
+            return  # the timeout already released the server and the job
+        xfer["landed"] = True
+        self._link_release(ev.t, xfer["tier"])
         job: Job = xfer["job"]
         job.pending_transfers -= 1
         if job.pending_transfers == 0:
+            if job.payload.pop("xfer_dead", None):
+                return  # a sibling timed out: the retry path owns the job
             if xfer["kind"] == "migrate":
                 self.backend.migrate_inject(ev.t, job)
             else:
                 self._join_transfers(ev.t, job)
+
+    def _on_transfer_timeout(self, ev: Event):
+        """A WAN transfer exceeded the configured timeout (a slow or
+        partitioned link): release the link server, count one failure
+        against the tier's breaker, and recover per transfer kind — data
+        payloads spend a retry, lost migration payloads fall back to a
+        fresh prefill, lost session payloads cold-prefill."""
+        xfer = ev.payload["xfer"]
+        if xfer.get("landed") or xfer.get("timed_out"):
+            return
+        xfer["timed_out"] = True
+        tier, job = xfer["tier"], xfer["job"]
+        self._link_release(ev.t, tier)
+        job.pending_transfers -= 1
+        job.record.mark("timeout", tier)
+        self._note_failure(ev.t, job, tier)
+        kind = xfer["kind"]
+        if kind == "migrate":
+            job.payload.pop("migration_wire", None)
+            job.payload.pop("migration_nbytes", None)
+            job.payload.pop("cost_tier", None)  # reprice at the new tier
+            donor = job.payload.pop("migration_donor", None)
+            if job.record.done:
+                return
+            if donor is not None and not donor.record.done:
+                return  # the donor still decodes: it wins the dead race
+            if job.pending_transfers == 0:
+                self._enqueue_service(ev.t, job)
+            return
+        if kind == "session":
+            job.payload.pop("session_wire", None)
+            job.payload.pop("session_parked", None)
+            job.payload.pop("session_pending", None)
+            if job.pending_transfers == 0 and not job.record.done:
+                self._enqueue_service(ev.t, job)
+            return
+        # data: the modality payload never reached the remote tier — one
+        # failed attempt; the shared failure path retries/re-routes/sheds
+        if job.pending_transfers > 0:
+            job.payload["xfer_dead"] = True
+        self.handle_service_failure(ev.t, job, tier)
 
     def _join_transfers(self, t: float, job: Job) -> None:
         """All of a job's arrival-side transfers have landed: install any
@@ -357,6 +472,14 @@ class ClusterRuntime:
     # -- lifecycle: service ------------------------------------------------
 
     def _enqueue_service(self, t: float, job: Job):
+        # deadline-aware load shedding: refuse the FIRST enqueue of a
+        # request already past its SLO (hedge clones and retries carry
+        # ``t_enqueue`` and are decided on the retry path instead)
+        if (self.resilience.shed and not job.record.done
+                and "t_enqueue" not in job.payload
+                and t >= job.request.arrival_s + job.request.slo_s):
+            self.fail_request(t, job, job.tier, "shed")
+            return
         job.record.mark("enqueue", job.tier)
         if "t_enqueue" not in job.payload:
             job.payload["t_enqueue"] = t
@@ -527,6 +650,8 @@ class ClusterRuntime:
         rec = job.record
         rec.mark("complete", tier)
         self.scheduler.observe(latency_s=latency_s)
+        if self.health is not None:
+            self.health.record_success(tier)
         out = Outcome(
             rid=req.rid, latency_s=latency_s, routes=job.decision.routes,
             correct=correct, tier_flops=tier_flops or {},
@@ -535,10 +660,146 @@ class ClusterRuntime:
             retries=job.retries, served_tier=tier, ttft_s=rec.ttft_s,
             on_time=latency_s <= req.slo_s, truncated=rec.truncated,
             migrated=rec.migrated, migration_bytes=rec.migration_bytes,
-            warm=rec.warm, warm_tokens=rec.warm_tokens)
+            warm=rec.warm, warm_tokens=rec.warm_tokens,
+            degraded=rec.degraded)
         rec.outcome = out
         self.outcomes.append(out)
         return out
+
+    # -- lifecycle: failure, degradation & shedding ------------------------
+
+    def _fallback_tier(self, t: float, exclude: str = "") -> str:
+        """Best tier to re-home degraded traffic onto: highest capability
+        among tiers whose circuit admits traffic (local preferred at equal
+        capability — degraded edge-only routing keeps serving, at the
+        accuracy the weaker tier can deliver). Falls back to the full tier
+        set when everything is quarantined, so routing never deadlocks."""
+        pool = [s for n, s in self.specs.items() if n != exclude
+                and (self.health is None
+                     or self.health.available(n, self.rel(t)))]
+        if not pool:
+            pool = list(self.specs.values())
+        return max(pool,
+                   key=lambda s: (s.capability, not s.is_remote, s.name)).name
+
+    def _note_failure(self, t: float, job: Job, tier: str) -> None:
+        """Feed one failed attempt into the breaker; on the open transition
+        mark the trace and evacuate the tier's parked sessions."""
+        if self.health is None:
+            return
+        if self.health.record_failure(tier, self.rel(t)):
+            if not job.record.done:
+                job.record.mark("quarantine", tier)
+            if self.resilience.rescue_sessions:
+                self._rescue_sessions(t, tier)
+
+    def handle_service_failure(self, t: float, job: Job, tier: str) -> None:
+        """Shared post-fault path for BOTH backends: feed the breaker,
+        spend one retry or fail terminally, re-route a retry whose tier's
+        circuit is open, apply capped-exponential backoff, and shed retries
+        that provably cannot meet the deadline."""
+        job.in_service = False
+        self._note_failure(t, job, tier)
+        if job.record.done:
+            return
+        if job.retries >= self.backend.retry_limit(tier):
+            self.fail_request(t, job, tier, "retries")
+            return
+        job.retries += 1
+        job.record.mark("retry", tier)
+        res = self.resilience
+        if self.health is not None and \
+                not self.health.admit(job.tier, self.rel(t)):
+            # job.fusion stays put: the fallback tier has no embeddings
+            # shipped for it, so the full prefill is priced/executed there
+            fb = self._fallback_tier(t, exclude=job.tier)
+            if fb != job.tier:
+                job.tier = fb
+                job.record.degraded = True
+                self.degraded_routes += 1
+                job.record.mark("degraded", fb)
+        delay = 0.0
+        if res.retry_backoff:
+            delay = retry_backoff_s(res, job.request.rid, job.retries)
+        if res.shed and t + delay >= (job.request.arrival_s
+                                      + job.request.slo_s):
+            self.fail_request(t, job, tier, "shed")
+            return
+        if delay > 0:
+            self._push(t + delay, "retry_enqueue", job=job)
+        else:
+            self._enqueue_service(t, job)  # retry (possibly behind queue)
+
+    def _on_retry_enqueue(self, ev: Event):
+        job: Job = ev.payload["job"]
+        if job.record.done:
+            return  # a hedged twin finished during the backoff window
+        self._enqueue_service(ev.t, job)
+
+    def fail_request(self, t: float, job: Job, tier: str,
+                     reason: str) -> None:
+        """Terminal failure: exactly one failed Outcome per record (shed or
+        retry-budget exhaustion), so callers always get an answer for every
+        submitted request instead of a silent hang."""
+        rec = job.record
+        if rec.done:
+            return
+        rec.done = True
+        rec.mark("shed" if reason == "shed" else "failed", tier)
+        if reason == "shed":
+            self.shed_count += 1
+        else:
+            self.failed_count += 1
+        abandon = getattr(self.backend, "abandon", None)
+        if abandon is not None:
+            abandon(job)
+        req = job.request
+        out = Outcome(
+            rid=req.rid, latency_s=t - req.arrival_s,
+            routes=job.decision.routes, correct=False,
+            transfer_bytes=job.transfer_bytes, hedged=job.hedged,
+            retries=job.retries, served_tier=tier, ttft_s=rec.ttft_s,
+            on_time=False, truncated=rec.truncated, migrated=rec.migrated,
+            migration_bytes=rec.migration_bytes, warm=rec.warm,
+            warm_tokens=rec.warm_tokens, failed=True, fail_reason=reason,
+            degraded=rec.degraded)
+        rec.outcome = out
+        self.outcomes.append(out)
+
+    def _rescue_sessions(self, t: float, src: str) -> None:
+        """Quarantine transition on ``src``: ship its parked sessions to
+        the least-occupied compatible available tier (same slot-payload
+        transport as migration, one hop — not through the wedged link
+        station) so later turns resume warm somewhere healthy."""
+        ids_fn = getattr(self.backend, "parked_session_ids", None)
+        if ids_fn is None:
+            return
+        sids = list(ids_fn(src))
+        if not sids:
+            return
+        cands = [n for n in self.specs
+                 if n != src and self.backend.can_migrate(src, n)
+                 and (self.health is None
+                      or self.health.available(n, self.rel(t)))]
+        if not cands:
+            return
+        occ = self.backend.occupancy()
+        dst = min(cands, key=lambda n: (occ.get(n, 0), n))
+        spec_s, spec_d = self.specs[src], self.specs[dst]
+        for sid in sids:
+            out = self.backend.session_rescue_extract(t, sid, src)
+            if out is None:
+                continue
+            nbytes, payload = out
+            self._push(t + cm.migration_seconds(nbytes, spec_s, spec_d),
+                       "session_rescue_done", sid=sid, dst=dst,
+                       payload=payload)
+            self.rescued_sessions += 1
+
+    def _on_session_rescue_done(self, ev: Event):
+        self.backend.session_rescue_install(
+            ev.t, ev.payload["sid"], ev.payload["dst"],
+            ev.payload["payload"])
 
     # -- event loop --------------------------------------------------------
 
@@ -558,6 +819,8 @@ class ClusterRuntime:
                 break
             ev = self._next_due()
             if ev is not None:
+                if self.t0 is None:
+                    self.t0 = ev.t  # epoch anchor for plan/health clocks
                 self.t = ev.t
                 self.handlers[ev.kind](ev)
                 continue
@@ -585,9 +848,13 @@ class AnalyticBackend:
                  prefix_cache_mb: float = 0.0,
                  session_cache_mb: float = 64.0,
                  prefix_min_tokens: int = 16,
-                 max_context_tokens: Optional[int] = None):
+                 max_context_tokens: Optional[int] = None,
+                 serving: Optional[ServingConfig] = None):
         from repro.configs import get_config  # local import, no cycle
 
+        # retry budget + heartbeat timeout, shared semantics with the live
+        # engines (default ServingConfig keeps the historical detect=2.0)
+        self.serving = serving or ServingConfig()
         self.acc = acc_model
         self.rng = np.random.default_rng(seed)
         self.fallback_bandwidth_bps = fallback_bandwidth_bps
@@ -1023,13 +1290,22 @@ class AnalyticBackend:
         self.active[job.tier].append(job)
         sec = job.payload["service_s"]
         # fault injection: the node serving this job dies mid-flight and the
-        # failure is detected after a heartbeat timeout, then retried
+        # failure is detected after a heartbeat timeout, then retried. The
+        # Bernoulli draw keeps its historical rng-stream position (one draw
+        # per service start whenever fail_rate > 0); plan crash windows
+        # stack on top without consuming the stream, and slow windows
+        # stretch the service time of attempts started inside them.
+        plan = self.rt.plan
         fail = False
         if st.fail_rate > 0:
             self.fault_draws += 1  # every service start re-draws the fault
             fail = self.rng.random() < st.fail_rate
+        if plan is not None:
+            if not fail and plan.crashed(st.name, self.rt.rel(t)):
+                fail = True
+            sec *= plan.slow_multiplier(st.name, self.rt.rel(t))
         if fail:
-            detect = 2.0  # heartbeat timeout
+            detect = self.serving.heartbeat_timeout_s
             self.rt._push(t + detect, "service_failed", job=job,
                           station=st.name)
         else:
@@ -1068,12 +1344,9 @@ class AnalyticBackend:
             return
         self._active_remove(ev.payload["station"], job)
         self._next_from_queue(ev.t, st)
-        if job.record.done:
-            return
-        job.retries += 1
-        job.in_service = False
-        job.record.mark("retry", job.tier)
-        self.rt._enqueue_service(ev.t, job)  # retry (possibly behind queue)
+        # shared retry/terminal-failure/degradation path (bounded by the
+        # retry budget — a permanently dead tier can no longer livelock)
+        self.rt.handle_service_failure(ev.t, job, ev.payload["station"])
 
     def _on_service_done(self, ev: Event):
         tier = ev.payload["station"]
@@ -1101,6 +1374,33 @@ class AnalyticBackend:
                                   capability=spec.capability)
         self.rt.finish(job, tier, latency, correct=correct,
                        tier_flops={tier: flops}, tier_mem_bytes={tier: mem})
+
+    # -- resilience hooks ----------------------------------------------------
+
+    def retry_limit(self, tier: str) -> int:
+        return self.serving.retry_limit
+
+    def abandon(self, job: Job) -> None:
+        """Terminal failure: make sure the job can't consume a server
+        later from some station queue (its in-service state was already
+        released by the failure path)."""
+        for st in self.stations.values():
+            if job in st.queue:
+                st.queue.remove(job)
+
+    def parked_session_ids(self, tier: str) -> List[str]:
+        store = self.parked.get(tier)
+        return list(store.ids()) if store is not None else []
+
+    def session_rescue_extract(self, t: float, sid: str, src: str):
+        rec = self.parked[src].resume(sid)
+        if rec is None:
+            return None
+        return float(rec.nbytes), rec
+
+    def session_rescue_install(self, t: float, sid: str, dst: str,
+                               payload) -> None:
+        self.parked[dst].park(sid, payload)
 
     def advance(self) -> bool:
         return False  # purely event-driven: no events left means done
@@ -1150,6 +1450,7 @@ class LiveBackend:
         self._snapshots: Dict[str, dict] = {}
         self._since_snap: Dict[str, List[Job]] = {t: [] for t in self.engines}
         self.rt: Optional[ClusterRuntime] = None
+        self._chaos = fail_rate > 0  # snapshot discipline needed?
         for tier, eng in self.engines.items():
             eng.on_admit = self._make_on_admit(tier)
             eng.on_token = self._make_on_token(tier)
@@ -1158,6 +1459,10 @@ class LiveBackend:
 
     def bind(self, runtime: ClusterRuntime) -> None:
         self.rt = runtime
+        # snapshot/replay discipline is paid whenever faults can consume
+        # the snapshots: a Bernoulli fail_rate OR plan crash windows
+        self._chaos = self.fail_rate > 0 or (
+            runtime.plan is not None and runtime.plan.has_crashes)
 
     def handlers(self):
         return {"node_fault": self._on_node_fault}
@@ -1254,24 +1559,33 @@ class LiveBackend:
     # -- admission ----------------------------------------------------------
 
     def _maybe_fault(self, t: float, job: Job, tier: str) -> None:
-        """EVERY submission below the retry limit re-draws the fault rng —
-        including retried ones, which reach this path again through the
-        runtime (they used to be replayed engine-side without a draw,
-        diverging from the analytic backend's per-retry draws), and
-        migrated injections (the analytic carrier re-enters start_service
-        and draws there)."""
+        """EVERY submission re-draws the fault rng — including retried
+        ones, which reach this path again through the runtime (they used
+        to be replayed engine-side without a draw, diverging from the
+        analytic backend's per-retry draws), and migrated injections (the
+        analytic carrier re-enters start_service and draws there). An
+        attempt whose retry budget is already spent faults too: the shared
+        failure path then emits the terminal failed Outcome, matching the
+        analytic backend's bounded retries. Plan crash windows stack on
+        the Bernoulli draw without consuming the rng stream."""
         eng = self.engines[tier]
-        if self.fail_rate > 0 and job.retries < eng.serving.retry_limit:
+        fail = False
+        if self.fail_rate > 0:
             self.fault_draws += 1
-            if self.rng.random() < self.fail_rate:
-                # node dies mid-flight; detected after heartbeat timeout
-                self.rt._push(t + eng.serving.heartbeat_timeout_s,
-                              "node_fault", job=job, tier=tier)
+            fail = self.rng.random() < self.fail_rate
+        plan = self.rt.plan
+        if not fail and plan is not None \
+                and plan.crashed(tier, self.rt.rel(t)):
+            fail = True
+        if fail:
+            # node dies mid-flight; detected after heartbeat timeout
+            self.rt._push(t + eng.serving.heartbeat_timeout_s,
+                          "node_fault", job=job, tier=tier)
 
     def enqueue(self, t: float, job: Job) -> None:
         tier = job.tier
         eng = self.engines[tier]
-        if self.fail_rate > 0:
+        if self._chaos:
             self._maybe_fault(t, job, tier)
             # snapshot cadence (a full host copy of the KV pool) is only
             # paid when faults can actually consume the snapshots
@@ -1327,15 +1641,15 @@ class LiveBackend:
         job: Job = ev.payload["job"]
         tier = ev.payload["tier"]
         if job.record.done:
+            # the request resolved during the detect window; the failure
+            # still feeds the breaker (the node really died)
+            self.rt.handle_service_failure(ev.t, job, tier)
             return
         eng = self.engines[tier]
         # rebuild the tier on a standby from its last snapshot, then replay
         # the submissions the snapshot doesn't contain
         eng.restore(self._snapshots[tier])
         self.restores += 1
-        job.retries += 1
-        job.in_service = False
-        job.record.mark("retry", tier)
         moved: set = set()
         if self.rt.migrate:
             # re-home the snapshot's in-flight slots onto surviving tiers:
@@ -1367,10 +1681,12 @@ class LiveBackend:
             j.in_service = False
             self._since_snap[tier].append(j)
             self._engine_submit(eng, tier, j)
-        # the faulted submission itself re-enters through the runtime so the
-        # fault rng is re-drawn for the retry (draw-per-submission parity
-        # with the analytic backend)
-        self.rt._enqueue_service(ev.t, job)
+        # the faulted submission itself re-enters through the runtime's
+        # shared failure path: the fault rng is re-drawn for the retry
+        # (draw-per-submission parity with the analytic backend) and the
+        # retry budget / backoff / shed / terminal-failure rules apply
+        # identically to both backends
+        self.rt.handle_service_failure(ev.t, job, tier)
 
     def _rehome_target(self, src: str) -> Optional[str]:
         cands = [n for n, e in self.engines.items()
@@ -1500,7 +1816,7 @@ class LiveBackend:
         rec.mark("serve", tier)
         carrier.in_service = True
         self._inflight[tier][carrier.request.rid] = carrier
-        if self.fail_rate > 0:
+        if self._chaos:
             # same fault/snapshot discipline as enqueue: make sure this
             # tier has a snapshot (taken AFTER the injection, so recovery
             # restores the migrated slot), register the carrier for replay
@@ -1548,7 +1864,55 @@ class LiveBackend:
                     eng2.sessions.resume(sid)
         eng.finished.clear()
 
+    # -- resilience hooks ----------------------------------------------------
+
+    def retry_limit(self, tier: str) -> int:
+        return self.engines[tier].serving.retry_limit
+
+    def abandon(self, job: Job) -> None:
+        """Terminal failure: cancel every engine copy of the request and
+        drop it from the in-flight maps, so ``advance`` can drain (a
+        permanently faulting submission used to livelock the server)."""
+        rid = job.request.rid
+        for tier, eng in self.engines.items():
+            if rid in self._inflight[tier]:
+                eng.cancel(rid)
+                self._inflight[tier].pop(rid, None)
+
+    def parked_session_ids(self, tier: str) -> List[str]:
+        eng = self.engines.get(tier)
+        return list(eng.sessions.ids()) if eng is not None else []
+
+    def session_rescue_extract(self, t: float, sid: str, src: str):
+        eng = self.engines.get(src)
+        if eng is None:
+            return None
+        parked = eng.resume_session(sid)
+        if parked is None or not isinstance(parked.data, SlotPayload):
+            return None
+        wire = parked.data.to_bytes()
+        return float(len(wire)), wire
+
+    def session_rescue_install(self, t: float, sid: str, dst: str,
+                               wire) -> None:
+        try:
+            payload = SlotPayload.from_bytes(wire)
+        except MigrationError:
+            return  # corrupt in transit: later turns cold-prefill
+        self.engines[dst].adopt_session(sid, payload)
+
     def advance(self) -> bool:
+        plan = self.rt.plan
+        if plan is not None and self.rt.t0 is not None:
+            # slow-node windows: throttle the engine's step cadence while
+            # the window is open (the live analogue of the analytic
+            # backend's stretched service times)
+            now_rel = self.rt.rel(time.monotonic())
+            for tier, eng in self.engines.items():
+                eng.throttle = plan.slow_multiplier(tier, now_rel)
+        if self.rt.health is not None:
+            for tier, eng in self.engines.items():
+                self.rt.health.heartbeat(tier, bool(eng.heartbeat_ok()))
         any_active = False
         for tier, eng in self.engines.items():
             n = eng.step()

@@ -28,11 +28,13 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.config import (ClusterTopology, ModelConfig, PolicyConfig,
-                          SimConfig, TierSpec, two_tier_topology)
+                          ResilienceConfig, ServingConfig, SimConfig,
+                          TierSpec, two_tier_topology)
 from repro.core.baselines import make_policy
 from repro.core.request import Outcome, Request
 from repro.core.scheduler import MoAOffScheduler
 from repro.serving.accuracy_model import VQAV2, AccuracyModel
+from repro.serving.faults import FaultPlan
 from repro.serving.runtime import (AnalyticBackend, ClusterRuntime, Event,
                                    Station)
 
@@ -53,7 +55,14 @@ class ClusterSimulator:
                  session_move_threshold: int = 0,
                  prefix_cache_mb: float = 0.0,
                  session_cache_mb: float = 64.0,
-                 max_context_tokens: Optional[int] = None):
+                 max_context_tokens: Optional[int] = None,
+                 fault_plan: Optional[FaultPlan] = None,
+                 resilience: Optional[ResilienceConfig] = None,
+                 serving_cfg: Optional[ServingConfig] = None):
+        # legacy-shim: a plan carrying only a Bernoulli rate compiles back
+        # into the scalar knob, through the same rng stream as ever
+        if fault_plan is not None and fail_rate == 0.0:
+            fail_rate = fault_plan.fail_rate
         self.cfg = sim_cfg
         topo = topology or sim_cfg.topology
         if topo is not None and (edge_servers != 1 or cloud_servers != 4):
@@ -75,7 +84,8 @@ class ClusterSimulator:
             fallback_bandwidth_bps=sim_cfg.bandwidth_bps,
             prefix_cache_mb=prefix_cache_mb,
             session_cache_mb=session_cache_mb,
-            max_context_tokens=max_context_tokens)
+            max_context_tokens=max_context_tokens,
+            serving=serving_cfg)
         self.runtime = ClusterRuntime(topo, self.scheduler, policy_name,
                                       self.backend,
                                       hedge_after_s=hedge_after_s,
@@ -84,7 +94,9 @@ class ClusterSimulator:
                                       hedge_in_service=hedge_in_service,
                                       sessions=sessions,
                                       session_move_threshold=
-                                      session_move_threshold)
+                                      session_move_threshold,
+                                      resilience=resilience,
+                                      fault_plan=fault_plan)
         self.hedge_after_s = hedge_after_s
         # legacy attribute views (None when the topology lacks the name)
         self.edge = self.stations.get("edge")
@@ -183,6 +195,24 @@ class ClusterSimulator:
             out["warm_tokens"] = float(sum(
                 o.warm_tokens for o in self.outcomes))
             out["session_moves"] = float(self.runtime.session_moves)
+        rt = self.runtime
+        if (rt.resilience.enabled or rt.plan is not None
+                or any(o.failed for o in self.outcomes)):
+            # resilience metrics, gated to keep the golden key set exact:
+            # goodput = completed-on-time fraction OF SUBMITTED work
+            # (failed/shed outcomes count against it)
+            n = max(len(self.outcomes), 1)
+            out["failed"] = float(sum(o.failed and o.fail_reason == "retries"
+                                      for o in self.outcomes)) / n
+            out["shed"] = float(sum(o.fail_reason == "shed"
+                                    for o in self.outcomes)) / n
+            out["degraded"] = float(sum(o.degraded
+                                        for o in self.outcomes)) / n
+            out["goodput"] = float(sum((not o.failed) and o.on_time
+                                       for o in self.outcomes)) / n
+            out["quarantines"] = float(
+                rt.health.quarantine_count if rt.health is not None else 0)
+            out["rescued_sessions"] = float(rt.rescued_sessions)
         for name, st in self.stations.items():
             out[f"{name}_flops"] = per_flops[name]
             out[f"{name}_mem_byte_s"] = per_mem[name]

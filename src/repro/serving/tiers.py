@@ -34,11 +34,13 @@ from typing import Dict, List, Optional
 import jax
 import numpy as np
 
-from repro.config import ClusterTopology, ServingConfig, two_tier_topology
+from repro.config import (ClusterTopology, ResilienceConfig, ServingConfig,
+                          two_tier_topology)
 from repro.core.request import ModalityInput, Request
 from repro.core.scheduler import MoAOffScheduler
 from repro.data.tokenizer import ToyTokenizer
 from repro.serving.engine import TierEngine
+from repro.serving.faults import FaultPlan
 from repro.serving.runtime import ClusterRuntime, LiveBackend
 
 
@@ -59,6 +61,9 @@ class ServedResult:
     migration_bytes: float = 0.0  # slot-payload bytes shipped
     warm: str = ""  # "prefix" | "resume": admitted onto reused KV rows
     warm_tokens: float = 0.0  # cached tokens whose prefill was skipped
+    failed: bool = False  # terminal: never completed
+    fail_reason: str = ""  # "retries" | "shed" | "" (completed)
+    degraded: bool = False  # served after re-routing off an open circuit
 
 
 def build_cluster_engines(topology: ClusterTopology,
@@ -103,7 +108,13 @@ class ClusterServer:
                  seed: int = 0, migrate: bool = False,
                  migrate_threshold: int = 0, hedge_in_service: bool = False,
                  snapshot_every: int = 4, sessions: bool = False,
-                 session_move_threshold: int = 0):
+                 session_move_threshold: int = 0,
+                 fault_plan: Optional[FaultPlan] = None,
+                 resilience: Optional[ResilienceConfig] = None):
+        # legacy-shim: a plan carrying only a Bernoulli rate compiles back
+        # into the scalar knob, through the same rng stream as ever
+        if fault_plan is not None and fail_rate == 0.0:
+            fail_rate = fault_plan.fail_rate
         self.engines = dict(engines)
         self.topology = topology or _default_topology(
             self.engines, bandwidth_bps if bandwidth_bps is not None
@@ -126,7 +137,8 @@ class ClusterServer:
             observed_bandwidth_bps=bandwidth_bps, migrate=migrate,
             migrate_threshold=migrate_threshold,
             hedge_in_service=hedge_in_service, sessions=sessions,
-            session_move_threshold=session_move_threshold)
+            session_move_threshold=session_move_threshold,
+            resilience=resilience, fault_plan=fault_plan)
         self._rid = 0
         self._reported = 0  # outcomes already converted to ServedResults
         self.results: List[ServedResult] = []
@@ -229,8 +241,10 @@ class ClusterServer:
     # ------------------------------------------------------------------
 
     def run(self, timeout_s: float = 300.0) -> List[ServedResult]:
-        """Drive the runtime until every submitted request completes (or
-        ``timeout_s`` of wall clock elapses)."""
+        """Drive the runtime until every submitted request resolves — a
+        completion OR a terminal failed/shed Outcome — or ``timeout_s`` of
+        wall clock elapses; on timeout the results gathered so far are
+        returned (partial results under a permanent fault, not a hang)."""
         self.runtime.run(max_wall_s=timeout_s)
         outcomes = self.runtime.outcomes
         for out in outcomes[self._reported:]:
@@ -242,7 +256,8 @@ class ClusterServer:
                 truncated=out.truncated, hedged=out.hedged,
                 retries=out.retries, migrated=out.migrated,
                 migration_bytes=out.migration_bytes, warm=out.warm,
-                warm_tokens=out.warm_tokens))
+                warm_tokens=out.warm_tokens, failed=out.failed,
+                fail_reason=out.fail_reason, degraded=out.degraded))
         self._reported = len(outcomes)
         return self.results
 

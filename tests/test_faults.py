@@ -1,0 +1,122 @@
+"""FaultPlan: event validation, flap compilation, point-in-time queries,
+JSON round-trip, seeded storm determinism — and the legacy ``fail_rate``
+shim's bit-identical rng stream through the analytic backend."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.serving.faults import FaultEvent, FaultPlan
+
+
+def test_event_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent("meteor", "edge")
+    with pytest.raises(ValueError, match="before 0"):
+        FaultEvent("crash", "edge", t=-1.0)
+    with pytest.raises(ValueError, match="flap"):
+        FaultEvent("flap", "edge", period=0.0, duration=2.0)
+    with pytest.raises(ValueError, match="flap"):
+        FaultEvent("flap", "edge", magnitude=1.5, duration=2.0)
+    with pytest.raises(ValueError, match="bandwidth multiplier"):
+        FaultEvent("degrade", "edge", magnitude=-0.1)
+    with pytest.raises(ValueError, match="finite duration"):
+        FaultPlan([FaultEvent("flap", "edge", magnitude=0.5)])
+
+
+def test_crash_window_queries():
+    plan = FaultPlan([FaultEvent("crash", "edge", t=1.0, duration=2.0)])
+    assert plan.has_crashes
+    assert not plan.crashed("edge", 0.99)
+    assert plan.crashed("edge", 1.0)
+    assert plan.crashed("edge", 2.999)
+    assert not plan.crashed("edge", 3.0)  # half-open window
+    assert not plan.crashed("cloud", 1.5)
+    assert not FaultPlan().has_crashes
+
+
+def test_flap_compiles_to_duty_cycle_crash_windows():
+    plan = FaultPlan([FaultEvent("flap", "edge", t=0.0, duration=4.0,
+                                 magnitude=0.5, period=2.0)])
+    # down for the first half of each 2 s period, up for the second
+    for t, want in [(0.0, True), (0.9, True), (1.0, False), (1.9, False),
+                    (2.0, True), (2.9, True), (3.0, False), (4.5, False)]:
+        assert plan.crashed("edge", t) == want, t
+
+
+def test_slow_and_link_multipliers_stack():
+    plan = FaultPlan([
+        FaultEvent("slow", "edge", t=0.0, duration=10.0, magnitude=2.0),
+        FaultEvent("slow", "edge", t=5.0, duration=10.0, magnitude=3.0),
+        FaultEvent("degrade", "cloud", t=1.0, duration=2.0, magnitude=0.25),
+        FaultEvent("degrade", "cloud", t=2.0, duration=2.0, magnitude=0.0),
+    ])
+    assert plan.slow_multiplier("edge", 1.0) == 2.0
+    assert plan.slow_multiplier("edge", 6.0) == 6.0  # overlap multiplies
+    assert plan.slow_multiplier("edge", 12.0) == 3.0
+    assert plan.slow_multiplier("edge", 20.0) == 1.0
+    assert plan.link_multiplier("cloud", 1.5) == 0.25
+    assert plan.link_multiplier("cloud", 2.5) == 0.0  # partition dominates
+    assert plan.link_multiplier("cloud", 5.0) == 1.0
+    assert plan.slow_multiplier("cloud", 1.0) == 1.0  # kinds don't bleed
+
+
+def test_json_round_trip_including_infinite_windows():
+    plan = FaultPlan([
+        FaultEvent("crash", "edge", t=0.5),  # infinite duration
+        FaultEvent("slow", "edge1", t=1.0, duration=3.0, magnitude=4.0),
+        FaultEvent("flap", "cloud", t=0.0, duration=6.0, magnitude=0.25,
+                   period=2.0),
+    ], fail_rate=0.05)
+    back = FaultPlan.from_json(plan.to_json())
+    assert back.events == plan.events
+    assert back.fail_rate == plan.fail_rate
+    assert back.crashed("edge", 1e12)  # the infinity survived the trip
+    raw = json.loads(plan.to_json())
+    assert any(e["duration"] == "inf" for e in raw["events"])
+
+
+def test_storm_is_deterministic_and_pure_at_query_time():
+    a = FaultPlan.storm(seed=3, tiers=["edge", "cloud"], duration=10.0)
+    b = FaultPlan.storm(seed=3, tiers=["edge", "cloud"], duration=10.0)
+    assert a.events == b.events  # same seed, same storm
+    assert a.events != FaultPlan.storm(seed=4, tiers=["edge", "cloud"],
+                                       duration=10.0).events
+    assert sorted(e.kind for e in a.events) == ["crash", "degrade", "slow"]
+
+    def probe(p):
+        return [(p.crashed("edge", t), p.slow_multiplier("cloud", t),
+                 p.link_multiplier("cloud", t))
+                for t in np.linspace(0.0, 10.0, 13)]
+
+    assert probe(a) == probe(a)  # queries never draw: stable under repeat
+
+
+def test_fail_rate_shim_is_bit_identical_to_bare_fail_rate():
+    """``FaultPlan.from_fail_rate(p)`` drives the analytic backend through
+    the exact rng stream the scalar ``fail_rate=p`` always used: every
+    outcome (latency, retries, accuracy draw) is bit-identical."""
+    from repro.config import SimConfig
+    from repro.data.synthetic import RequestGenerator
+    from repro.serving.simulator import EdgeCloudSimulator
+
+    def run(**kw):
+        sim = EdgeCloudSimulator(SimConfig(bandwidth_bps=300e6, seed=0),
+                                 cloud_servers=1, edge_servers=1, **kw)
+        for r in RequestGenerator(seed=0, arrival_rate=4.0).generate(40):
+            sim.submit(r)
+        sim.run()
+        return sim
+
+    bare = run(fail_rate=0.1)
+    shim = run(fault_plan=FaultPlan.from_fail_rate(0.1))
+    key = [(o.rid, o.latency_s, o.retries, o.correct, o.served_tier,
+            o.failed) for o in bare.outcomes]
+    assert key == [(o.rid, o.latency_s, o.retries, o.correct, o.served_tier,
+                    o.failed) for o in shim.outcomes]
+    assert any(o.retries > 0 for o in bare.outcomes)  # faults really fired
+    mb, ms = bare.metrics(), shim.metrics()
+    # the shim may add the (gated) resilience keys; every shared metric is
+    # bit-identical
+    for k, v in mb.items():
+        assert ms[k] == v, k

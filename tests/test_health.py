@@ -1,0 +1,286 @@
+"""Tier health & graceful degradation: the circuit-breaker state machine,
+deterministic retry backoff, the scheduler/policy health plumbing, and the
+runtime behaviors they gate — terminal failures at the retry budget,
+degraded re-routing off quarantined tiers, deadline-aware shedding,
+transfer timeouts under a partitioned link, partial results, and parked-
+session rescue — on the analytic backend (the live mirrors live in
+``test_runtime_parity.py`` / ``test_migration.py``)."""
+import numpy as np
+import pytest
+
+from repro.config import (PolicyConfig, ResilienceConfig, ServingConfig,
+                          SimConfig, get_topology, two_tier_topology)
+from repro.core.baselines import make_policy
+from repro.core.request import ModalityInput, Request
+from repro.core.scheduler import MoAOffScheduler
+from repro.core.state import SystemState
+from repro.serving.faults import FaultEvent, FaultPlan
+from repro.serving.health import (HEALTHY, PROBING, QUARANTINED, SUSPECT,
+                                  HealthMonitor, retry_backoff_s)
+from repro.serving.simulator import ClusterSimulator
+
+CFG = ResilienceConfig(health=True, suspect_after=1, quarantine_after=3,
+                       probe_after_s=5.0)
+
+
+# ---------------------------------------------------------------------------
+# the state machine itself
+# ---------------------------------------------------------------------------
+
+
+def test_state_machine_walk():
+    hm = HealthMonitor(["edge", "cloud"], CFG)
+    assert hm.state("edge") == HEALTHY
+    assert not hm.record_failure("edge", 0.0)
+    assert hm.state("edge") == SUSPECT
+    assert not hm.record_failure("edge", 0.1)
+    assert hm.record_failure("edge", 0.2)  # third failure opens the circuit
+    assert hm.state("edge") == QUARANTINED and hm.quarantine_count == 1
+    assert hm.state("cloud") == HEALTHY  # untouched
+    # during the cool-down: refused, no probe slot consumed
+    assert not hm.available("edge", 1.0) and not hm.admit("edge", 1.0)
+    # past the cool-down: available is pure, admit consumes THE probe
+    assert hm.available("edge", 6.0) and hm.available("edge", 6.0)
+    assert hm.admit("edge", 6.0)
+    assert hm.state("edge") == PROBING and hm.probe_count == 1
+    assert not hm.admit("edge", 6.1)  # one probe at a time
+    assert not hm.available("edge", 6.1)
+    hm.record_success("edge")  # the probe came back: circuit closes
+    assert hm.state("edge") == HEALTHY
+
+
+def test_failed_probe_reopens_circuit_and_restarts_cooldown():
+    hm = HealthMonitor(["edge"], CFG)
+    for _ in range(3):
+        hm.record_failure("edge", 0.0)
+    assert hm.admit("edge", 10.0)  # the probe
+    assert hm.record_failure("edge", 10.0)  # probe died: re-open (rescue cue)
+    assert hm.state("edge") == QUARANTINED and hm.quarantine_count == 2
+    assert not hm.admit("edge", 11.0)  # cool-down restarted at t=10
+    assert hm.admit("edge", 15.0)
+
+
+def test_success_heals_suspect_and_decays_ewma():
+    hm = HealthMonitor(["edge"], CFG)
+    hm.record_failure("edge", 0.0)
+    ewma = hm.tiers["edge"].failure_ewma
+    assert hm.state("edge") == SUSPECT and ewma > 0
+    hm.record_success("edge")
+    assert hm.state("edge") == HEALTHY
+    assert hm.tiers["edge"].failure_ewma < ewma
+    assert hm.tiers["edge"].consecutive_failures == 0
+    # quarantined tiers are NOT healed by unrelated successes
+    for _ in range(3):
+        hm.record_failure("edge", 1.0)
+    hm.record_success("edge")
+    assert hm.state("edge") == QUARANTINED
+
+
+def test_stale_heartbeat_marks_suspect_but_never_quarantines():
+    hm = HealthMonitor(["edge"], CFG)
+    for _ in range(10):
+        hm.heartbeat("edge", ok=False)
+    assert hm.state("edge") == SUSPECT
+    assert hm.quarantine_count == 0  # only real failures open the circuit
+    hm.heartbeat("edge", ok=True)
+    hm.record_success("edge")
+    assert hm.state("edge") == HEALTHY
+
+
+def test_unknown_tier_is_harmless():
+    hm = HealthMonitor(["edge"], CFG)
+    assert not hm.record_failure("ghost", 0.0)
+    hm.record_success("ghost")
+    hm.heartbeat("ghost", ok=False)
+    assert hm.state("ghost") == HEALTHY
+    assert hm.available("ghost", 0.0) and hm.admit("ghost", 0.0)
+
+
+def test_retry_backoff_is_deterministic_exponential_capped():
+    cfg = ResilienceConfig(backoff_base_s=0.25, backoff_cap_s=4.0,
+                           backoff_jitter=0.25)
+    d1 = retry_backoff_s(cfg, rid=7, attempt=1)
+    assert d1 == retry_backoff_s(cfg, rid=7, attempt=1)  # pure, no rng
+    assert 0.25 <= d1 <= 0.25 * 1.25  # base * (1 + jitter)
+    assert retry_backoff_s(cfg, rid=7, attempt=2) > d1  # exponential
+    assert retry_backoff_s(cfg, rid=7, attempt=12) <= 4.0 * 1.25  # capped
+    assert retry_backoff_s(cfg, rid=8, attempt=1) != d1  # per-rid jitter
+    flat = ResilienceConfig(backoff_base_s=0.5, backoff_jitter=0.0)
+    assert retry_backoff_s(flat, rid=99, attempt=1) == 0.5
+
+
+# ---------------------------------------------------------------------------
+# scheduler & policy plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_system_state_health_gate_and_estimator_plumbing():
+    s = SystemState()
+    s.health = {"edge": "quarantined", "cloud": "probing",
+                "edge1": "suspect"}
+    assert not s.healthy("edge") and not s.healthy("cloud")
+    assert s.healthy("edge1")  # suspect stays routable
+    assert s.healthy("unknown")
+    sched = MoAOffScheduler()
+    sched.observe(health={"edge": "quarantined"})
+    assert sched.estimator.snapshot().health == {"edge": "quarantined"}
+
+
+def test_policy_routes_around_quarantined_tier():
+    topo = get_topology("edge-edge-cloud")
+    sched = MoAOffScheduler(policy=make_policy(
+        "moa-off", PolicyConfig(adaptive_tau=False), topology=topo))
+    req = _easy_req(0, 0.0)
+    before = sched.route(req).routes["text"]
+    assert before in ("edge", "edge1")  # easy text stays local
+    sched.observe(health={before: "quarantined"})
+    after = sched.route(req).routes["text"]
+    assert after != before  # steered around the open circuit
+    # everything quarantined: routing falls back to the full pool rather
+    # than deadlocking
+    sched.observe(health={t.name: "quarantined" for t in topo.tiers})
+    assert sched.route(req).routes["text"] in topo.names
+
+
+# ---------------------------------------------------------------------------
+# runtime behaviors (analytic backend: virtual clock, deterministic)
+# ---------------------------------------------------------------------------
+
+
+def _easy_req(rid, t, tokens=32, decode=8, slo=30.0, session=None, cx=0.05):
+    return Request(rid=rid, arrival_s=t, decode_tokens=decode, slo_s=slo,
+                   session=session, modalities={
+                       "text": ModalityInput("text", complexity=cx,
+                                             size_bytes=tokens * 4,
+                                             meta={"tokens": tokens,
+                                                   "entities": 0,
+                                                   "sentences": 1})})
+
+
+def test_analytic_terminal_failure_at_retry_budget():
+    sim = ClusterSimulator(SimConfig(seed=0), fail_rate=1.0,
+                           cloud_servers=1, edge_servers=1,
+                           serving_cfg=ServingConfig(retry_limit=2))
+    sim.submit(_easy_req(0, 0.0))
+    (out,) = sim.run()
+    assert out.failed and out.fail_reason == "retries"
+    assert out.retries == 2 and not out.correct and not out.on_time
+    states = [s for s, _ in sim.runtime.records[0].trace()]
+    assert states.count("retry") == 2
+    assert states[-1] == "failed"
+    m = sim.metrics()
+    assert m["failed"] == 1.0 and m["goodput"] == 0.0
+
+
+def test_analytic_quarantine_reroutes_and_degrades():
+    """Permanently crashed edge tier with the breaker on: the first failure
+    opens the circuit, its victim retries degraded on the best surviving
+    tier, and LATER arrivals are steered around the quarantined tier by the
+    health-aware policy — the storm is fully survivable."""
+    plan = FaultPlan([FaultEvent("crash", "edge", t=0.0)])
+    res = ResilienceConfig(health=True, quarantine_after=1,
+                           probe_after_s=1e9)
+    sim = ClusterSimulator(SimConfig(seed=0),
+                           policy_cfg=PolicyConfig(adaptive_tau=False),
+                           topology=get_topology("edge-edge-cloud"),
+                           fault_plan=plan, resilience=res)
+    for i in range(4):
+        sim.submit(_easy_req(i, 1.0 + 10.0 * i))
+    outs = {o.rid: o for o in sim.run()}
+    assert len(outs) == 4
+    assert all(not o.failed for o in outs.values())
+    first = next(o for o in outs.values() if o.retries > 0)
+    assert first.degraded and first.served_tier != "edge"
+    tr = sim.runtime.records[first.rid].trace()
+    assert ("quarantine", "edge") in tr and ("retry", "edge") in tr
+    assert ("degraded", first.served_tier) in tr
+    # arrivals after the quarantine never touch edge and pay no retries
+    late = [o for o in outs.values() if o.rid > first.rid]
+    assert late and all(o.retries == 0 and o.served_tier != "edge"
+                        for o in late)
+    assert sim.runtime.health.quarantine_count == 1
+    m = sim.metrics()
+    assert m["quarantines"] == 1.0 and m["degraded"] >= 0.25
+    assert m["failed"] == 0.0
+
+
+def test_analytic_shed_on_hopeless_retry():
+    res = ResilienceConfig(shed=True)
+    sim = ClusterSimulator(SimConfig(seed=0), fail_rate=1.0,
+                           cloud_servers=1, edge_servers=1, resilience=res)
+    # the fault is detected after the 2 s heartbeat — already past this SLO,
+    # so the first retry is provably hopeless and the request sheds
+    sim.submit(_easy_req(0, 0.0, slo=1.0))
+    (out,) = sim.run()
+    assert out.failed and out.fail_reason == "shed"
+    assert sim.runtime.records[0].trace()[-1][0] == "shed"
+    m = sim.metrics()
+    assert m["shed"] == 1.0 and m["failed"] == 0.0  # shed ≠ retry-exhausted
+
+
+def test_backoff_delays_analytic_retries():
+    def failed_latency(backoff):
+        res = ResilienceConfig(retry_backoff=backoff, backoff_base_s=0.5,
+                               backoff_jitter=0.0)
+        sim = ClusterSimulator(SimConfig(seed=0), fail_rate=1.0,
+                               cloud_servers=1, edge_servers=1,
+                               resilience=res,
+                               serving_cfg=ServingConfig(retry_limit=2))
+        sim.submit(_easy_req(0, 0.0))
+        (out,) = sim.run()
+        assert out.failed
+        return out.latency_s
+
+    # two retries back off 0.5 s then 1.0 s; the jitter-free delta is exact
+    assert failed_latency(True) == pytest.approx(
+        failed_latency(False) + 1.5)
+
+
+def test_analytic_partition_transfer_timeout_spends_retry():
+    plan = FaultPlan([FaultEvent("degrade", "cloud", t=0.0, magnitude=0.0)])
+    res = ResilienceConfig(transfer_timeout_s=0.5)
+    sim = ClusterSimulator(SimConfig(seed=0), cloud_servers=1,
+                           edge_servers=1, fault_plan=plan, resilience=res)
+    # hard request: routed to cloud, its payload crosses the dead link
+    sim.submit(_easy_req(0, 0.0, tokens=96, cx=0.95))
+    (out,) = sim.run()
+    tr = sim.runtime.records[0].trace()
+    assert ("timeout", "cloud") in tr
+    assert out.retries >= 1
+    # the wedged link server was released (no leak)
+    assert sim.links["cloud"].busy == 0
+
+
+def test_analytic_partition_without_timeout_returns_partial_results():
+    plan = FaultPlan([FaultEvent("degrade", "cloud", t=0.0, magnitude=0.0)])
+    sim = ClusterSimulator(SimConfig(seed=0), cloud_servers=1,
+                           edge_servers=1, fault_plan=plan)
+    sim.submit(_easy_req(0, 0.0))  # edge-local: completes
+    sim.submit(_easy_req(1, 0.0, tokens=96, cx=0.95))  # black-holed
+    outs = sim.run()
+    assert [o.rid for o in outs] == [0]  # partial, not a hang
+
+
+def test_analytic_session_rescue_off_quarantined_tier():
+    """A parked chat session survives its tier's quarantine: the circuit-
+    open transition ships the parked KV to the compatible twin, and the
+    next turn resumes warm THERE."""
+    plan = FaultPlan([FaultEvent("crash", "edge", t=5.0)])
+    res = ResilienceConfig(health=True, quarantine_after=1,
+                           probe_after_s=1e9)
+    sim = ClusterSimulator(SimConfig(seed=0),
+                           policy_cfg=PolicyConfig(adaptive_tau=False),
+                           topology=get_topology("edge-edge-cloud"),
+                           sessions=True, fault_plan=plan, resilience=res)
+    sim.submit(_easy_req(0, 1.0, tokens=32, session="s"))  # parks on edge
+    sim.submit(_easy_req(1, 10.0))  # crashes -> quarantines edge
+    sim.submit(_easy_req(2, 50.0, tokens=96, session="s"))  # warm turn 2
+    outs = {o.rid: o for o in sim.run()}
+    assert outs[0].served_tier == "edge"
+    assert ("quarantine", "edge") in sim.runtime.records[1].trace()
+    assert sim.runtime.rescued_sessions == 1
+    t2 = sim.runtime.records[2].trace()
+    assert outs[2].warm == "resume"
+    assert outs[2].served_tier == "edge1"  # resumed where the KV was shipped
+    assert ("sticky", "edge1") in t2 and ("resume", "edge1") in t2
+    assert sim.metrics()["rescued_sessions"] == 1.0

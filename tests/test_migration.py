@@ -280,20 +280,32 @@ def test_live_preemption_moves_longest_remaining_slot():
 @pytest.mark.slow
 def test_live_fault_rehomes_inflight_slot():
     """A node fault re-homes the snapshot's in-flight slots onto the
-    surviving compatible tier instead of replaying them on the standby."""
+    surviving compatible tier instead of replaying them on the standby.
+    A FaultPlan crash window opens AFTER the long request is decoding but
+    before the second arrives: the second submission faults, the restore
+    rescues the first request's slot onto edge1 where it completes, and
+    the faulted request (edge stays down) fails terminally once its retry
+    budget is spent."""
+    from repro.serving.faults import FaultEvent, FaultPlan
+
+    plan = FaultPlan([FaultEvent("crash", "edge", t=0.1)])  # down forever
     sv = ServingConfig(max_batch=2, max_seq=96, heartbeat_timeout_s=0.0,
                        retry_limit=1)
-    server = _twin_edge_server(sv=sv, fail_rate=1.0, migrate=True,
+    server = _twin_edge_server(sv=sv, fault_plan=plan, migrate=True,
                                snapshot_every=0)
     server.submit("long running request one. " * 2, max_new=60,
                   complexity={"text": 0.05})
     server.submit("short follow-up request. " * 2, max_new=6,
                   complexity={"text": 0.05}, delay_s=0.2)
-    res = {r.rid: r for r in server.run()}
+    res = {r.rid: r for r in server.run(timeout_s=60.0)}
     assert len(res) == 2
     assert res[0].migrated and res[0].tier == "edge1"
-    assert len(res[0].tokens) == 60
+    assert len(res[0].tokens) == 60  # the rescued slot completed in full
     assert server.backend.restores >= 1
+    # the faulted submission retried on the still-crashed tier until its
+    # budget ran out, then resolved terminally — never a silent hang
+    assert res[1].failed and res[1].fail_reason == "retries"
+    assert res[1].retries == sv.retry_limit
 
 
 @pytest.mark.slow
@@ -342,19 +354,20 @@ def test_live_inject_capacity_fallback(family_model):
 
 def test_live_fault_redraw_per_submission():
     """Retried submissions re-draw the fault rng (they used to be replayed
-    engine-side without a draw): with fail_rate=1 every submission below the
-    retry limit faults, so retries == retry_limit and draws == retry_limit."""
+    engine-side without a draw): with fail_rate=1 EVERY submission faults —
+    initial + retry_limit retries = retry_limit + 1 draws — and the request
+    then resolves into a terminal failed Outcome (analytic parity)."""
     sv = ServingConfig(max_batch=2, max_seq=64, heartbeat_timeout_s=0.0)
     topo = two_tier_topology()
     server = ClusterServer(build_cluster_engines(topo, sv), topology=topo,
                            fail_rate=1.0)
     server.submit("hello there friend", max_new=4,
                   complexity={"text": 0.05})
-    (res,) = server.run()
+    (res,) = server.run(timeout_s=60.0)
     limit = sv.retry_limit
     assert res.retries == limit
-    assert server.backend.fault_draws == limit
-    assert len(res.tokens) >= 1
+    assert server.backend.fault_draws == limit + 1
+    assert res.failed and res.fail_reason == "retries"
 
 
 def test_analytic_fault_draw_per_submission():
