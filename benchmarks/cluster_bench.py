@@ -23,6 +23,12 @@ storm (crashed edge tier, throttled twin, degraded cloud uplink) with the
 resilience layer off vs on — tier health + circuit breaking must convert
 terminal failures into degraded-but-on-time completions (goodput gain).
 
+A **scale-out storm** sweeps open-loop arrival rates (Poisson, plus bursty
+and diurnal patterns at the knee) against replicated edge engine pools
+(R=1 vs R=2, local transport), per policy — the saturation curves
+(goodput-at-SLO and p95 vs rate) that show R=2 pushing the knee out and
+MoA-Off beating the static baselines past the single-replica knee.
+
 This is the first end-to-end live-cluster number in the perf trajectory —
 the serving bench (``serving_bench.py``) measures one engine's hot path;
 this one measures the whole control plane. Emits ``BENCH_cluster.json`` at
@@ -46,7 +52,8 @@ from repro.config import TOPOLOGIES, ServingConfig, get_topology
 from repro.core.baselines import make_policy
 from repro.core.scheduler import MoAOffScheduler
 from repro.data.synthetic import make_image, make_text_meta
-from repro.serving.tiers import ClusterServer, build_cluster_engines
+from repro.serving.tiers import (ClusterServer, build_cluster_engines,
+                                 build_engine_pools)
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_OUT = os.path.join(REPO_ROOT, "BENCH_cluster.json")
@@ -358,6 +365,195 @@ def run_chaos(args) -> dict:
     return out
 
 
+def make_storm_arrivals(n: int, rate: float, pattern: str,
+                        seed: int) -> np.ndarray:
+    """Arrival times for one storm cell: ``poisson`` (open-loop exponential
+    gaps), ``burst`` (back-to-back clumps at the same mean rate — the
+    worst case for a single replica's admission queue), or ``diurnal``
+    (thinned inhomogeneous Poisson, rate swinging ±80% sinusoidally)."""
+    rng = np.random.default_rng(seed)
+    if pattern == "poisson":
+        return np.cumsum(rng.exponential(1.0 / rate, n))
+    if pattern == "burst":
+        burst = 4
+        times, t = [], 0.0
+        while len(times) < n:
+            t += rng.exponential(burst / rate)
+            times.extend(t + 0.005 * j for j in range(burst))
+        return np.asarray(times[:n])
+    if pattern == "diurnal":
+        period = max(4.0, n / rate / 2.0)
+        lam_max = rate * 1.8
+        times, t = [], 0.0
+        while len(times) < n:
+            t += rng.exponential(1.0 / lam_max)
+            if rng.random() < (1 + 0.8 * np.sin(2 * np.pi * t / period)) / 1.8:
+                times.append(t)
+        return np.asarray(times)
+    raise ValueError(f"unknown arrival pattern {pattern!r}")
+
+
+def run_storm(args) -> dict:
+    """Scale-out saturation curves: goodput-at-SLO and p95 latency vs
+    arrival rate, per policy, per edge replica count, on the two-tier
+    cluster with replicated engine pools (local transport).
+
+    Two saturating resources bound the static policies: a small
+    per-replica batch caps the edge tier's compute (edge-only knees
+    first) and a constrained uplink makes every cloud-routed image queue
+    on the WAN station (cloud-only knees on bandwidth — the paper's
+    offload-overhead regime). R=2 must push the edge knee out
+    (materially higher goodput-at-SLO under the same storm), and MoA-Off
+    must beat both static policies past the single-replica knee by
+    splitting the storm across compute and bandwidth headroom. Bursty
+    and diurnal arrival patterns re-run the knee rate — the regimes
+    where tier-local load balancing earns its keep."""
+    import dataclasses as dc
+
+    topo = get_topology("edge-cloud")
+    # constrain the WAN so a remote-routed image costs ~0.15 s of uplink:
+    # the cloud's knee is bandwidth (~7 rps), the edge's knee is compute
+    topo = dc.replace(topo, tiers=tuple(
+        dc.replace(t, uplink_bps=250e3) if t.is_remote else t
+        for t in topo.tiers))
+    sv = ServingConfig(max_batch=2, max_seq=128)
+    slo_s = 2.5
+    img_hw = 96  # 96x96 -> ~4.6 KB payload -> ~0.15 s on the 250 kbps WAN
+    # decode-dominated requests + a step throttle emulate weak edge
+    # silicon: a single replica serves ~9 rps, so the edge knee sits
+    # between the 8 and 16 rps rate points (and R=2 pushes it past 16).
+    # Past the edge knee MoA-Off splits the storm: the sub-tau share stays
+    # within edge capacity (below the Eq. 5 load gate) while the overflow
+    # rides the WAN headroom — beating either static policy alone
+    max_new = 48
+    edge_throttle = 4.0
+    # full curves run process replicas (each tier decodes in its own
+    # worker, so a saturated cloud cannot head-of-line block edge decode
+    # through the shared advance loop); --smoke keeps the in-process
+    # local transport for a cheap deterministic CI liveness lane
+    transport = "local" if args.smoke else "process"
+    if args.smoke:
+        rates, policies = [4.0, 16.0], ["moa-off", "cloud-only"]
+        reps, patterns = [1, 2], ["poisson"]
+        n_for = lambda rate: 6  # noqa: E731
+    else:
+        rates = [2.0, 4.0, 8.0, 16.0]
+        policies = ["moa-off", "edge-only", "cloud-only"]
+        reps, patterns = [1, 2], ["poisson", "burst", "diurnal"]
+        n_for = lambda rate: int(min(96, max(16, rate * 8)))  # noqa: E731
+    knee_rate = rates[-1]
+    curves = []
+    for n_rep in reps:
+        pools = build_engine_pools(topo, sv,
+                                   replicas={"edge": n_rep, "cloud": 1},
+                                   transport=transport)
+        # compile warmup once per replica set, with STORM-SHAPED prompts:
+        # prefill buckets compile per prompt-length bucket, so the warmup
+        # must sweep the same words cycle the timed cells use (routed to
+        # both tiers via the complexity extremes)
+        wsrv = ClusterServer(pools, topology=topo, scheduler=MoAOffScheduler(
+            policy=make_policy("moa-off", topology=topo)))
+        wrng0 = np.random.default_rng(1)
+        for cx in (0.05, 0.95):
+            for words in (4, 12, 24):
+                for _ in range(n_rep):
+                    wsrv.submit("Request 0: describe the Scene. "
+                                + "and explain why the Detail matters. "
+                                * words,
+                                image=make_image(wrng0, 0.5, img_hw, img_hw),
+                                max_new=max_new,
+                                complexity={"image": cx, "text": cx})
+        wsrv.run(timeout_s=args.timeout)
+        # throttle AFTER warmup: the sleep multiplies real step durations,
+        # so throttling the (seconds-long) compile steps would stall the
+        # first timed cell for minutes
+        for repl in pools["edge"].transports:
+            repl.set_throttle(edge_throttle)
+        for pattern in patterns:
+            cell_rates = rates if pattern == "poisson" else [knee_rate]
+            for rate in cell_rates:
+                n = n_for(rate)
+                arrivals = make_storm_arrivals(n, rate, pattern, args.seed)
+                wrng = np.random.default_rng(args.seed + 1)
+                for pol in policies:
+                    server = ClusterServer(
+                        pools, topology=topo,
+                        scheduler=MoAOffScheduler(
+                            policy=make_policy(pol, topology=topo)))
+                    t0 = time.perf_counter()
+                    for i, t_arr in enumerate(arrivals):
+                        words = (4, 12, 24)[i % 3]
+                        u = float(wrng.beta(1.6, 1.6))
+                        server.submit(
+                            f"Request {i}: describe the Scene. "
+                            + "and explain why the Detail matters. " * words,
+                            image=make_image(wrng, u, img_hw, img_hw),
+                            max_new=max_new, slo_s=slo_s,
+                            delay_s=float(t_arr),
+                            complexity={"image": u, "text": u})
+                    results = server.run(timeout_s=args.timeout)
+                    wall = time.perf_counter() - t0
+                    lats = np.array([r.latency_s for r in results])
+                    on_time = sum(r.on_time and not r.failed
+                                  for r in results)
+                    cell = {
+                        "policy": pol, "replicas": n_rep, "rate": rate,
+                        "pattern": pattern, "n": len(results),
+                        "wall_s": wall,
+                        "goodput_rps": on_time / wall,
+                        "goodput_frac": on_time / max(len(results), 1),
+                        "p50_latency_s": float(np.percentile(lats, 50)),
+                        "p95_latency_s": float(np.percentile(lats, 95)),
+                        "mean_ttft_s": float(np.mean(
+                            [r.ttft_s for r in results])),
+                        "frac_edge": float(np.mean(
+                            [r.tier == "edge" for r in results])),
+                    }
+                    curves.append(cell)
+                    print(f"  [storm {pattern} R={n_rep} rate={rate:g} "
+                          f"{pol}] goodput={cell['goodput_rps']:.2f} rps "
+                          f"({cell['goodput_frac']:.2f}) "
+                          f"p95={cell['p95_latency_s']:.3f}s "
+                          f"edge={cell['frac_edge']:.2f}", flush=True)
+        for pool in pools.values():
+            pool.close()
+
+    def cell(pol, n_rep, rate, pattern="poisson"):
+        for c in curves:
+            if (c["policy"], c["replicas"], c["rate"],
+                    c["pattern"]) == (pol, n_rep, rate, pattern):
+                return c
+        return None
+
+    # summary: the acceptance deltas the curves must show
+    k1, k2 = cell("moa-off", 1, knee_rate), cell("moa-off", 2, knee_rate)
+    e1, e2 = cell("edge-only", 1, knee_rate), cell("edge-only", 2, knee_rate)
+    base = [cell(p, 1, knee_rate)
+            for p in policies if p != "moa-off"]
+    summary = {
+        "slo_s": slo_s, "knee_rate": knee_rate,
+        "r1_goodput_at_knee": k1["goodput_rps"] if k1 else None,
+        "r2_goodput_at_knee": k2["goodput_rps"] if k2 else None,
+        "r2_over_r1": (k2["goodput_rps"] / max(k1["goodput_rps"], 1e-9)
+                       if k1 and k2 else None),
+        "r2_over_r1_edge_only": (
+            e2["goodput_rps"] / max(e1["goodput_rps"], 1e-9)
+            if e1 and e2 else None),
+        "moa_off_vs_best_static_at_knee": (
+            k1["goodput_rps"] / max(max(c["goodput_rps"] for c in base
+                                        if c), 1e-9)
+            if k1 and any(base) else None),
+    }
+    print(f"  [storm] R=2/R=1 goodput at {knee_rate:g} rps: "
+          f"{summary['r2_over_r1']:.2f}x | moa-off vs best static: "
+          f"{summary['moa_off_vs_best_static_at_knee']:.2f}x", flush=True)
+    return {"curves": curves, "summary": summary,
+            "config": {"rates": rates, "policies": policies,
+                       "replicas": reps, "patterns": patterns,
+                       "max_batch": sv.max_batch, "slo_s": slo_s,
+                       "transport": transport}}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=24)
@@ -410,6 +606,10 @@ def main() -> None:
     print("[chaos] deterministic fault storm, resilience layer off vs on, "
           "on edge-edge-cloud…", flush=True)
     results["chaos"] = run_chaos(args)
+
+    print("[storm] scale-out saturation curves (replicated edge pool, "
+          "poisson/burst/diurnal arrivals) on edge-cloud…", flush=True)
+    results["storm"] = run_storm(args)
 
     payload = {
         "bench": "cluster_live",

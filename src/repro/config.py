@@ -423,8 +423,20 @@ class ServingConfig:
     session_cache_mb: float = 64.0
     # smallest prefix worth storing/hitting (shorter prompts re-prefill)
     prefix_min_tokens: int = 16
+    # idle-wait cap for the live backend's event loop, seconds. 0 = fully
+    # event-driven: an idle server sleeps until its next scheduled event
+    # (paced arrival / hedge check / fault detect) instead of burning a
+    # core polling. A positive value caps each doze — useful when external
+    # state (process-replica pipes, injected clock skew) must be re-polled
+    # on a bounded cadence; process transports force an internal 20 ms cap
+    # regardless.
+    idle_poll_s: float = 0.0
 
     def __post_init__(self):
+        if self.idle_poll_s < 0:
+            raise ValueError(
+                f"idle_poll_s must be >= 0 (0 = event-driven idle wait), "
+                f"got {self.idle_poll_s}")
         ps = self.kv_page_size
         if ps <= 0 or ps & (ps - 1):
             raise ValueError(

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import time
 import warnings
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -93,6 +93,7 @@ class MoAOffScheduler:
                 parked: Optional[Dict[str, int]] = None,
                 kv: Optional[Dict[str, float]] = None,
                 health: Optional[Dict[str, str]] = None,
+                replicas: Optional[Dict[str, List[float]]] = None,
                 edge_load: Optional[float] = None,
                 cloud_load: Optional[float] = None) -> None:
         """Feed one batch of system observations into the EWMA estimator.
@@ -103,7 +104,9 @@ class MoAOffScheduler:
         ``parked`` is the cache-affinity signal: parked multi-turn sessions
         per tier, whose next turns will route sticky to that tier. ``kv``
         is the per-tier KV-pool headroom (free page fraction) — real memory
-        pressure, finer-grained than slot occupancy.
+        pressure, finer-grained than slot occupancy. ``replicas`` carries
+        the per-replica occupancy vectors of replicated tiers (raw, the
+        spread is the imbalance signal the tier-level EWMA hides).
         ``edge_load=`` / ``cloud_load=`` are a deprecated two-tier shim kept
         for out-of-tree callers; they fold into ``loads``.
         """
@@ -128,6 +131,8 @@ class MoAOffScheduler:
             self.estimator.observe_kv_headroom(kv)
         if health:
             self.estimator.observe_health(health)
+        if replicas:
+            self.estimator.observe_replica_loads(replicas)
         if bandwidth_bps is not None:
             self.estimator.observe_bandwidth(bandwidth_bps)
         if bandwidths:

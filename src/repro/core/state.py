@@ -7,7 +7,7 @@ legacy call sites and the Eq. 5 gate read the same numbers they always did.
 """
 from __future__ import annotations
 
-from typing import Deque, Dict, Optional
+from typing import Deque, Dict, List, Optional
 import collections
 
 EDGE_TIER, CLOUD_TIER = "edge", "cloud"
@@ -55,6 +55,10 @@ class SystemState:
         # "healthy" | "suspect" | "quarantined" | "probing"); empty when
         # the health layer is off — every tier then reads as healthy
         self.health: Dict[str, str] = {}
+        # per-replica occupancy vectors for replicated tiers (tier ->
+        # [load per replica], a dead replica reads 1.0); empty on
+        # single-engine backends and the analytic simulator
+        self.replica_loads: Dict[str, List[float]] = {}
 
     # -- per-tier access ----------------------------------------------------
 
@@ -70,6 +74,18 @@ class SystemState:
 
     def queue_depth(self, tier: str) -> int:
         return self.queue_depths.get(tier, 0)
+
+    def replicas(self, tier: str) -> List[float]:
+        """Per-replica occupancy toward ``tier`` ([] when unreplicated)."""
+        return self.replica_loads.get(tier, [])
+
+    def replica_imbalance(self, tier: str) -> float:
+        """Spread between the busiest and idlest replica (0 when the tier
+        has fewer than two replicas — nothing to balance)."""
+        reps = self.replica_loads.get(tier)
+        if not reps or len(reps) < 2:
+            return 0.0
+        return max(reps) - min(reps)
 
     def healthy(self, tier: str) -> bool:
         """False only when the tier's circuit is OPEN (quarantined/probing
@@ -170,6 +186,13 @@ class StateEstimator:
         for tier, h in kv.items():
             self.state.kv_headroom[tier] = float(h)
 
+    def observe_replica_loads(self, replicas: Dict[str, List[float]]) -> None:
+        """Per-replica occupancy vectors (instantaneous, not smoothed — the
+        tier-level EWMA in ``observe_load`` already smooths the aggregate;
+        the raw spread is the imbalance signal)."""
+        for tier, reps in replicas.items():
+            self.state.replica_loads[tier] = [float(x) for x in reps]
+
     def observe_health(self, health: Dict[str, str]) -> None:
         """Circuit-breaker states (exact, not smoothed — the monitor's
         EWMA already did the smoothing)."""
@@ -194,4 +217,5 @@ class StateEstimator:
         snap.parked_sessions = dict(s.parked_sessions)
         snap.kv_headroom = dict(s.kv_headroom)
         snap.health = dict(s.health)
+        snap.replica_loads = {t: list(v) for t, v in s.replica_loads.items()}
         return snap

@@ -29,9 +29,22 @@ from repro.config import (TOPOLOGIES, ResilienceConfig, ServingConfig,
                           get_topology)
 from repro.data.synthetic import make_image
 from repro.serving.faults import FaultPlan
-from repro.serving.tiers import ClusterServer, build_cluster_engines
+from repro.serving.tiers import (ClusterServer, build_cluster_engines,
+                                 build_engine_pools)
 
 build_engines = build_cluster_engines  # legacy alias
+
+
+def parse_replicas(specs) -> dict:
+    """Parse repeated ``--replicas tier=N`` flags into {tier: N}."""
+    out = {}
+    for spec in specs or ():
+        tier, _, n = spec.partition("=")
+        if not tier or not n.isdigit() or int(n) < 1:
+            raise SystemExit(f"--replicas expects tier=N with N >= 1, "
+                             f"got {spec!r}")
+        out[tier] = int(n)
+    return out
 
 
 def main() -> None:
@@ -128,13 +141,29 @@ def main() -> None:
     ap.add_argument("--kv-page-size", type=int, default=64,
                     help="KV rows per physical page (power of two dividing "
                          "--max-seq; with --paged)")
+    ap.add_argument("--replicas", action="append", metavar="TIER=N",
+                    help="replicate a tier's engine N ways behind a "
+                         "load-balanced pool (repeatable, e.g. "
+                         "--replicas edge=2 --replicas cloud=4); "
+                         "unlisted tiers keep one replica")
+    ap.add_argument("--transport", default="local",
+                    choices=["local", "process"],
+                    help="replica execution: 'local' steps every replica "
+                         "in this process (parity/debug baseline); "
+                         "'process' runs each replica in its own worker "
+                         "process behind the message transport")
+    ap.add_argument("--idle-poll", type=float, default=0.0,
+                    help="idle-wait cap in seconds for the serving loop "
+                         "(0 = event-driven: sleep until the next "
+                         "scheduled event)")
     args = ap.parse_args()
 
     sv = ServingConfig(max_batch=args.max_batch, max_seq=args.max_seq,
                        fused_steps=args.fused_steps,
                        decode_impl=args.decode_impl,
                        prefix_cache_mb=args.prefix_cache_mb,
-                       paged=args.paged, kv_page_size=args.kv_page_size)
+                       paged=args.paged, kv_page_size=args.kv_page_size,
+                       idle_poll_s=args.idle_poll)
     topo = get_topology(args.topology)
     if args.bandwidth is not None:
         topo = dataclasses.replace(topo, tiers=tuple(
@@ -153,7 +182,22 @@ def main() -> None:
             health=args.quarantine_after > 0,
             quarantine_after=max(args.quarantine_after, 1),
             retry_backoff=args.retry_backoff, shed=args.shed)
-    server = ClusterServer(build_engines(topo, sv), topology=topo,
+    reps = parse_replicas(args.replicas)
+    unknown = set(reps) - set(topo.names)
+    if unknown:
+        raise SystemExit(f"--replicas names unknown tiers {sorted(unknown)} "
+                         f"(topology has {list(topo.names)})")
+    if reps or args.transport != "local":
+        # replicated pools; unlisted tiers keep the launcher's historical
+        # single engine (TierSpec.servers stays a bench/model-level knob)
+        counts = {name: reps.get(name, 1) for name in topo.names}
+        engines = build_engine_pools(topo, sv, replicas=counts,
+                                     transport=args.transport)
+        rep_str = " ".join(f"{t}x{n}" for t, n in sorted(counts.items()))
+        print(f"replicas: {rep_str} | transport {args.transport}")
+    else:
+        engines = build_engines(topo, sv)
+    server = ClusterServer(engines, topology=topo,
                            hedge_after_s=args.hedge_after,
                            fail_rate=args.fail_rate, migrate=args.migrate,
                            migrate_threshold=args.migrate_threshold,
@@ -233,27 +277,42 @@ def main() -> None:
         print(f"sessions: {resumed} resumed turns, {hits} prefix hits, "
               f"{saved:.0f} cached tokens never re-prefilled, "
               f"{server.runtime.session_moves} parked-state moves")
-    dec = sum(e.decode_tokens for e in server.engines.values())
-    pre = sum(e.prefill_tokens for e in server.engines.values())
-    enc = sum(e.encode_tokens for e in server.engines.values())
+    dec = sum(p.decode_tokens for p in server.pools.values())
+    pre = sum(p.prefill_tokens for p in server.pools.values())
+    enc = sum(p.encode_tokens for p in server.pools.values())
     print(f"engine throughput: {dec / max(wall, 1e-9):.1f} decode tok/s, "
           f"{pre} prompt tokens prefilled, {enc} patch tokens encoded "
           f"({server.backend.offloaded_encodes} images encoded off-fusion; "
           f"fused_steps={args.fused_steps})")
+    for tier, pool in sorted(server.pools.items()):
+        if len(pool) == 1 and pool.transports[0].kind == "local":
+            continue  # unreplicated local tier: nothing pool-level to add
+        rows = " | ".join(
+            f"r{s['replica']}[{s['kind'][0]}]"
+            f"{' DEAD' if not s['alive'] else ''} "
+            f"active={s['active']}/{s['slots']} queue={s['queue']} "
+            f"kv={s['kv_headroom']:.2f} dec={s['decode_tokens']}"
+            for s in pool.replica_stats())
+        print(f"  replicas[{tier}]: {rows}")
     if args.paged:
-        for tier, eng in sorted(server.engines.items()):
-            g = eng.kv_gauges()
-            print(f"  kv[{tier}]: {g['pages_free']}/{g['pages_total']} "
-                  f"pages free, {g['pages_shared']} shared (CoW), "
-                  f"high-water {g['pages_high_water']} "
-                  f"({g['pages_high_water'] * g['page_bytes'] / 1e6:.2f} MB "
-                  f"peak)")
+        for tier, pool in sorted(server.pools.items()):
+            for i, tr in enumerate(pool.transports):
+                if tr.kind != "local":
+                    continue  # gauges live in the worker process
+                g = tr.engine.kv_gauges()
+                name = tier if len(pool) == 1 else f"{tier}/{i}"
+                print(f"  kv[{name}]: {g['pages_free']}/{g['pages_total']} "
+                      f"pages free, {g['pages_shared']} shared (CoW), "
+                      f"high-water {g['pages_high_water']} "
+                      f"({g['pages_high_water'] * g['page_bytes'] / 1e6:.2f} "
+                      f"MB peak)")
     for r in sorted(results, key=lambda r: r.rid)[:10]:
         flags = "".join(f" {f}" for f, on in
                         (("hedged", r.hedged), ("truncated", r.truncated),
                          (f"retries={r.retries}", r.retries)) if on)
         print(f"  rid={r.rid} tier={r.tier:9s} routes={r.routes} "
               f"lat={r.latency_s:.3f}s ttft={r.ttft_s:.3f}s{flags}")
+    server.close()  # joins process-transport workers; no-op for local
 
 
 if __name__ == "__main__":

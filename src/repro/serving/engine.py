@@ -279,8 +279,11 @@ class TierEngine:
         self.healthy = True
         # chaos knob: a slow-node fault window sets this > 1 and each step
         # sleeps (throttle-1)x its own duration — the live analogue of the
-        # analytic backend's stretched service times
+        # analytic backend's stretched service times. The cap bounds the
+        # stretch of outlier steps (compiles, host deschedules) so a slow
+        # NODE never emulates a dead one
         self.throttle = 1.0
+        self.throttle_sleep_cap_s = 0.5
         self.last_heartbeat = time.monotonic()
         self.steps = 0
         # perf counters (read by benchmarks/serving_bench.py and launch/serve)
@@ -839,6 +842,18 @@ class TierEngine:
         prompt = np.asarray(p.prompt_tokens, np.int32)
         gen = np.asarray(p.seq.generated[:-1], np.int32)
         return np.concatenate([prompt, gen]) if gen.size else prompt
+
+    def rids(self) -> List[int]:
+        """Every request currently on this engine (queued + in a slot), in
+        queue-then-slot order — the replica-pool fault path replays against
+        this set."""
+        out = [j["rid"] for j in self.waiting]
+        out.extend(s.rid for s in self.slots if s is not None)
+        return out
+
+    def free_slot_count(self) -> int:
+        """Open slots (the pool's load-balance / re-home capacity probe)."""
+        return sum(s is None for s in self.slots)
 
     def park_session(self, rid: int, sid: Optional[str] = None) -> bool:
         """Mark a queued or in-flight request so its slot state parks under
@@ -1603,8 +1618,13 @@ class TierEngine:
 
     def _throttle_sleep(self, t_in: float) -> None:
         if self.throttle > 1.0:
-            time.sleep((self.throttle - 1.0)
-                       * max(0.0, time.monotonic() - t_in))
+            # the sleep is capped per step: an outlier step duration is a
+            # compile or a host deschedule, not model compute — stretching
+            # it (throttle - 1)x would amplify a one-off stall into a
+            # multi-second outage of the emulated-slow node
+            time.sleep(min((self.throttle - 1.0)
+                           * max(0.0, time.monotonic() - t_in),
+                           self.throttle_sleep_cap_s))
 
     def step(self) -> int:
         """Admit + one decode block for all active slots. Returns #active."""

@@ -166,6 +166,7 @@ class ClusterRuntime:
         # epoch anchor: fault plans are authored in seconds-since-first-
         # event so one plan drives the virtual AND the monotonic clock
         self.t0: Optional[float] = None
+        self.run_deadline: Optional[float] = None  # current run()'s budget
         self.shed_count = 0  # deadline-shed requests (terminal)
         self.failed_count = 0  # retry-budget-exhausted requests (terminal)
         self.degraded_routes = 0  # requests re-routed off an open circuit
@@ -219,14 +220,26 @@ class ClusterRuntime:
             wan = (self.topology.default_remote.uplink_bps if remote
                    else self.backend.fallback_bandwidth_bps)
         kv_fn = getattr(self.backend, "kv_headroom", None)
+        rep_fn = getattr(self.backend, "replica_loads", None)
+        # in-flight + queued WAN transfers count toward the destination
+        # tier's queue depth: they are committed near-future load, and
+        # without them a bandwidth-saturated remote tier reads as idle —
+        # the adaptive-tau controller would keep shedding into the full
+        # link instead of pulling work back
+        depths = dict(self.backend.queue_depths())
+        for tname, link in self.links.items():
+            backlog = link.busy + len(link.queue)
+            if backlog:
+                depths[tname] = depths.get(tname, 0) + backlog
         self.scheduler.observe(
             loads=self.backend.tier_loads(),
             bandwidth_bps=wan,
             bandwidths={t.name: t.uplink_bps for t in remote},
-            queue_depths=self.backend.queue_depths(),
+            queue_depths=depths,
             parked=(self.backend.parked_sessions()
                     if self.sessions else None),
             kv=kv_fn() if kv_fn is not None else None,
+            replicas=rep_fn() if rep_fn is not None else None,
             health=(self.health.snapshot() if self.health is not None
                     else None))
 
@@ -814,6 +827,9 @@ class ClusterRuntime:
     def run(self, max_wall_s: Optional[float] = None) -> List[Outcome]:
         deadline = (time.monotonic() + max_wall_s
                     if max_wall_s is not None else None)
+        # the live backend's idle wait clamps its sleep to this, so a
+        # long event-driven doze can never overshoot the caller's budget
+        self.run_deadline = deadline
         while True:
             if deadline is not None and time.monotonic() > deadline:
                 break
@@ -1412,23 +1428,36 @@ class AnalyticBackend:
 
 
 class LiveBackend:
-    """Real execution: one ``TierEngine`` per tier.
+    """Real execution: a replicated :class:`EnginePool` per tier.
 
+    * **Replicated tiers** — each tier runs ``TierSpec.servers`` engine
+      replicas behind an :class:`~repro.serving.pool.EnginePool` (local
+      in-process engines and/or spawn-process workers, selected by
+      transport). New submissions go to the least-loaded replica with a
+      deterministic tie-break; a parked session's turn sticks to the
+      replica holding its KV, and a prompt extending a cached prefix
+      prefers the replica that stored it. A bare ``TierEngine`` dict is
+      accepted and wrapped in single-replica local pools — that path is
+      bit-identical to the pre-pool backend.
     * **Executed partial offload** — an image routed off the fusion tier is
-      encoded by the routed tier's engine (``TierEngine.encode_image``, in
-      the fusion model's patch geometry so tokens are identical to a
-      fusion-local encode) and only the compact embeddings reach the fusion
-      prefill; the raw image never does.
+      encoded by the routed pool's least-loaded replica (in the fusion
+      model's patch geometry so tokens are identical to a fusion-local
+      encode) and only the compact embeddings reach the fusion prefill.
     * **Streaming + EDF admission** — requests carry an EDF deadline
       (arrival + SLO) into the engine's admission queue; tokens stream back
-      through the engine's ``on_token`` hook, giving true per-request TTFT.
+      through the engine's ``on_token`` hook (piped up from process
+      replicas), giving true per-request TTFT.
     * **Hedging** — the runtime's shared hedge_check fires on the monotonic
-      clock; a clone runs on the least-loaded other tier's engine and the
-      loser is cancelled (``TierEngine.cancel``).
+      clock; a clone runs on the least-loaded other tier's pool and the
+      loser is cancelled wherever its replica lives.
     * **Fault recovery** — with ``fail_rate`` > 0, an enqueued request may
-      kill its node: after the heartbeat timeout the engine is rebuilt from
-      its last ``snapshot()`` and the submissions since are replayed
-      (``record.done`` drops any duplicate completions).
+      kill its replica: after the heartbeat timeout that ONE replica is
+      rebuilt from its last ``snapshot()``, its restored in-flight slots
+      re-home onto sibling replicas inside the tier (wire round trip, no
+      WAN) before any cross-tier rescue, and the submissions since the
+      snapshot are replayed (``record.done`` drops duplicates). A process
+      replica that dies mid-flight surfaces its rids as *lost*; they
+      re-enter through the shared failure path and land on a sibling.
     """
 
     virtual_clock = False
@@ -1437,25 +1466,40 @@ class LiveBackend:
     def __init__(self, engines: Dict, topology: ClusterTopology,
                  fail_rate: float = 0.0, seed: int = 0,
                  snapshot_every: int = 4):
-        self.engines = dict(engines)
+        from repro.serving.pool import EnginePool
+        from repro.serving.transport import LocalTransport
+
+        # accept prebuilt pools or bare engines (wrapped 1:1)
+        self.pools: Dict[str, EnginePool] = {
+            t: (v if isinstance(v, EnginePool)
+                else EnginePool(t, [LocalTransport(v)]))
+            for t, v in engines.items()}
+        # primary local engine per tier: the single-replica back-compat
+        # surface (tests/benches read counters off ``server.engines``)
+        self.engines = {t: p.primary_engine for t, p in self.pools.items()
+                        if p.primary_engine is not None}
         self.topology = topology
         self.fail_rate = fail_rate
         self.rng = np.random.default_rng(seed)
         self.snapshot_every = snapshot_every
         self.restores = 0  # fault-recovery counter (tests/benchmarks)
+        self.rehomes = 0  # intra-tier slot moves after a replica fault
+        self.replica_losses = 0  # rids resubmitted off dead process replicas
         self.offloaded_encodes = 0  # images encoded away from their fusion
         self.fault_draws = 0  # fault-rng draws (one per engine submission)
         self._inflight: Dict[str, Dict[int, Job]] = {
-            t: {} for t in self.engines}
-        self._snapshots: Dict[str, dict] = {}
-        self._since_snap: Dict[str, List[Job]] = {t: [] for t in self.engines}
+            t: {} for t in self.pools}
+        # snapshot/replay discipline is replica-granular: (tier, replica)
+        self._snapshots: Dict[Tuple[str, int], dict] = {}
+        self._since_snap: Dict[Tuple[str, int], List[Job]] = {}
         self.rt: Optional[ClusterRuntime] = None
         self._chaos = fail_rate > 0  # snapshot discipline needed?
-        for tier, eng in self.engines.items():
-            eng.on_admit = self._make_on_admit(tier)
-            eng.on_token = self._make_on_token(tier)
-            eng.on_warm = self._make_on_warm(tier)
-            eng.on_park = self._make_on_park(tier)
+        self._idle_cap_s = 0.0
+        for tier, pool in self.pools.items():
+            pool.wire_hooks(self._make_on_admit(tier),
+                            self._make_on_token(tier),
+                            self._make_on_warm(tier),
+                            self._make_on_park(tier))
 
     def bind(self, runtime: ClusterRuntime) -> None:
         self.rt = runtime
@@ -1463,6 +1507,23 @@ class LiveBackend:
         # the snapshots: a Bernoulli fail_rate OR plan crash windows
         self._chaos = self.fail_rate > 0 or (
             runtime.plan is not None and runtime.plan.has_crashes)
+        if self._chaos and not all(p.supports_restore
+                                   for p in self.pools.values()):
+            raise ValueError(
+                "chaos injection (fail_rate / crash plans) needs host-side "
+                "snapshot/restore; process-transport replicas have none — "
+                "use the local transport")
+        # idle-wait cap: 0 = purely event-driven (sleep until the next
+        # scheduled event); a positive ServingConfig.idle_poll_s caps the
+        # doze, and process replicas force a cap so their pipes keep
+        # draining while the parent waits
+        caps = [p.serving.idle_poll_s for p in self.pools.values()
+                if p.serving.idle_poll_s > 0]
+        cap = min(caps) if caps else 0.0
+        if any(tr.kind == "process" for p in self.pools.values()
+               for tr in p.transports):
+            cap = min(cap, 0.02) if cap > 0 else 0.02
+        self._idle_cap_s = cap
 
     def handlers(self):
         return {"node_fault": self._on_node_fault}
@@ -1470,25 +1531,26 @@ class LiveBackend:
     # -- state the scheduler observes --------------------------------------
 
     def tier_loads(self) -> Dict[str, float]:
-        loads = {}
-        for tier, eng in self.engines.items():
-            free = sum(s is None for s in eng.slots)
-            loads[tier] = 1.0 - free / len(eng.slots)
-        return loads
+        return {t: p.load() for t, p in self.pools.items()}
 
     def queue_depths(self) -> Dict[str, int]:
-        return {t: len(e.waiting) for t, e in self.engines.items()}
+        return {t: p.queue_depth() for t, p in self.pools.items()}
 
     def kv_headroom(self) -> Dict[str, float]:
         """Per-tier free fraction of the KV pool (real page accounting on
-        paged engines, slot-granular on dense ones)."""
-        return {t: e.kv_headroom() for t, e in self.engines.items()}
+        paged engines, slot-granular on dense ones; best replica)."""
+        return {t: p.kv_headroom() for t, p in self.pools.items()}
+
+    def replica_loads(self) -> Dict[str, List[float]]:
+        """Raw per-replica occupancy vectors (scheduler-visible imbalance
+        signal; the tier-level EWMA still smooths ``tier_loads``)."""
+        return {t: p.replica_loads() for t, p in self.pools.items()}
 
     def score_cost_s(self, policy_name: str) -> float:
         return 0.0  # the real scoring time already elapsed on the clock
 
     def embed_bytes(self, tier: str) -> float:
-        return cm.embedding_bytes(self.engines[tier].cfg)
+        return cm.embedding_bytes(self.pools[tier].cfg)
 
     # -- engine callbacks ---------------------------------------------------
 
@@ -1538,8 +1600,8 @@ class LiveBackend:
 
     def encode(self, t: float, job: Job) -> None:
         req, fusion = job.request, job.fusion
-        fus_eng = self.engines[fusion]
-        if fus_eng.cfg.frontend != "vision_stub":
+        fus_cfg = self.pools[fusion].cfg
+        if fus_cfg.frontend != "vision_stub":
             return
         for nm, m in req.modalities.items():
             if m.kind != "image" or m.data is None:
@@ -1547,18 +1609,20 @@ class LiveBackend:
             routed = job.decision.routes.get(nm, fusion)
             if routed == fusion:
                 continue  # fusion prefill encodes its own image at enqueue
-            # EXECUTED partial offload: the routed tier's engine runs the
-            # frontend (device work, counted on that engine) and only the
-            # compact embeddings travel to the fusion prefill
-            emb = self.engines[routed].encode_image(
-                np.asarray(m.data), fus_eng.cfg.num_patches,
-                fus_eng.cfg.frontend_dim)
+            # EXECUTED partial offload: the routed tier's least-loaded
+            # replica runs the frontend (device work, counted on that
+            # engine) and only the compact embeddings travel to the
+            # fusion prefill
+            emb = self.pools[routed].encode_image(
+                np.asarray(m.data), fus_cfg.num_patches,
+                fus_cfg.frontend_dim)
             job.payload.setdefault("extras", {})["patches"] = emb
             self.offloaded_encodes += 1
 
     # -- admission ----------------------------------------------------------
 
-    def _maybe_fault(self, t: float, job: Job, tier: str) -> None:
+    def _maybe_fault(self, t: float, job: Job, tier: str,
+                     replica: int) -> None:
         """EVERY submission re-draws the fault rng — including retried
         ones, which reach this path again through the runtime (they used
         to be replayed engine-side without a draw, diverging from the
@@ -1567,8 +1631,9 @@ class LiveBackend:
         attempt whose retry budget is already spent faults too: the shared
         failure path then emits the terminal failed Outcome, matching the
         analytic backend's bounded retries. Plan crash windows stack on
-        the Bernoulli draw without consuming the rng stream."""
-        eng = self.engines[tier]
+        the Bernoulli draw without consuming the rng stream. The fault
+        kills ONE replica — the one this submission landed on."""
+        pool = self.pools[tier]
         fail = False
         if self.fail_rate > 0:
             self.fault_draws += 1
@@ -1578,32 +1643,47 @@ class LiveBackend:
                 and plan.crashed(tier, self.rt.rel(t)):
             fail = True
         if fail:
-            # node dies mid-flight; detected after heartbeat timeout
-            self.rt._push(t + eng.serving.heartbeat_timeout_s,
-                          "node_fault", job=job, tier=tier)
+            # replica dies mid-flight; detected after heartbeat timeout
+            self.rt._push(t + pool.serving.heartbeat_timeout_s,
+                          "node_fault", job=job, tier=tier, replica=replica)
+
+    def _choose_replica(self, pool, job: Job) -> int:
+        """Replica pick for a fresh submission. Session affinity first (a
+        parked turn resumes on the replica holding its KV), then prefix
+        affinity, then least-loaded. Pre-encode extras approximate the
+        final fingerprint — affinity is a routing hint, never correctness."""
+        req = job.request
+        ids = np.asarray(req.modalities["text"].data, np.int32)
+        fp = extras_fingerprint(dict(job.payload.get("extras", {})))
+        sid = req.session if self.rt.sessions else None
+        return pool.choose(ids, fp, sid)
 
     def enqueue(self, t: float, job: Job) -> None:
         tier = job.tier
-        eng = self.engines[tier]
+        pool = self.pools[tier]
+        r = self._choose_replica(pool, job)
         if self._chaos:
-            self._maybe_fault(t, job, tier)
+            self._maybe_fault(t, job, tier, r)
             # snapshot cadence (a full host copy of the KV pool) is only
-            # paid when faults can actually consume the snapshots
-            if len(self._since_snap[tier]) >= self.snapshot_every \
-                    or tier not in self._snapshots:
-                self._snapshots[tier] = eng.snapshot()
-                self._since_snap[tier] = []
-            self._since_snap[tier].append(job)
-        self._engine_submit(eng, tier, job)
+            # paid when faults can actually consume the snapshots; it is
+            # replica-granular — a fault only rolls back the replica it hit
+            key = (tier, r)
+            if len(self._since_snap.get(key, ())) >= self.snapshot_every \
+                    or key not in self._snapshots:
+                self._snapshots[key] = pool.snapshot_replica(r)
+                self._since_snap[key] = []
+            self._since_snap[key].append(job)
+        self._engine_submit(pool, r, tier, job)
 
-    def _engine_submit(self, eng, tier: str, job: Job) -> None:
+    def _engine_submit(self, pool, r: int, tier: str, job: Job) -> None:
         req = job.request
-        tokens, extras, truncated = self._prepare_prompt(eng, job)
+        tokens, extras, truncated = self._prepare_prompt(
+            pool.transports[r], job)
         job.record.truncated |= truncated
         self._inflight[tier][req.rid] = job
-        eng.submit(req.rid, tokens, max_new=req.decode_tokens, extras=extras,
-                   deadline=req.arrival_s + req.slo_s,
-                   session=(req.session if self.rt.sessions else None))
+        pool.submit_to(r, req.rid, tokens, max_new=req.decode_tokens,
+                       extras=extras, deadline=req.arrival_s + req.slo_s,
+                       session=(req.session if self.rt.sessions else None))
 
     def _prepare_prompt(self, eng, job: Job):
         """Tokens + extras for one engine, against its REAL budget.
@@ -1640,26 +1720,49 @@ class LiveBackend:
     def _on_node_fault(self, ev: Event):
         job: Job = ev.payload["job"]
         tier = ev.payload["tier"]
+        r = ev.payload.get("replica", 0)
         if job.record.done:
             # the request resolved during the detect window; the failure
             # still feeds the breaker (the node really died)
             self.rt.handle_service_failure(ev.t, job, tier)
             return
-        eng = self.engines[tier]
-        # rebuild the tier on a standby from its last snapshot, then replay
-        # the submissions the snapshot doesn't contain
-        eng.restore(self._snapshots[tier])
+        pool = self.pools[tier]
+        # rebuild the crashed REPLICA on a standby from its last snapshot,
+        # then replay the submissions the snapshot doesn't contain —
+        # sibling replicas never notice
+        pool.restore_replica(r, self._snapshots[(tier, r)])
         self.restores += 1
         moved: set = set()
-        if self.rt.migrate:
-            # re-home the snapshot's in-flight slots onto surviving tiers:
-            # their prefilled cache rows ship instead of re-running on the
-            # (likely unhealthy) standby; jobs with no compatible target
-            # stay put
-            for s in list(eng.slots):
-                if s is None:
+        if pool.n_alive > 1:
+            # first line of defense is INSIDE the tier: ship the restored
+            # in-flight slots to sibling replicas over the wire format —
+            # same model, no WAN hop, and the (likely unhealthy) standby
+            # sheds its decode load
+            for rid in pool.slot_rids_on(r):
+                j2 = self._inflight[tier].get(rid)
+                if j2 is None or j2 is job or j2.record.done \
+                        or j2.record.migrated:
                     continue
-                j2 = self._inflight[tier].get(s.rid)
+                dst = pool.move_slot(rid, r)
+                if dst is None:
+                    break  # no sibling has a free slot: stop probing
+                if dst == -1:
+                    # extracted but nobody could take it: cold resubmit
+                    # on the least-loaded survivor
+                    self._replay(pool, pool.least_loaded(skip=r), tier, j2)
+                    moved.add(rid)
+                    continue
+                self.rehomes += 1
+                j2.record.mark("rehome", tier)
+                moved.add(rid)
+        if self.rt.migrate:
+            # anything still stuck on the standby may re-home ACROSS tiers:
+            # prefilled cache rows ship instead of re-running; jobs with no
+            # compatible target stay put
+            for rid in pool.slot_rids_on(r):
+                if rid in moved:
+                    continue
+                j2 = self._inflight[tier].get(rid)
                 if j2 is None or j2 is job or j2.record.done \
                         or j2.record.migrated:
                     continue
@@ -1667,20 +1770,17 @@ class LiveBackend:
                 if dst is None:
                     break
                 if self.rt._try_migrate(ev.t, j2, j2, dst, remove=True):
-                    moved.add(s.rid)
-        have = {w["rid"] for w in eng.waiting}
-        have |= {s.rid for s in eng.slots if s is not None}
-        have |= moved
+                    moved.add(rid)
+        have = set(pool.rids_on(r)) | moved
         frid = job.request.rid
-        replay, self._since_snap[tier] = self._since_snap[tier], []
+        replay, self._since_snap[(tier, r)] = \
+            self._since_snap.get((tier, r), []), []
         for j in replay:
             rid = j.request.rid
             if j.record.done or rid in have or rid == frid:
                 continue
             have.add(rid)
-            j.in_service = False
-            self._since_snap[tier].append(j)
-            self._engine_submit(eng, tier, j)
+            self._replay(pool, r, tier, j)
         # the faulted submission itself re-enters through the runtime's
         # shared failure path: the fault rng is re-drawn for the retry
         # (draw-per-submission parity with the analytic backend) and the
@@ -1688,10 +1788,18 @@ class LiveBackend:
         # identically to both backends
         self.rt.handle_service_failure(ev.t, job, tier)
 
+    def _replay(self, pool, r: int, tier: str, j: Job) -> None:
+        """Replayed submissions re-register for the NEXT fault on their
+        replica but never trigger a snapshot mid-recovery (matching the
+        single-engine replay semantics)."""
+        j.in_service = False
+        self._since_snap.setdefault((tier, r), []).append(j)
+        self._engine_submit(pool, r, tier, j)
+
     def _rehome_target(self, src: str) -> Optional[str]:
-        cands = [n for n, e in self.engines.items()
+        cands = [n for n, p in self.pools.items()
                  if n != src and self.can_migrate(src, n)
-                 and e._free_slot() is not None]
+                 and p.has_free_slot()]
         if not cands:
             return None
         occ = self.occupancy()
@@ -1700,8 +1808,8 @@ class LiveBackend:
     # -- prefix & session KV reuse ------------------------------------------
 
     def session_tier(self, sid: str) -> Optional[str]:
-        for tier, eng in self.engines.items():
-            if sid in eng.sessions:
+        for tier, pool in self.pools.items():
+            if pool.has_session(sid):
                 return tier
         return None
 
@@ -1709,13 +1817,12 @@ class LiveBackend:
                         ) -> Optional[float]:
         """Pop the REAL parked payload and ship its wire bytes (the same
         serialized form KV migration uses, prompt tokens included)."""
-        eng = self.engines.get(src)
-        if eng is None:
+        pool = self.pools.get(src)
+        if pool is None:
             return None
-        parked = eng.resume_session(job.request.session)
-        if parked is None or not isinstance(parked.data, SlotPayload):
+        wire = pool.resume_session_wire(job.request.session)
+        if wire is None:
             return None
-        wire = parked.data.to_bytes()
         job.payload["session_wire"] = wire
         return float(len(wire))
 
@@ -1723,43 +1830,35 @@ class LiveBackend:
         wire = job.payload.pop("session_wire", None)
         if wire is None:
             return
-        try:
-            payload = SlotPayload.from_bytes(wire)
-        except MigrationError:
-            return  # corrupt in transit: the turn cold-prefills
-        self.engines[job.tier].adopt_session(job.request.session, payload)
+        self.pools[job.tier].adopt_session_wire(job.request.session, wire)
 
     def parked_sessions(self) -> Dict[str, int]:
-        return {tier: len(eng.sessions)
-                for tier, eng in self.engines.items()}
+        return {tier: pool.session_count()
+                for tier, pool in self.pools.items()}
 
     # -- cross-tier KV migration --------------------------------------------
 
     def can_migrate(self, src: str, dst: str) -> bool:
-        es, ed = self.engines.get(src), self.engines.get(dst)
-        return (src != dst and es is not None and ed is not None
-                and es.cfg.name == ed.cfg.name
-                and es.serving.max_seq == ed.serving.max_seq)
+        ps, pd = self.pools.get(src), self.pools.get(dst)
+        return (src != dst and ps is not None and pd is not None
+                and ps.cfg.name == pd.cfg.name
+                and ps.serving.max_seq == pd.serving.max_seq)
 
     def occupancy(self) -> Dict[str, int]:
-        return {t: len(e.waiting) + sum(s is not None for s in e.slots)
-                for t, e in self.engines.items()}
+        return {t: p.occupancy() for t, p in self.pools.items()}
 
     def preempt_candidate(self, tier: str, t: float) -> Optional[Job]:
         """Decoding slot with the most remaining token budget (never one
         already hedged or previously migrated)."""
-        eng = self.engines[tier]
+        pool = self.pools[tier]
         best, best_key = None, None
-        for s in eng.slots:
-            if s is None:
-                continue
-            j = self._inflight[tier].get(s.rid)
+        for rid, rem in pool.decode_slots():
+            j = self._inflight[tier].get(rid)
             if j is None or j.record.done or j.record.migrated or j.hedged:
                 continue
-            rem = s.max_new - len(s.generated)
             if rem < 2:
                 continue  # about to finish: not worth shipping
-            key = (rem, -s.rid)
+            key = (rem, -rid)
             if best is None or key > best_key:
                 best, best_key = j, key
         return best
@@ -1769,14 +1868,12 @@ class LiveBackend:
         """REAL extract: serialize the donor slot through the versioned wire
         format and ship the actual bytes (the same payload is deserialized
         and injected on arrival)."""
-        eng = self.engines.get(donor.tier)
-        if eng is None or not eng.healthy:
+        pool = self.pools.get(donor.tier)
+        if pool is None:
             return None
-        try:
-            payload = eng.extract_slot(donor.request.rid, remove=remove)
-        except MigrationError:
+        wire = pool.extract_wire(donor.request.rid, remove=remove)
+        if wire is None:
             return None
-        wire = payload.to_bytes()
         carrier.payload["migration_wire"] = wire
         if remove:
             self._inflight[donor.tier].pop(donor.request.rid, None)
@@ -1789,11 +1886,11 @@ class LiveBackend:
             carrier.payload.pop("migration_nbytes", None)
             return  # the donor finished during the transport window
         tier = carrier.tier
-        eng = self.engines[tier]
+        pool = self.pools[tier]
         try:
             if wire is None:
                 raise MigrationError("no payload shipped")
-            eng.inject_slot(SlotPayload.from_bytes(wire))
+            r = pool.inject_wire(wire, carrier.request.rid)
         except MigrationError:
             # target full / died mid-transfer: fall back to a fresh prefill
             # submission on the same tier (still completes, just slower —
@@ -1807,9 +1904,9 @@ class LiveBackend:
             # the injected copy resumes at the donor's exact position on a
             # fresher tier: retire the donor instead of decoding the tail
             # twice (it already won if it finished during transport, above)
-            deng = self.engines.get(donor.tier)
-            if deng is not None:
-                deng.cancel(donor.request.rid)
+            dpool = self.pools.get(donor.tier)
+            if dpool is not None:
+                dpool.cancel(donor.request.rid)
             self._inflight[donor.tier].pop(donor.request.rid, None)
         rec = carrier.record
         rec.mark("enqueue", tier)
@@ -1817,26 +1914,27 @@ class LiveBackend:
         carrier.in_service = True
         self._inflight[tier][carrier.request.rid] = carrier
         if self._chaos:
-            # same fault/snapshot discipline as enqueue: make sure this
-            # tier has a snapshot (taken AFTER the injection, so recovery
-            # restores the migrated slot), register the carrier for replay
-            # in case a later fault restores an older snapshot, and let the
-            # migrated service fault like any other submission (the
-            # analytic carrier draws in start_service too)
-            if len(self._since_snap[tier]) >= self.snapshot_every \
-                    or tier not in self._snapshots:
-                self._snapshots[tier] = eng.snapshot()
-                self._since_snap[tier] = []
-            self._since_snap[tier].append(carrier)
-            self._maybe_fault(t, carrier, tier)
+            # same fault/snapshot discipline as enqueue: make sure the
+            # RECEIVING replica has a snapshot (taken AFTER the injection,
+            # so recovery restores the migrated slot), register the carrier
+            # for replay in case a later fault restores an older snapshot,
+            # and let the migrated service fault like any other submission
+            # (the analytic carrier draws in start_service too)
+            key = (tier, r)
+            if len(self._since_snap.get(key, ())) >= self.snapshot_every \
+                    or key not in self._snapshots:
+                self._snapshots[key] = pool.snapshot_replica(r)
+                self._since_snap[key] = []
+            self._since_snap[key].append(carrier)
+            self._maybe_fault(t, carrier, tier, r)
 
     # -- driving the engines -----------------------------------------------
 
-    def _harvest(self, tier: str, eng) -> None:
-        if not eng.finished:
+    def _harvest(self, tier: str, fins) -> None:
+        if not fins:
             return
         now = time.monotonic()
-        for st in eng.finished:
+        for st in fins:
             job = self._inflight[tier].pop(st.rid, None)
             if job is None:
                 continue  # cancelled attempt / replayed duplicate
@@ -1854,78 +1952,95 @@ class LiveBackend:
             # session state a twin parked elsewhere before cancellation
             # (the winner's tier holds the authoritative park; a loser's
             # generated tokens are not this conversation's history)
-            for other, eng2 in self.engines.items():
+            for other, pool2 in self.pools.items():
                 if other == tier:
                     continue
                 if st.rid in self._inflight[other]:
-                    eng2.cancel(st.rid)
+                    pool2.cancel(st.rid)
                     self._inflight[other].pop(st.rid, None)
-                if sid is not None and sid in eng2.sessions:
-                    eng2.sessions.resume(sid)
-        eng.finished.clear()
+                if sid is not None and pool2.has_session(sid):
+                    pool2.drop_session(sid)
+
+    def _on_replica_lost(self, tier: str, rid: int) -> None:
+        """A process replica died with this rid in flight (no host-side
+        snapshot exists for process workers). The request re-enters through
+        the shared failure path and its retry lands cold on a surviving
+        sibling via the usual least-loaded pick."""
+        job = self._inflight[tier].pop(rid, None)
+        if job is None or job.record.done:
+            return
+        self.replica_losses += 1
+        self.rt.handle_service_failure(time.monotonic(), job, tier)
 
     # -- resilience hooks ----------------------------------------------------
 
     def retry_limit(self, tier: str) -> int:
-        return self.engines[tier].serving.retry_limit
+        return self.pools[tier].serving.retry_limit
 
     def abandon(self, job: Job) -> None:
-        """Terminal failure: cancel every engine copy of the request and
+        """Terminal failure: cancel every replica copy of the request and
         drop it from the in-flight maps, so ``advance`` can drain (a
         permanently faulting submission used to livelock the server)."""
         rid = job.request.rid
-        for tier, eng in self.engines.items():
+        for tier, pool in self.pools.items():
             if rid in self._inflight[tier]:
-                eng.cancel(rid)
+                pool.cancel(rid)
                 self._inflight[tier].pop(rid, None)
 
     def parked_session_ids(self, tier: str) -> List[str]:
-        eng = self.engines.get(tier)
-        return list(eng.sessions.ids()) if eng is not None else []
+        pool = self.pools.get(tier)
+        return pool.session_ids() if pool is not None else []
 
     def session_rescue_extract(self, t: float, sid: str, src: str):
-        eng = self.engines.get(src)
-        if eng is None:
+        pool = self.pools.get(src)
+        if pool is None:
             return None
-        parked = eng.resume_session(sid)
-        if parked is None or not isinstance(parked.data, SlotPayload):
+        wire = pool.resume_session_wire(sid)
+        if wire is None:
             return None
-        wire = parked.data.to_bytes()
         return float(len(wire)), wire
 
     def session_rescue_install(self, t: float, sid: str, dst: str,
                                wire) -> None:
-        try:
-            payload = SlotPayload.from_bytes(wire)
-        except MigrationError:
-            return  # corrupt in transit: later turns cold-prefill
-        self.engines[dst].adopt_session(sid, payload)
+        self.pools[dst].adopt_session_wire(sid, wire)
 
     def advance(self) -> bool:
         plan = self.rt.plan
         if plan is not None and self.rt.t0 is not None:
-            # slow-node windows: throttle the engine's step cadence while
+            # slow-node windows: throttle the replicas' step cadence while
             # the window is open (the live analogue of the analytic
             # backend's stretched service times)
             now_rel = self.rt.rel(time.monotonic())
-            for tier, eng in self.engines.items():
-                eng.throttle = plan.slow_multiplier(tier, now_rel)
+            for tier, pool in self.pools.items():
+                pool.set_throttle(plan.slow_multiplier(tier, now_rel))
         if self.rt.health is not None:
-            for tier, eng in self.engines.items():
-                self.rt.health.heartbeat(tier, bool(eng.heartbeat_ok()))
+            for tier, pool in self.pools.items():
+                self.rt.health.heartbeat(tier, bool(pool.heartbeat_ok()))
         any_active = False
-        for tier, eng in self.engines.items():
-            n = eng.step()
-            any_active |= bool(n) or bool(eng.waiting) \
-                or any(s is not None for s in eng.slots)
-            self._harvest(tier, eng)
+        for tier, pool in self.pools.items():
+            # local replicas step here; process replicas step in their own
+            # workers and this only drains their pipes — tiers genuinely
+            # overlap their device work
+            fins, active, lost = pool.poll()
+            any_active |= active
+            self._harvest(tier, fins)
+            for rid in lost:
+                self._on_replica_lost(tier, rid)
         if any_active:
             return True
         if self.rt.events:
             # idle but future events are scheduled (paced arrivals, hedge
-            # checks, fault detections): wait for the earliest one
+            # checks, fault detections): doze until the earliest one
+            # instead of burning a core. ``idle_poll_s`` caps the doze
+            # (0 = fully event-driven); process pipes keep a small cap so
+            # token streams drain while the parent waits
             dt = self.rt.events[0].t - time.monotonic()
             if dt > 0:
-                time.sleep(min(dt, 0.002))
+                ddl = self.rt.run_deadline
+                if ddl is not None:
+                    dt = min(dt, max(ddl - time.monotonic(), 0.0))
+                cap = self._idle_cap_s
+                if dt > 0:
+                    time.sleep(min(dt, cap) if cap > 0 else dt)
             return True
         return any(self._inflight[t] for t in self._inflight)

@@ -41,6 +41,7 @@ from repro.core.scheduler import MoAOffScheduler
 from repro.data.tokenizer import ToyTokenizer
 from repro.serving.engine import TierEngine
 from repro.serving.faults import FaultPlan
+from repro.serving.pool import EnginePool, build_engine_pools  # noqa: F401
 from repro.serving.runtime import ClusterRuntime, LiveBackend
 
 
@@ -98,7 +99,11 @@ def _default_topology(engine_names, bandwidth_bps: float,
 
 
 class ClusterServer:
-    """MoA-Off control plane in front of one live ``TierEngine`` per tier."""
+    """MoA-Off control plane in front of live engines — one ``TierEngine``
+    per tier, or a replicated :class:`~repro.serving.pool.EnginePool`
+    (built by :func:`~repro.serving.pool.build_engine_pools`); ``engines``
+    values may be either, and bare engines wrap into single-replica pools
+    with bit-identical behavior."""
 
     def __init__(self, engines: Dict[str, TierEngine],
                  topology: Optional[ClusterTopology] = None,
@@ -115,11 +120,11 @@ class ClusterServer:
         # into the scalar knob, through the same rng stream as ever
         if fault_plan is not None and fail_rate == 0.0:
             fail_rate = fault_plan.fail_rate
-        self.engines = dict(engines)
+        supplied = dict(engines)
         self.topology = topology or _default_topology(
-            self.engines, bandwidth_bps if bandwidth_bps is not None
+            supplied, bandwidth_bps if bandwidth_bps is not None
             else 300e6, rtt_s)
-        missing = set(self.topology.names) - set(self.engines)
+        missing = set(self.topology.names) - set(supplied)
         if missing:
             raise ValueError(f"no engine for topology tiers {sorted(missing)}")
         from repro.core.baselines import make_policy
@@ -127,9 +132,13 @@ class ClusterServer:
         self.scheduler = scheduler or MoAOffScheduler(
             policy=make_policy("moa-off", topology=self.topology))
         self.tok = ToyTokenizer()
-        self.backend = LiveBackend(self.engines, self.topology,
+        self.backend = LiveBackend(supplied, self.topology,
                                    fail_rate=fail_rate, seed=seed,
                                    snapshot_every=snapshot_every)
+        # pool view (always) and the single-replica back-compat engine view
+        # (tests/benches read counters off ``server.engines``)
+        self.pools = self.backend.pools
+        self.engines = self.backend.engines
         self.runtime = ClusterRuntime(
             self.topology, self.scheduler,
             getattr(self.scheduler.policy, "name", "moa-off"), self.backend,
@@ -260,6 +269,12 @@ class ClusterServer:
                 fail_reason=out.fail_reason, degraded=out.degraded))
         self._reported = len(outcomes)
         return self.results
+
+    def close(self) -> None:
+        """Shut down replica transports (joins/terminates process workers;
+        a no-op for purely local pools)."""
+        for pool in self.pools.values():
+            pool.close()
 
 
 class EdgeCloudServer(ClusterServer):

@@ -1,0 +1,711 @@
+"""Replica transports: how an :class:`~repro.serving.pool.EnginePool`
+talks to ONE ``TierEngine`` replica.
+
+Two implementations behind the same duck-typed surface:
+
+* :class:`LocalTransport` — the replica lives in this process and every
+  call is a direct method call on the engine. With a single replica this
+  is bit-identical to the pre-pool serving path (same call order, same
+  engine hooks), which keeps it the parity/debug baseline.
+* :class:`ProcessTransport` — the replica runs in a worker process
+  (``multiprocessing`` *spawn* context: fork is unsafe once jax has
+  initialized). The worker rebuilds its engine deterministically from a
+  :class:`ReplicaSpec` (same reduced model, same param seed as the
+  in-process construction, so temp=0 tokens are identical), free-runs
+  ``step()`` while it has work, and streams admit/token/warm/park events,
+  finished sequences and utilization stats back over a pipe. Synchronous
+  operations (image encode, slot extract/inject, session ship) are
+  tagged RPCs handled between worker steps; ``SlotPayload`` and parked
+  sessions cross the pipe in the existing versioned migration wire
+  format (``SlotPayload.to_bytes``).
+
+Every pipe message is framed by :func:`msg_to_bytes` with a transport
+wire version so a mismatched peer fails loudly instead of misparsing.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import pickle
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.config import ServingConfig
+from repro.serving.engine import MigrationError, SlotPayload
+
+TRANSPORT_WIRE_VERSION = 1
+
+# event tuples streamed from a replica: ("admit", rid, t),
+# ("token", rid, token, t), ("warm", rid, kind, cached, suffix),
+# ("park", rid, sid)
+EVENT_KINDS = ("admit", "token", "warm", "park")
+
+
+class TransportError(RuntimeError):
+    """A replica transport failed (dead worker, bad frame, RPC timeout)."""
+
+
+@dataclass
+class FinishedSeq:
+    """Transport-neutral finished sequence (what ``_harvest`` consumes)."""
+    rid: int
+    generated: List[int]
+    t_done: Optional[float]
+
+
+def msg_to_bytes(kind: str, payload: Any) -> bytes:
+    """Frame one transport message: version-tagged, pickled."""
+    return pickle.dumps((TRANSPORT_WIRE_VERSION, kind, payload),
+                        protocol=pickle.HIGHEST_PROTOCOL)
+
+
+def msg_from_bytes(raw: bytes) -> Tuple[str, Any]:
+    """Parse + validate one frame; raises TransportError on any mismatch."""
+    try:
+        msg = pickle.loads(raw)
+    except Exception as e:  # truncated / corrupt frame
+        raise TransportError(f"undecodable transport frame: {e}") from e
+    if not isinstance(msg, tuple) or len(msg) != 3:
+        raise TransportError(f"malformed transport frame: {type(msg)}")
+    ver, kind, payload = msg
+    if ver != TRANSPORT_WIRE_VERSION:
+        raise TransportError(
+            f"transport wire version {ver} != {TRANSPORT_WIRE_VERSION}")
+    if not isinstance(kind, str):
+        raise TransportError(f"malformed message kind: {kind!r}")
+    return kind, payload
+
+
+@dataclass(frozen=True)
+class ReplicaSpec:
+    """Everything a worker needs to rebuild its engine deterministically.
+
+    ``param_seed`` matches the in-process construction
+    (``build_cluster_engines`` seeds tier *i* with ``PRNGKey(i)``), so a
+    process replica serves the SAME weights as its local twin and temp=0
+    decoding is token-identical across transports.
+    """
+    model: str
+    serving: ServingConfig
+    dtype: str = "float32"
+    param_seed: int = 0
+    eos_id: int = 2
+    sample_temp: float = 0.0
+    seed: int = 0
+    name: str = "replica"
+
+
+def _prefix_hit_len(store, tokens: np.ndarray, extras_fp: bytes) -> int:
+    """Longest stored strict prefix of ``tokens`` (0 = miss) WITHOUT
+    touching LRU recency — the affinity probe must not reorder the store
+    the eventual admission will consult."""
+    if not store.enabled:
+        return 0
+    tokens = np.asarray(tokens)
+    for n in sorted(store._lengths, reverse=True):
+        if n >= len(tokens) or n < store.min_prefix:
+            continue
+        if store.contains(tokens[:n], extras_fp):
+            return n
+    return 0
+
+
+class LocalTransport:
+    """In-process replica: direct calls on a live ``TierEngine``."""
+
+    kind = "local"
+    supports_restore = True
+
+    def __init__(self, engine):
+        self.engine = engine
+        self.alive = True
+
+    # -- config surface -----------------------------------------------------
+
+    @property
+    def cfg(self):
+        return self.engine.cfg
+
+    @property
+    def serving(self) -> ServingConfig:
+        return self.engine.serving
+
+    def wire_hooks(self, on_admit, on_token, on_warm, on_park) -> None:
+        self.engine.on_admit = on_admit
+        self.engine.on_token = on_token
+        self.engine.on_warm = on_warm
+        self.engine.on_park = on_park
+
+    # -- request plane ------------------------------------------------------
+
+    def submit(self, rid: int, tokens, max_new: int, extras,
+               deadline, session) -> None:
+        self.engine.submit(rid, tokens, max_new=max_new, extras=extras,
+                           deadline=deadline, session=session)
+
+    def cancel(self, rid: int) -> None:
+        self.engine.cancel(rid)
+
+    def poll(self) -> Tuple[List[FinishedSeq], bool, List[int]]:
+        """One engine step; returns (finished, any-activity, lost rids)."""
+        eng = self.engine
+        n = eng.step()
+        fins = [FinishedSeq(st.rid, list(st.generated), st.t_done)
+                for st in eng.finished]
+        eng.finished.clear()
+        active = bool(n) or bool(eng.waiting) \
+            or any(s is not None for s in eng.slots)
+        return fins, active, []
+
+    # -- observation --------------------------------------------------------
+
+    def free_slots(self) -> int:
+        return sum(s is None for s in self.engine.slots)
+
+    def total_slots(self) -> int:
+        return len(self.engine.slots)
+
+    def queue_len(self) -> int:
+        return len(self.engine.waiting)
+
+    def kv_headroom(self) -> float:
+        return self.engine.kv_headroom()
+
+    def occupancy(self) -> int:
+        return len(self.engine.waiting) + sum(
+            s is not None for s in self.engine.slots)
+
+    def rids(self) -> List[int]:
+        return self.engine.rids()
+
+    def slot_rids(self) -> List[int]:
+        return [s.rid for s in self.engine.slots if s is not None]
+
+    def decode_slots(self) -> List[Tuple[int, int]]:
+        """(rid, remaining decode budget) per occupied slot, slot order."""
+        return [(s.rid, s.max_new - len(s.generated))
+                for s in self.engine.slots if s is not None]
+
+    def prefix_hit_len(self, tokens, extras_fp: bytes) -> int:
+        return _prefix_hit_len(self.engine.prefix_store, tokens, extras_fp)
+
+    def counters(self) -> Dict[str, int]:
+        e = self.engine
+        return {"decode_tokens": e.decode_tokens,
+                "prefill_tokens": e.prefill_tokens,
+                "encode_tokens": e.encode_tokens,
+                "prefix_hits": e.prefix_hits,
+                "prefix_hit_tokens": e.prefix_hit_tokens,
+                "resumed_sessions": e.resumed_sessions,
+                "resumed_tokens": e.resumed_tokens,
+                "parks": e.parks}
+
+    @property
+    def healthy(self) -> bool:
+        return self.engine.healthy
+
+    def heartbeat_ok(self) -> bool:
+        return self.engine.heartbeat_ok()
+
+    def set_throttle(self, mult: float) -> None:
+        self.engine.throttle = mult
+
+    # -- partial offload ----------------------------------------------------
+
+    def encode_image(self, image, num_patches: int = 0,
+                     frontend_dim: int = 0):
+        return self.engine.encode_image(image, num_patches, frontend_dim)
+
+    # -- slot / session wire ------------------------------------------------
+
+    def extract_wire(self, rid: int, *, remove: bool = False) -> bytes:
+        return self.engine.extract_slot(rid, remove=remove).to_bytes()
+
+    def inject_wire(self, wire: bytes) -> None:
+        self.engine.inject_slot(SlotPayload.from_bytes(wire))
+
+    def has_session(self, sid: str) -> bool:
+        return sid in self.engine.sessions
+
+    def session_ids(self) -> List[str]:
+        return list(self.engine.sessions.ids())
+
+    def session_count(self) -> int:
+        return len(self.engine.sessions)
+
+    def resume_session_wire(self, sid: str) -> Optional[bytes]:
+        parked = self.engine.resume_session(sid)
+        if parked is None or not isinstance(parked.data, SlotPayload):
+            return None
+        return parked.data.to_bytes()
+
+    def adopt_session_wire(self, sid: str, wire: bytes) -> bool:
+        try:
+            payload = SlotPayload.from_bytes(wire)
+        except MigrationError:
+            return False  # corrupt in transit: the turn cold-prefills
+        return bool(self.engine.adopt_session(sid, payload))
+
+    def drop_session(self, sid: str) -> None:
+        self.engine.sessions.resume(sid)  # pop + discard
+
+    # -- fault discipline ---------------------------------------------------
+
+    def snapshot(self) -> dict:
+        return self.engine.snapshot()
+
+    def restore(self, snap: dict) -> None:
+        self.engine.restore(snap)
+
+    def close(self) -> None:
+        self.alive = False
+
+
+# ---------------------------------------------------------------------------
+# process transport
+
+
+def _worker_main(conn, spec_raw: bytes) -> None:
+    """Worker entry: rebuild the engine from its spec, then free-run —
+    step while there is work, drain the command pipe between steps, and
+    stream events / finished sequences / stats upward."""
+    import os
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    try:
+        kind, spec = msg_from_bytes(spec_raw)
+        assert kind == "spec"
+        import jax  # deferred: the worker picks its own platform above
+        from repro.configs import reduced_config
+        from repro.models import build_model
+        from repro.serving.engine import TierEngine
+
+        cfg = reduced_config(spec.model).replace(dtype=spec.dtype)
+        model = build_model(cfg)
+        eng = TierEngine(model, model.init(jax.random.PRNGKey(spec.param_seed)),
+                         spec.serving, eos_id=spec.eos_id,
+                         sample_temp=spec.sample_temp, seed=spec.seed)
+    except Exception as e:  # construction failed: report, don't hang
+        try:
+            conn.send_bytes(msg_to_bytes("died", f"build: {e!r}"))
+        finally:
+            conn.close()
+        return
+
+    events: List[tuple] = []
+    eng.on_admit = lambda rid, t: events.append(("admit", rid, t))
+    eng.on_token = lambda rid, tok, t: events.append(("token", rid, tok, t))
+    eng.on_warm = lambda rid, k, c, s: events.append(("warm", rid, k, c, s))
+    eng.on_park = lambda rid, sid: events.append(("park", rid, sid))
+
+    def handle_rpc(seq: int, op: str, arg: dict) -> None:
+        try:
+            if op == "encode":
+                out = eng.encode_image(arg["image"], arg["num_patches"],
+                                       arg["frontend_dim"])
+            elif op == "extract":
+                out = eng.extract_slot(arg["rid"],
+                                       remove=arg["remove"]).to_bytes()
+            elif op == "inject":
+                eng.inject_slot(SlotPayload.from_bytes(arg["wire"]))
+                out = True
+            elif op == "resume_session":
+                parked = eng.resume_session(arg["sid"])
+                out = (parked.data.to_bytes()
+                       if parked is not None
+                       and isinstance(parked.data, SlotPayload) else None)
+            elif op == "adopt_session":
+                try:
+                    payload = SlotPayload.from_bytes(arg["wire"])
+                except MigrationError:
+                    out = False
+                else:
+                    out = bool(eng.adopt_session(arg["sid"], payload))
+            elif op == "drop_session":
+                eng.sessions.resume(arg["sid"])
+                out = True
+            elif op == "ping":
+                out = True
+            else:
+                raise TransportError(f"unknown rpc op {op!r}")
+            conn.send_bytes(msg_to_bytes("reply", (seq, True, out)))
+        except MigrationError as e:
+            conn.send_bytes(msg_to_bytes("reply", (seq, False,
+                                                   ("migration", str(e)))))
+        except Exception as e:
+            conn.send_bytes(msg_to_bytes("reply", (seq, False,
+                                                   ("error", repr(e)))))
+
+    def stats() -> dict:
+        return {
+            "free_slots": sum(s is None for s in eng.slots),
+            "total_slots": len(eng.slots),
+            "queue": len(eng.waiting),
+            "kv_headroom": eng.kv_headroom(),
+            "sessions": list(eng.sessions.ids()),
+            "healthy": eng.healthy,
+            "counters": {
+                "decode_tokens": eng.decode_tokens,
+                "prefill_tokens": eng.prefill_tokens,
+                "encode_tokens": eng.encode_tokens,
+                "prefix_hits": eng.prefix_hits,
+                "prefix_hit_tokens": eng.prefix_hit_tokens,
+                "resumed_sessions": eng.resumed_sessions,
+                "resumed_tokens": eng.resumed_tokens,
+                "parks": eng.parks},
+        }
+
+    conn.send_bytes(msg_to_bytes("ready", stats()))
+    last_stats = time.monotonic()
+    running = True
+    try:
+        while running:
+            busy = bool(eng.waiting) or any(
+                s is not None for s in eng.slots)
+            # drain commands; when idle, block briefly so the worker
+            # doesn't spin a core waiting for work
+            while conn.poll(0.0 if busy else 0.02):
+                kind, payload = msg_from_bytes(conn.recv_bytes())
+                if kind == "stop":
+                    running = False
+                    break
+                if kind == "submit":
+                    eng.submit(payload["rid"], payload["tokens"],
+                               max_new=payload["max_new"],
+                               extras=payload["extras"],
+                               deadline=payload["deadline"],
+                               session=payload["session"])
+                elif kind == "cancel":
+                    eng.cancel(payload)
+                elif kind == "throttle":
+                    eng.throttle = float(payload)
+                elif kind == "rpc":
+                    handle_rpc(*payload)
+                busy = True  # a command may have created work
+            if not running:
+                break
+            if eng.waiting or any(s is not None for s in eng.slots):
+                eng.step()
+            if events:
+                conn.send_bytes(msg_to_bytes("events", events))
+                events = []
+            fins = None
+            if eng.finished:
+                fins = [(st.rid, list(st.generated), st.t_done)
+                        for st in eng.finished]
+                eng.finished.clear()
+                conn.send_bytes(msg_to_bytes("fin", fins))
+            now = time.monotonic()
+            if fins is not None or now - last_stats > 0.05:
+                conn.send_bytes(msg_to_bytes("stats", stats()))
+                last_stats = now
+    except (EOFError, OSError, BrokenPipeError):
+        pass  # parent went away
+    except Exception as e:
+        try:
+            conn.send_bytes(msg_to_bytes("died", repr(e)))
+        except Exception:
+            pass
+    finally:
+        conn.close()
+
+
+class ProcessTransport:
+    """A replica in a spawn-context worker process behind a duplex pipe.
+
+    The parent mirrors the worker's utilization (slots, queue, KV
+    headroom, parked session ids, counters) from its periodic stats
+    messages — observation reads are mirror-fresh, never blocking RPCs.
+    A dead worker (crash, closed pipe, RPC timeout) flips ``alive``; the
+    owning pool then reports the replica's in-flight rids as *lost* so
+    the runtime's shared failure path resubmits them to siblings.
+    """
+
+    kind = "process"
+    supports_restore = False
+
+    def __init__(self, spec: ReplicaSpec, start_timeout_s: float = 120.0,
+                 rpc_timeout_s: float = 60.0):
+        self.spec = spec
+        self.alive = True
+        self.rpc_timeout_s = rpc_timeout_s
+        self._rpc_seq = 0
+        self._live_rids: set = set()
+        self._pending_fins: List[FinishedSeq] = []
+        self._pending_lost: List[int] = []
+        self._hooks = (None, None, None, None)
+        self._stats: Dict[str, Any] = {
+            "free_slots": spec.serving.max_batch,
+            "total_slots": spec.serving.max_batch,
+            "queue": 0, "kv_headroom": 1.0, "sessions": [],
+            "healthy": True, "counters": {}}
+        # parent-side model config twin (for patch geometry / embed bytes
+        # without a round trip) — the worker builds the same reduced config
+        from repro.configs import reduced_config
+        self.cfg = reduced_config(spec.model).replace(dtype=spec.dtype)
+        ctx = mp.get_context("spawn")
+        self._conn, child = ctx.Pipe(duplex=True)
+        self._proc = ctx.Process(
+            target=_worker_main,
+            args=(child, msg_to_bytes("spec", spec)),
+            name=f"tier-replica-{spec.name}", daemon=True)
+        self._proc.start()
+        child.close()
+        # block until the worker's engine is built: submissions before
+        # "ready" would race construction failures
+        deadline = time.monotonic() + start_timeout_s
+        while True:
+            if self._conn.poll(0.1):
+                try:
+                    kind, payload = msg_from_bytes(self._conn.recv_bytes())
+                except (EOFError, OSError) as e:
+                    # spawn failed before the worker could report (e.g. a
+                    # non-importable __main__): surface a TransportError
+                    self._mark_dead()
+                    raise TransportError(
+                        f"replica {spec.name} died during spawn: "
+                        f"{e!r}") from e
+                if kind == "ready":
+                    self._stats.update(payload)
+                    break
+                if kind == "died":
+                    self._mark_dead()
+                    raise TransportError(
+                        f"replica {spec.name} failed to start: {payload}")
+            if time.monotonic() > deadline:
+                self._mark_dead()
+                raise TransportError(
+                    f"replica {spec.name} start timeout")
+
+    @property
+    def serving(self) -> ServingConfig:
+        return self.spec.serving
+
+    def wire_hooks(self, on_admit, on_token, on_warm, on_park) -> None:
+        self._hooks = (on_admit, on_token, on_warm, on_park)
+
+    # -- plumbing -----------------------------------------------------------
+
+    def _mark_dead(self) -> None:
+        if not self.alive:
+            return
+        self.alive = False
+        self._pending_lost.extend(sorted(self._live_rids))
+        self._live_rids.clear()
+
+    def _send(self, kind: str, payload: Any) -> None:
+        if not self.alive:
+            raise TransportError(f"replica {self.spec.name} is dead")
+        try:
+            self._conn.send_bytes(msg_to_bytes(kind, payload))
+        except (OSError, BrokenPipeError, ValueError) as e:
+            self._mark_dead()
+            raise TransportError(
+                f"replica {self.spec.name} pipe broken: {e}") from e
+
+    def _dispatch(self, kind: str, payload: Any) -> None:
+        """Route one inbound message (events/fin/stats/died)."""
+        if kind == "events":
+            on_admit, on_token, on_warm, on_park = self._hooks
+            for ev in payload:
+                if ev[0] == "admit" and on_admit:
+                    on_admit(ev[1], ev[2])
+                elif ev[0] == "token" and on_token:
+                    on_token(ev[1], ev[2], ev[3])
+                elif ev[0] == "warm" and on_warm:
+                    on_warm(ev[1], ev[2], ev[3], ev[4])
+                elif ev[0] == "park" and on_park:
+                    on_park(ev[1], ev[2])
+        elif kind == "fin":
+            for rid, generated, t_done in payload:
+                self._live_rids.discard(rid)
+                self._pending_fins.append(
+                    FinishedSeq(rid, list(generated), t_done))
+        elif kind == "stats":
+            self._stats.update(payload)
+        elif kind == "died":
+            self._mark_dead()
+
+    def _drain(self) -> None:
+        try:
+            while self.alive and self._conn.poll(0.0):
+                kind, payload = msg_from_bytes(self._conn.recv_bytes())
+                if kind == "reply":
+                    continue  # stale reply from a timed-out RPC
+                self._dispatch(kind, payload)
+        except (EOFError, OSError, BrokenPipeError, TransportError):
+            self._mark_dead()
+        if self.alive and not self._proc.is_alive():
+            self._mark_dead()
+
+    def _rpc(self, op: str, **arg):
+        self._rpc_seq += 1
+        seq = self._rpc_seq
+        self._send("rpc", (seq, op, arg))
+        deadline = time.monotonic() + self.rpc_timeout_s
+        while time.monotonic() < deadline:
+            try:
+                if not self._conn.poll(0.05):
+                    continue
+                kind, payload = msg_from_bytes(self._conn.recv_bytes())
+            except (EOFError, OSError, BrokenPipeError) as e:
+                self._mark_dead()
+                raise TransportError(
+                    f"replica {self.spec.name} died mid-RPC") from e
+            if kind == "reply":
+                rseq, ok, out = payload
+                if rseq != seq:
+                    continue  # stale reply from an earlier timeout
+                if ok:
+                    return out
+                tag, detail = out
+                if tag == "migration":
+                    raise MigrationError(detail)
+                raise TransportError(f"{op} failed on "
+                                     f"{self.spec.name}: {detail}")
+            self._dispatch(kind, payload)
+        self._mark_dead()
+        raise TransportError(f"rpc {op} timed out on {self.spec.name}")
+
+    # -- request plane ------------------------------------------------------
+
+    def submit(self, rid: int, tokens, max_new: int, extras,
+               deadline, session) -> None:
+        self._send("submit", {"rid": rid, "tokens": np.asarray(tokens),
+                              "max_new": max_new, "extras": extras,
+                              "deadline": deadline, "session": session})
+        self._live_rids.add(rid)
+
+    def cancel(self, rid: int) -> None:
+        self._live_rids.discard(rid)
+        if self.alive:
+            try:
+                self._send("cancel", rid)
+            except TransportError:
+                pass  # already dead: the rid is gone either way
+
+    def poll(self) -> Tuple[List[FinishedSeq], bool, List[int]]:
+        self._drain()
+        fins, self._pending_fins = self._pending_fins, []
+        lost, self._pending_lost = self._pending_lost, []
+        return fins, bool(self._live_rids), lost
+
+    # -- observation (mirror-fresh, non-blocking) ---------------------------
+
+    def free_slots(self) -> int:
+        return int(self._stats["free_slots"]) if self.alive else 0
+
+    def total_slots(self) -> int:
+        return int(self._stats["total_slots"])
+
+    def queue_len(self) -> int:
+        return int(self._stats["queue"]) if self.alive else 0
+
+    def kv_headroom(self) -> float:
+        return float(self._stats["kv_headroom"]) if self.alive else 0.0
+
+    def occupancy(self) -> int:
+        # live rids the parent actually submitted: robust against a stale
+        # stats mirror between heartbeats
+        return len(self._live_rids)
+
+    def rids(self) -> List[int]:
+        return sorted(self._live_rids)
+
+    def slot_rids(self) -> List[int]:
+        return []  # no slot-granular visibility across the pipe
+
+    def decode_slots(self) -> List[Tuple[int, int]]:
+        return []  # preemption scans only local replicas
+
+    def prefix_hit_len(self, tokens, extras_fp: bytes) -> int:
+        return 0  # affinity probe is local-only; process picks by load
+
+    def counters(self) -> Dict[str, int]:
+        return dict(self._stats.get("counters", {}))
+
+    @property
+    def healthy(self) -> bool:
+        return self.alive and bool(self._stats.get("healthy", True))
+
+    def heartbeat_ok(self) -> bool:
+        return self.alive and self._proc.is_alive()
+
+    def set_throttle(self, mult: float) -> None:
+        if self.alive:
+            try:
+                self._send("throttle", float(mult))
+            except TransportError:
+                pass
+
+    # -- partial offload ----------------------------------------------------
+
+    def encode_image(self, image, num_patches: int = 0,
+                     frontend_dim: int = 0):
+        return self._rpc("encode", image=np.asarray(image),
+                         num_patches=num_patches, frontend_dim=frontend_dim)
+
+    # -- slot / session wire ------------------------------------------------
+
+    def extract_wire(self, rid: int, *, remove: bool = False) -> bytes:
+        wire = self._rpc("extract", rid=rid, remove=remove)
+        if remove:
+            self._live_rids.discard(rid)
+        return wire
+
+    def inject_wire(self, wire: bytes) -> None:
+        self._rpc("inject", wire=wire)
+
+    def has_session(self, sid: str) -> bool:
+        return self.alive and sid in self._stats.get("sessions", [])
+
+    def session_ids(self) -> List[str]:
+        return list(self._stats.get("sessions", [])) if self.alive else []
+
+    def session_count(self) -> int:
+        return len(self.session_ids())
+
+    def resume_session_wire(self, sid: str) -> Optional[bytes]:
+        try:
+            return self._rpc("resume_session", sid=sid)
+        except TransportError:
+            return None
+
+    def adopt_session_wire(self, sid: str, wire: bytes) -> bool:
+        try:
+            return bool(self._rpc("adopt_session", sid=sid, wire=wire))
+        except TransportError:
+            return False
+
+    def drop_session(self, sid: str) -> None:
+        try:
+            self._rpc("drop_session", sid=sid)
+        except TransportError:
+            pass
+
+    # -- fault discipline ---------------------------------------------------
+
+    def snapshot(self) -> dict:
+        raise TransportError(
+            "process replicas have no host-side snapshot; chaos injection "
+            "(fail_rate / crash plans) requires the local transport")
+
+    def restore(self, snap: dict) -> None:
+        raise TransportError("process replicas cannot restore")
+
+    def close(self) -> None:
+        if self.alive:
+            try:
+                self._send("stop", None)
+            except TransportError:
+                pass
+        self.alive = False
+        self._proc.join(timeout=5.0)
+        if self._proc.is_alive():
+            self._proc.terminate()
+            self._proc.join(timeout=5.0)
+        try:
+            self._conn.close()
+        except OSError:
+            pass

@@ -1,0 +1,371 @@
+"""Replicated engine pools: transport wire framing, deterministic
+least-loaded balancing, replica affinity (parked sessions + cached
+prefixes), intra-tier slot re-homing, replica-granular fault recovery
+through the live server, and process-transport parity."""
+import pickle
+import time
+
+import numpy as np
+import pytest
+
+from repro.config import ServingConfig, two_tier_topology
+from repro.models import build_model
+from repro.serving.engine import TierEngine
+from repro.serving.pool import EnginePool, build_engine_pools
+from repro.serving.prefix import extras_fingerprint
+from repro.serving.tiers import ClusterServer
+from repro.serving.transport import (TRANSPORT_WIRE_VERSION, LocalTransport,
+                                     ProcessTransport, ReplicaSpec,
+                                     TransportError, msg_from_bytes,
+                                     msg_to_bytes)
+from tests.conftest import FAMILY_ARCHS
+
+NO_EXTRAS = extras_fingerprint({})
+
+
+# ---------------------------------------------------------------------------
+# wire framing
+
+
+def test_wire_roundtrip():
+    for kind, payload in [("submit", {"rid": 3, "tokens": [1, 2, 3]}),
+                          ("stats", None),
+                          ("fin", (7, list(range(40)), 12.5))]:
+        k, p = msg_from_bytes(msg_to_bytes(kind, payload))
+        assert (k, p) == (kind, payload)
+
+
+def test_wire_rejects_bad_frames():
+    bad = [
+        pickle.dumps((TRANSPORT_WIRE_VERSION + 1, "submit", None)),  # version
+        pickle.dumps("not a tuple"),
+        pickle.dumps((TRANSPORT_WIRE_VERSION, "submit")),  # arity
+        pickle.dumps((TRANSPORT_WIRE_VERSION, 42, None)),  # non-str kind
+        msg_to_bytes("submit", {"rid": 1})[:5],  # truncated
+        b"",
+    ]
+    for raw in bad:
+        with pytest.raises(TransportError):
+            msg_from_bytes(raw)
+
+
+# ---------------------------------------------------------------------------
+# replica selection (duck-typed fakes: selection logic only)
+
+
+class FakeReplica:
+    kind = "fake"
+    supports_restore = True
+
+    def __init__(self, occ=0, kv=1.0, hit=0, sessions=()):
+        self.alive = True
+        self._occ, self._kv, self._hit = occ, kv, hit
+        self._sessions = set(sessions)
+
+    def occupancy(self):
+        return self._occ
+
+    def kv_headroom(self):
+        return self._kv
+
+    def free_slots(self):
+        return max(0, 2 - self._occ)
+
+    def total_slots(self):
+        return 2
+
+    def prefix_hit_len(self, tokens, fp):
+        return self._hit
+
+    def has_session(self, sid):
+        return sid in self._sessions
+
+
+TOKENS = np.arange(24, dtype=np.int32)
+
+
+def test_choose_least_loaded_deterministic_tie_break():
+    pool = EnginePool("edge", [FakeReplica(), FakeReplica()])
+    assert pool.choose(TOKENS, NO_EXTRAS) == 0  # tie -> lowest index
+    pool = EnginePool("edge", [FakeReplica(occ=2), FakeReplica(occ=1)])
+    assert pool.choose(TOKENS, NO_EXTRAS) == 1
+    # occupancy tie: more KV headroom wins
+    pool = EnginePool("edge", [FakeReplica(occ=1, kv=0.2),
+                               FakeReplica(occ=1, kv=0.9)])
+    assert pool.choose(TOKENS, NO_EXTRAS) == 1
+
+
+def test_choose_single_replica_is_pass_through():
+    # a 1-replica pool short-circuits (no prefix probe, no rng anywhere)
+    assert EnginePool("edge", [FakeReplica(occ=5)]).choose(
+        TOKENS, NO_EXTRAS) == 0
+
+
+def test_choose_raises_when_no_live_replica():
+    r0, r1 = FakeReplica(), FakeReplica()
+    r0.alive = r1.alive = False
+    with pytest.raises(TransportError):
+        EnginePool("edge", [r0, r1]).choose(TOKENS, NO_EXTRAS)
+
+
+def test_choose_prefers_session_home_over_load():
+    # replica 1 is busier AND holds the parked session: affinity wins
+    pool = EnginePool("edge", [FakeReplica(occ=0),
+                               FakeReplica(occ=2, sessions={"s"})])
+    assert pool.choose(TOKENS, NO_EXTRAS, session="s") == 1
+    # no parked home anywhere: falls through to least-loaded
+    assert pool.choose(TOKENS, NO_EXTRAS, session="zzz") == 0
+
+
+def test_choose_prefers_longest_prefix_over_load():
+    pool = EnginePool("edge", [FakeReplica(occ=0, hit=0),
+                               FakeReplica(occ=2, hit=16)])
+    assert pool.choose(TOKENS, NO_EXTRAS) == 1
+    # equal hits resolve by load key
+    pool = EnginePool("edge", [FakeReplica(occ=2, hit=16),
+                               FakeReplica(occ=0, hit=16)])
+    assert pool.choose(TOKENS, NO_EXTRAS) == 1
+
+
+# ---------------------------------------------------------------------------
+# live replicas: token identity, affinity and re-homing on real engines
+
+
+def _local_pool(cfg, params, n=2, sv=None):
+    sv = sv or ServingConfig(max_batch=2, max_seq=96)
+    model = build_model(cfg)
+    return EnginePool("edge", [LocalTransport(TierEngine(model, params, sv))
+                               for _ in range(n)])
+
+
+def _drain(pool, timeout_s=600.0):
+    # wall-clock bounded: process replicas compile in their worker for
+    # tens of seconds before the first token arrives
+    fins = []
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        f, active, lost = pool.poll()
+        fins.extend(f)
+        assert not lost
+        if not active and not f:
+            return {s.rid: s.generated for s in fins}
+        if not f:
+            time.sleep(0.002)
+    raise AssertionError("pool did not drain")
+
+
+def _prompt(n, base=0):
+    return ((np.arange(n) + base) % 300 + 4).astype(np.int32)
+
+
+def test_move_slot_midstream_token_identity(family_model):
+    cfg, params = family_model("dense")
+    sv = ServingConfig(max_batch=2, max_seq=96)
+    ref = TierEngine(build_model(cfg), params, sv)
+    ref.submit(0, _prompt(12), max_new=24)
+    want = {s.rid: s.generated for s in ref.run_until_drained()}
+
+    pool = _local_pool(cfg, params, sv=sv)
+    pool.submit_to(0, 0, _prompt(12), max_new=24, extras={}, deadline=None,
+                   session=None)
+    for _ in range(2):  # prefill + a couple of decode blocks on replica 0
+        pool.poll()
+    assert pool.replica_of(0) == 0
+    dst = pool.move_slot(0, 0)
+    assert dst == 1 and pool.replica_of(0) == 1
+    got = _drain(pool)
+    assert got[0] == want[0]
+    # the receiving replica continued from shipped KV rows: no re-prefill
+    assert pool.transports[1].counters()["prefill_tokens"] == 0
+    # unknown rid: nothing to move, nothing lost
+    assert pool.move_slot(999, 0) is None
+
+
+def test_move_slot_without_capacity_leaves_slot_in_place(family_model):
+    cfg, params = family_model("dense")
+    sv = ServingConfig(max_batch=1, max_seq=96)
+    pool = _local_pool(cfg, params, sv=sv)
+    for rid in (0, 1):
+        pool.submit_to(rid, rid, _prompt(8 + rid), max_new=16, extras={},
+                       deadline=None, session=None)
+    pool.poll()
+    # the sibling's only slot is occupied: no destination, slot stays home
+    assert pool.move_slot(0, 0) is None
+    assert pool.replica_of(0) == 0
+    got = _drain(pool)
+    assert set(got) == {0, 1}
+
+
+@pytest.mark.parametrize("family", [
+    "dense",
+    pytest.param("vlm", marks=pytest.mark.slow),
+    pytest.param("moe", marks=pytest.mark.slow),
+    pytest.param("ssm", marks=pytest.mark.slow),
+    pytest.param("hybrid", marks=pytest.mark.slow),
+])
+def test_replicated_serving_token_identical_to_single_engine(
+        family_model, family):
+    """Cold, warm-prefix-hit and resumed-session decoding through a
+    2-replica pool is token-identical to the single-engine path, with the
+    warm submissions landing on the replica that holds the cached state
+    (affinity beating the least-loaded tie-break)."""
+    cfg, params = family_model(family)
+    sv = ServingConfig(max_batch=2, max_seq=96, prefix_cache_mb=64,
+                       session_cache_mb=64, prefix_min_tokens=16)
+    base = _prompt(32)
+    ext = np.concatenate([base, _prompt(6, base=100)])
+    base2 = _prompt(24, base=7)
+
+    def turns(submit, drain):
+        submit(0, base, None)
+        out = drain()  # deposit the base prefix before extending it
+        submit(1, ext, None)
+        submit(2, base2, "s")
+        out.update(drain())
+        turn2 = np.concatenate(
+            [base2, np.asarray(out[2], np.int32), _prompt(5, base=200)])
+        submit(3, turn2, "s")
+        out.update(drain())
+        return out
+
+    ref = TierEngine(build_model(cfg), params, sv)
+
+    def ref_submit(rid, toks, session):
+        ref.submit(rid, toks, max_new=8, session=session)
+
+    def ref_drain():
+        return {s.rid: s.generated for s in ref.run_until_drained()}
+
+    want = turns(ref_submit, ref_drain)
+    assert ref.prefix_hits >= 1 and ref.resumed_sessions == 1
+
+    # pool twin: warm state is FORCED onto replica 1, so the tie-break
+    # (which favors replica 0) would miss it — affinity must route there
+    pool = _local_pool(cfg, params, sv=sv)
+
+    def pool_submit(rid, toks, session):
+        if rid in (0, 2):
+            r = 1  # pin the cold deposits away from the tie-break pick
+        else:
+            r = pool.choose(toks, NO_EXTRAS, session=session)
+            assert r == 1, f"warm rid {rid} routed off its cached replica"
+        pool.submit_to(r, rid, toks, max_new=8, extras={}, deadline=None,
+                       session=session)
+
+    got = turns(pool_submit, lambda: _drain(pool))
+    assert got == want
+    warm = pool.transports[1].counters()
+    assert warm["prefix_hits"] >= 1 and warm["resumed_sessions"] == 1
+    assert pool.transports[0].counters()["resumed_sessions"] == 0
+    assert pool.counters()["resumed_sessions"] == 1
+
+
+# ---------------------------------------------------------------------------
+# replica-granular fault handling through the live server
+
+
+def test_live_replicated_fault_recovery_terminal_failures():
+    # a permanently dead edge tier with TWO replicas: every attempt
+    # faults, each crashed replica restores from ITS snapshot, and spent
+    # retry budgets resolve into terminal failures (no livelock)
+    sv = ServingConfig(max_batch=2, max_seq=64, heartbeat_timeout_s=0.0)
+    topo = two_tier_topology()
+    pools = build_engine_pools(topo, sv, replicas={"edge": 2, "cloud": 1})
+    assert len(pools["edge"]) == 2
+    srv = ClusterServer(pools, topology=topo, fail_rate=1.0)
+    for i in range(2):
+        srv.submit(f"hello there {i}", max_new=4, complexity={"text": 0.05})
+    res = srv.run(timeout_s=60.0)
+    assert len(res) == 2
+    assert srv.backend.restores >= 1
+    for r in res:
+        assert r.failed and r.fail_reason == "retries"
+        assert r.retries == sv.retry_limit
+
+
+def test_chaos_requires_restorable_transports():
+    sv = ServingConfig(max_batch=2, max_seq=64)
+    topo = two_tier_topology()
+    pools = build_engine_pools(topo, sv, replicas={"edge": 2, "cloud": 1})
+    # one non-restorable replica poisons the tier for chaos injection
+    pools["edge"].transports[0].supports_restore = False
+    assert not pools["edge"].supports_restore
+    with pytest.raises(ValueError, match="snapshot/restore"):
+        ClusterServer(pools, topology=topo, fail_rate=0.5)
+    # without chaos the same pools serve fine
+    srv = ClusterServer(pools, topology=topo)
+    srv.submit("hello", max_new=4, complexity={"text": 0.05})
+    assert len(srv.run(timeout_s=60.0)) == 1
+
+
+def test_build_engine_pools_serving_overrides():
+    sv = ServingConfig(max_batch=4, max_seq=64)
+    sv_edge = ServingConfig(max_batch=1, max_seq=64)
+    pools = build_engine_pools(two_tier_topology(), sv,
+                               serving_overrides={"edge": sv_edge})
+    assert pools["edge"].serving.max_batch == 1
+    assert pools["cloud"].serving.max_batch == 4
+    with pytest.raises(ValueError, match="transport"):
+        build_engine_pools(two_tier_topology(), sv, transport="carrier-pigeon")
+
+
+# ---------------------------------------------------------------------------
+# process transport (spawned workers: slow lane)
+
+
+@pytest.mark.slow
+def test_process_transport_parity_with_local_engine(family_model):
+    cfg, params = family_model("dense")
+    sv = ServingConfig(max_batch=2, max_seq=96)
+    ref = TierEngine(build_model(cfg), params, sv)
+    jobs = [(0, _prompt(12), 20), (1, _prompt(18, base=3), 16)]
+    for rid, toks, max_new in jobs:
+        ref.submit(rid, toks, max_new=max_new)
+    want = {s.rid: s.generated for s in ref.run_until_drained()}
+
+    tr = ProcessTransport(ReplicaSpec(model=FAMILY_ARCHS["dense"],
+                                      serving=sv, param_seed=0,
+                                      name="edge/0"))
+    try:
+        pool = EnginePool("edge", [tr])
+        for rid, toks, max_new in jobs:
+            pool.submit_to(0, rid, toks, max_new=max_new, extras={},
+                           deadline=None, session=None)
+        got = _drain(pool)
+    finally:
+        tr.close()
+    assert got == want
+
+
+@pytest.mark.slow
+def test_worker_crash_reports_lost_rids_and_sibling_rescues(family_model):
+    cfg, params = family_model("dense")
+    sv = ServingConfig(max_batch=2, max_seq=96)
+    ref = TierEngine(build_model(cfg), params, sv)
+    ref.submit(0, _prompt(10), max_new=12)
+    want = {s.rid: s.generated for s in ref.run_until_drained()}
+
+    proc = ProcessTransport(ReplicaSpec(model=FAMILY_ARCHS["dense"],
+                                        serving=sv, param_seed=0,
+                                        name="edge/0"))
+    sibling = LocalTransport(TierEngine(build_model(cfg), params, sv))
+    pool = EnginePool("edge", [proc, sibling])
+    try:
+        pool.submit_to(0, 0, _prompt(10), max_new=12, extras={},
+                       deadline=None, session=None)
+        proc._proc.kill()
+        lost = []
+        for _ in range(2_000):
+            _, _, l = pool.poll()
+            lost.extend(l)
+            if lost:
+                break
+        assert lost == [0]
+        assert not proc.alive and pool.n_alive == 1
+        # cold resubmit on the survivor completes with identical tokens
+        pool.submit_to(1, 0, _prompt(10), max_new=12, extras={},
+                       deadline=None, session=None)
+        got = _drain(pool)
+    finally:
+        pool.close()
+    assert got == want

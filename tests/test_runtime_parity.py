@@ -23,6 +23,7 @@ from repro.core.scheduler import MoAOffScheduler
 from repro.data.synthetic import RequestGenerator, make_image
 from repro.models import build_model
 from repro.serving.engine import TierEngine
+from repro.serving.pool import build_engine_pools
 from repro.serving.simulator import ClusterSimulator, EdgeCloudSimulator
 from repro.serving.tiers import ClusterServer, build_cluster_engines
 
@@ -128,6 +129,45 @@ def test_sim_and_live_agree_on_routing_and_lifecycle():
         assert live_trace == sim_trace  # identical lifecycle, timing aside
     # streaming bookkeeping exists on the live side
     assert all(res.ttft_s > 0 for res in server.results)
+    assert {r.tier for r in server.results} == {"edge", "cloud"}
+
+
+def test_sim_and_live_agree_on_replicated_topology():
+    """A topology whose edge tier declares servers=2 runs as a TWO-replica
+    engine pool on the live side and as two parallel FIFO servers in the
+    analytic backend — same workload, identical routing decisions and
+    lifecycle traces (replication changes capacity, never decisions)."""
+    pol_cfg = PolicyConfig(adaptive_tau=False)
+    topo = two_tier_topology(edge_servers=2)
+    pools = build_engine_pools(topo, ServingConfig(max_batch=2, max_seq=64))
+    assert len(pools["edge"]) == 2 and len(pools["cloud"]) == 1
+    server = ClusterServer(pools, topology=topo, scheduler=MoAOffScheduler(
+        policy=make_policy("moa-off", pol_cfg, topology=topo)))
+    sim = ClusterSimulator(SimConfig(seed=0), policy_cfg=pol_cfg,
+                           topology=two_tier_topology(edge_servers=2))
+    rng = np.random.default_rng(0)
+    live_reqs, sim_reqs = [], []
+    for i, u in enumerate([0.05, 0.95, 0.4, 0.8, 0.15]):
+        req = server.build_request(
+            f"Describe scene {i}. " + "and explain the Details here. "
+            * int(u * 20), image=make_image(rng, u, 48, 48), max_new=4)
+        sim_req = copy.deepcopy(req)
+        sim_req.arrival_s = 1000.0 * (i + 1)  # idle at every virtual arrival
+        live_reqs.append(req)
+        sim_reqs.append(sim_req)
+        server.submit_request(req)
+        server.run()
+    for r in sim_reqs:
+        sim.submit(r)
+    sim.run()
+
+    sim_out = {o.rid: o for o in sim.outcomes}
+    for res in server.results:
+        assert res.routes == sim_out[res.rid].routes
+        assert res.tier == sim_out[res.rid].served_tier
+    for r in live_reqs:
+        assert (server.runtime.records[r.rid].trace()
+                == sim.runtime.records[r.rid].trace())
     assert {r.tier for r in server.results} == {"edge", "cloud"}
 
 
