@@ -479,6 +479,41 @@ class ServingConfig:
 
 
 @dataclass(frozen=True)
+class SpecConfig:
+    """Cross-tier speculative decoding: a cheap DRAFT tier proposes blocks
+    of ``draft_k`` tokens and the TARGET tier verifies the whole block in
+    ONE chunked forward against its own KV, accepting the longest matching
+    prefix plus its own correction token. Output is token-for-token the
+    target-only stream (the committed tokens are the target's own samples
+    under its own key stream), so quality is exactly the target's.
+
+    The scheduler speculates only while the acceptance-rate EWMA stays at
+    or above ``min_accept``; ``init_accept`` seeds the EWMA so a cold
+    system gives speculation a chance before any feedback exists.
+    """
+
+    draft_tier: str = "edge"
+    target_tier: str = "cloud"
+    draft_k: int = 8  # proposed tokens per round
+    min_accept: float = 0.3  # stop speculating below this EWMA
+    init_accept: float = 0.7  # optimistic cold-start acceptance rate
+
+    def __post_init__(self):
+        if self.draft_tier == self.target_tier:
+            raise ValueError(
+                f"speculation needs two tiers, got draft == target == "
+                f"{self.draft_tier!r}")
+        if self.draft_k < 1:
+            raise ValueError(f"draft_k must be >= 1, got {self.draft_k}")
+        if not 0.0 <= self.min_accept <= 1.0:
+            raise ValueError(
+                f"min_accept must be in [0, 1], got {self.min_accept}")
+        if not 0.0 <= self.init_accept <= 1.0:
+            raise ValueError(
+                f"init_accept must be in [0, 1], got {self.init_accept}")
+
+
+@dataclass(frozen=True)
 class ResilienceConfig:
     """Tier-health / graceful-degradation knobs for the cluster runtime.
 

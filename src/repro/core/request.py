@@ -30,10 +30,14 @@ MODALITIES = ("image", "text", "audio")
 #: ``quarantine`` (this request's failure opened the tier's circuit),
 #: ``timeout`` (a WAN transfer was abandoned), and the terminal states
 #: ``failed`` (retry budget exhausted) / ``shed`` (SLO provably unmeetable).
+#: Speculative decoding marks one ``draft`` (draft tier) / ``verify`` /
+#: ``accept`` (target tier) triplet per speculated request — one triplet,
+#: not one per round, so analytic and live traces stay comparable.
 LIFECYCLE = ("arrival", "routed", "sticky", "session_move", "encode",
-             "transfer", "enqueue", "prefix", "resume", "serve", "hedged",
-             "retry", "preempt", "migrate", "park", "degraded", "quarantine",
-             "timeout", "shed", "failed", "complete")
+             "transfer", "enqueue", "prefix", "resume", "serve", "draft",
+             "verify", "accept", "hedged", "retry", "preempt", "migrate",
+             "park", "degraded", "quarantine", "timeout", "shed", "failed",
+             "complete")
 
 
 @dataclass
@@ -77,6 +81,10 @@ class Decision:
     reason: str = ""
     # names of the topology's local tiers, stamped by the deciding policy
     local_tiers: FrozenSet[str] = frozenset({"edge"})
+    # cross-tier speculative decoding: (draft_tier, target_tier, k, alpha)
+    # stamped by the scheduler when the fusion tier matches the SpecConfig
+    # target and the acceptance EWMA clears the gate; None = don't
+    speculate: Optional[Tuple[str, str, int, float]] = None
 
     @property
     def any_cloud(self) -> bool:
@@ -114,6 +122,10 @@ class RequestRecord:
     warm_tokens: float = 0.0  # cached tokens whose prefill was skipped
     degraded: bool = False  # re-routed off an unavailable/quarantined tier
     tokens: List[int] = field(default_factory=list)  # live: streamed tokens
+    # speculative decoding: draft tokens proposed for / accepted by this
+    # request's verify loop (0/0 when it was never speculated)
+    drafted_tokens: int = 0
+    accepted_tokens: int = 0
     outcome: Optional["Outcome"] = None
 
     def mark(self, state: str, tier: str = "") -> None:
@@ -192,6 +204,9 @@ class Outcome:
     failed: bool = False  # terminal: never completed
     fail_reason: str = ""  # "retries" | "shed" | "" (completed)
     degraded: bool = False  # served, but re-routed off an unavailable tier
+    # speculative decoding (0/0 when the request was never speculated)
+    drafted_tokens: int = 0  # draft-tier proposals shipped for this request
+    accepted_tokens: int = 0  # proposals the target verified and committed
 
     @property
     def edge_flops(self) -> float:

@@ -14,7 +14,9 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.config import ComplexityConfig, PolicyConfig
+import dataclasses
+
+from repro.config import ComplexityConfig, PolicyConfig, SpecConfig
 from repro.core import complexity as cx
 from repro.core.policy import OffloadingPolicy
 from repro.core.request import Decision, ModalityInput, Request
@@ -25,11 +27,16 @@ class MoAOffScheduler:
     def __init__(self, policy: Optional[OffloadingPolicy] = None,
                  complexity_cfg: ComplexityConfig = ComplexityConfig(),
                  policy_cfg: PolicyConfig = PolicyConfig(),
-                 use_kernel: bool = True):
+                 use_kernel: bool = True,
+                 spec: Optional[SpecConfig] = None):
         self.policy = policy or OffloadingPolicy(policy_cfg)
         self.cc = complexity_cfg
         self.estimator = StateEstimator()
         self.use_kernel = use_kernel
+        # cross-tier speculative decoding: when set, requests whose fused
+        # generation lands on spec.target_tier are additionally stamped to
+        # draft on spec.draft_tier — the third choice next to local/offload
+        self.spec = spec
         self.score_time_s = 0.0  # cumulative modality-module cost (overhead claim)
         self.n_scored = 0
 
@@ -80,8 +87,36 @@ class MoAOffScheduler:
         scores = self.score(request)
         st = state or self.estimator.snapshot()
         decision = self.policy.decide(request, scores, st)
+        if self.spec is not None:
+            decision = self._maybe_speculate(decision, st)
         self.policy.update(st)
         return decision
+
+    def _maybe_speculate(self, decision: Decision,
+                         st: SystemState) -> Decision:
+        """Third routing choice next to {local, offload}: when the fused
+        generation lands on the SpecConfig target tier and the acceptance
+        EWMA clears ``min_accept``, stamp draft-and-verify onto the
+        decision. Lives here (not in the policies) so the ablation
+        baselines keep deciding exactly as before."""
+        sp = self.spec
+        topo = getattr(self.policy, "topology", None)
+        if topo is None:
+            return decision
+        try:
+            fusion = topo.fusion_tier(decision.routes)
+        except KeyError:
+            return decision
+        if fusion != sp.target_tier:
+            return decision  # generation isn't on the target: no verify
+        alpha = st.spec_accept if st.spec_accept is not None else (
+            sp.init_accept)
+        if alpha < sp.min_accept:
+            return decision  # drafts are being rejected: plain offload
+        return dataclasses.replace(
+            decision,
+            speculate=(sp.draft_tier, sp.target_tier, sp.draft_k, alpha),
+            reason=decision.reason + "+speculate")
 
     # -- feedback from the runtime (simulator / live server) -------------------
 
@@ -94,6 +129,7 @@ class MoAOffScheduler:
                 kv: Optional[Dict[str, float]] = None,
                 health: Optional[Dict[str, str]] = None,
                 replicas: Optional[Dict[str, List[float]]] = None,
+                acceptance: Optional[float] = None,
                 edge_load: Optional[float] = None,
                 cloud_load: Optional[float] = None) -> None:
         """Feed one batch of system observations into the EWMA estimator.
@@ -138,6 +174,8 @@ class MoAOffScheduler:
         if bandwidths:
             for tier, bps in bandwidths.items():
                 self.estimator.observe_bandwidth(bps, tier=tier)
+        if acceptance is not None:
+            self.estimator.observe_acceptance(acceptance)
         if latency_s is not None:
             self.estimator.observe_latency(latency_s)
             if hasattr(self.policy, "feedback"):

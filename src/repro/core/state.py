@@ -59,6 +59,10 @@ class SystemState:
         # [load per replica], a dead replica reads 1.0); empty on
         # single-engine backends and the analytic simulator
         self.replica_loads: Dict[str, List[float]] = {}
+        # speculative-decoding acceptance-rate EWMA (accepted/drafted of
+        # finished verify loops); None until the first observation — the
+        # scheduler then falls back to SpecConfig.init_accept
+        self.spec_accept: Optional[float] = None
 
     # -- per-tier access ----------------------------------------------------
 
@@ -202,6 +206,17 @@ class StateEstimator:
     def observe_latency(self, seconds: float) -> None:
         self._lat_window.append(float(seconds))
 
+    def observe_acceptance(self, rate: float) -> None:
+        """Speculative-decoding acceptance-rate feedback (accepted/drafted
+        of one finished verify loop), EWMA-smoothed like the loads."""
+        rate = min(max(float(rate), 0.0), 1.0)
+        prev = self.state.spec_accept
+        if prev is None:
+            self.state.spec_accept = rate
+            return
+        a = self.alpha
+        self.state.spec_accept = (1 - a) * prev + a * rate
+
     def p95_latency(self) -> float:
         if not self._lat_window:
             return 0.0
@@ -218,4 +233,5 @@ class StateEstimator:
         snap.kv_headroom = dict(s.kv_headroom)
         snap.health = dict(s.health)
         snap.replica_loads = {t: list(v) for t, v in s.replica_loads.items()}
+        snap.spec_accept = s.spec_accept
         return snap

@@ -195,6 +195,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
             t_compile = time.perf_counter()
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # older jax: one dict per program
+            cost = cost[0] if cost else {}
         shape = SHAPES[shape_name]
         hlo = analyze_hlo(compiled.as_text(), default_trip=cfg.num_layers)
 

@@ -26,7 +26,7 @@ import time
 import numpy as np
 
 from repro.config import (TOPOLOGIES, ResilienceConfig, ServingConfig,
-                          get_topology)
+                          SpecConfig, get_topology)
 from repro.data.synthetic import make_image
 from repro.serving.faults import FaultPlan
 from repro.serving.tiers import (ClusterServer, build_cluster_engines,
@@ -107,6 +107,15 @@ def main() -> None:
                          "most remaining decode work when a tier's "
                          "occupancy (active + queued) reaches this value "
                          "(0 = off; implies --migrate)")
+    ap.add_argument("--speculate", default=None, metavar="DRAFT:TARGET",
+                    help="cross-tier speculative decoding: the DRAFT tier "
+                         "drafts token blocks that the TARGET tier verifies "
+                         "in one batched decode step (e.g. edge:cloud); "
+                         "requests fused on TARGET speculate when the "
+                         "acceptance-rate EWMA clears SpecConfig.min_accept")
+    ap.add_argument("--draft-k", type=int, default=8,
+                    help="speculative draft block length (tokens drafted "
+                         "per verify round; only with --speculate)")
     ap.add_argument("--slo", type=float, default=5.0,
                     help="per-request SLO in seconds (drives EDF admission "
                          "and the on-time/goodput accounting)")
@@ -182,6 +191,20 @@ def main() -> None:
             health=args.quarantine_after > 0,
             quarantine_after=max(args.quarantine_after, 1),
             retry_backoff=args.retry_backoff, shed=args.shed)
+    spec = None
+    if args.speculate:
+        draft, sep, target = args.speculate.partition(":")
+        if not sep or not draft or not target:
+            raise SystemExit("--speculate wants DRAFT:TARGET, e.g. "
+                             "edge:cloud")
+        for name in (draft, target):
+            if name not in topo.names:
+                raise SystemExit(f"--speculate names unknown tier {name!r} "
+                                 f"(topology has {list(topo.names)})")
+        spec = SpecConfig(draft_tier=draft, target_tier=target,
+                          draft_k=args.draft_k)
+        print(f"speculative decoding: {draft} drafts k={args.draft_k}, "
+              f"{target} verifies")
     reps = parse_replicas(args.replicas)
     unknown = set(reps) - set(topo.names)
     if unknown:
@@ -204,7 +227,7 @@ def main() -> None:
                            hedge_in_service=args.hedge_in_service,
                            sessions=args.sessions > 0,
                            session_move_threshold=args.session_move_threshold,
-                           fault_plan=plan, resilience=resilience)
+                           fault_plan=plan, resilience=resilience, spec=spec)
 
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()
@@ -277,6 +300,14 @@ def main() -> None:
         print(f"sessions: {resumed} resumed turns, {hits} prefix hits, "
               f"{saved:.0f} cached tokens never re-prefilled, "
               f"{server.runtime.session_moves} parked-state moves")
+    if spec is not None:
+        drafted = sum(o.drafted_tokens for o in server.runtime.outcomes)
+        accepted = sum(o.accepted_tokens for o in server.runtime.outcomes)
+        spun = sum(o.drafted_tokens > 0 for o in server.runtime.outcomes)
+        rate = accepted / drafted if drafted else 0.0
+        print(f"speculation: {spun}/{len(results)} requests drafted on "
+              f"{spec.draft_tier} | {accepted}/{drafted} draft tokens "
+              f"accepted ({rate:.0%})")
     dec = sum(p.decode_tokens for p in server.pools.values())
     pre = sum(p.prefill_tokens for p in server.pools.values())
     enc = sum(p.encode_tokens for p in server.pools.values())

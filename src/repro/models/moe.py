@@ -25,6 +25,19 @@ from repro.config import ModelConfig
 from repro.models.layers import activation_fn, is_gated
 from repro.models.spec import ParamSpec
 
+if hasattr(jax, "shard_map"):  # jax >= 0.7: top-level API, check_vma kwarg
+    _shard_map = functools.partial(jax.shard_map, check_vma=False)
+else:  # older jax: experimental module, replication check is check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map_legacy
+
+    _shard_map = functools.partial(_shard_map_legacy, check_rep=False)
+
+if hasattr(jax.lax, "axis_size"):
+    _axis_size = jax.lax.axis_size
+else:  # older jax: derive the mesh-axis size via a collective
+    def _axis_size(axis_name):
+        return jax.lax.psum(1, axis_name)
+
 
 def moe_specs(cfg: ModelConfig, prefix_axes=()) -> dict:
     """up ("wi") and gate ("wg") are SEPARATE tensors (not a fused 2F dim):
@@ -185,7 +198,7 @@ def moe_dropping_local(params: dict, xt: jax.Array, cfg: ModelConfig,
     tp = 1
     e_lo = 0
     if model_axis is not None:
-        tp = jax.lax.axis_size(model_axis)
+        tp = _axis_size(model_axis)
         e_lo = jax.lax.axis_index(model_axis) * e_local
     num_experts = e_local * tp
     ids, w, probs = _router_topk(xt, params["router"], cfg.top_k)
@@ -242,7 +255,7 @@ def moe_dropping_forward(params: dict, x: jax.Array, cfg: ModelConfig,
             shared["shared_wg"] = params["shared_wg"]
             shared_spec["shared_wg"] = P(None, model_axis)
     wg = params.get("wg")
-    fn = jax.shard_map(
+    fn = _shard_map(
         body, mesh=mesh,
         in_specs=(P(batch_spec, None, None),          # x
                   P(None, None),                       # router replicated
@@ -252,7 +265,6 @@ def moe_dropping_forward(params: dict, x: jax.Array, cfg: ModelConfig,
                   shared_spec,
                   ),
         out_specs=(P(batch_spec, None, None), P()),
-        check_vma=False,
     )
     return fn(x, params["router"], params["wi"], wg, params["wo"], shared)
 
@@ -274,7 +286,7 @@ def moe_decode_2d_local(params: dict, xt: jax.Array, cfg: ModelConfig,
     """
     t, d = xt.shape
     e_local = params["wi"].shape[0]
-    dp = jax.lax.axis_size(data_axis)
+    dp = _axis_size(data_axis)
     e_lo = jax.lax.axis_index(data_axis) * e_local
     num_experts = e_local * dp
     ids, w, _ = _router_topk(xt, params["router"], cfg.top_k)
@@ -306,15 +318,14 @@ def moe_decode_2d_forward(params: dict, x: jax.Array, cfg: ModelConfig,
         return y.reshape(b, s, d)
 
     wg = params.get("wg")
-    fn = jax.shard_map(
+    fn = _shard_map(
         body, mesh=mesh,
         in_specs=(P(None, None, None),        # tokens replicated (tiny)
                   P(None, None),               # router replicated
                   P("data", None, "model"),    # wi: E over data, F over model
                   None if wg is None else P("data", None, "model"),
                   P("data", "model", None)),   # wo
-        out_specs=P(None, None, None),
-        check_vma=False)
+        out_specs=P(None, None, None))
     y = fn(x, params["router"], params["wi"], wg, params["wo"])
     if cfg.num_shared_experts:
         # shared expert outside the shard_map (plain TP einsum, XLA handles)

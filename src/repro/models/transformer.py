@@ -774,11 +774,15 @@ class DecoderLM:
                          cfg.vocab_size)[:, 0]
         return logits, new_cache
 
-    def decode_chunk(self, params, cache, batch, ctx=None):
+    def decode_chunk(self, params, cache, batch, ctx=None,
+                     all_logits=False):
         """Multi-token decode against the cache — the suffix prefill of a
         prefix-cache hit / resumed session. batch: tokens (B,S), absolute
         positions (B,S), optional lengths (B,) true counts for right-padded
-        rows. Returns (last-real-token logits (B,V), cache).
+        rows. Returns (last-real-token logits (B,V), cache), or with
+        ``all_logits=True`` the full per-position logits (B,S,V) — the
+        speculative-decoding verify pass samples the target's own token at
+        EVERY draft position from one chunk.
 
         One weights pass covers the whole suffix; attention masks by
         absolute position against the cached prefix (and the suffix's own
@@ -806,6 +810,11 @@ class DecoderLM:
                                                   cache, ctx)
         for key, val in layer_caches.items():
             new_cache[key] = val
+        if all_logits:
+            logits = unembed(hidden.astype(jnp.float32),
+                             self._unembed_table(params).astype(jnp.float32),
+                             cfg.vocab_size)
+            return logits, new_cache
         if "lengths" in batch:
             last = batch["lengths"].astype(jnp.int32) - 1  # (B,)
             hl = hidden[bi, last][:, None]
@@ -816,12 +825,14 @@ class DecoderLM:
                          cfg.vocab_size)[:, 0]
         return logits, new_cache
 
-    def decode_chunk_recurrent(self, params, cache, batch):
+    def decode_chunk_recurrent(self, params, cache, batch,
+                               all_logits=False):
         """Multi-token decode for the RECURRENT families (ssm/hybrid) — the
         suffix prefill of a prefix-cache hit / resumed session. batch:
         tokens (B,S), absolute positions (B,S) continuing the cached state
         (no padding: every token advances the recurrence). Returns
-        (last-token logits (B,V), cache).
+        (last-token logits (B,V), cache), or all per-position logits
+        (B,S,V) under ``all_logits=True`` (speculative verify).
 
         The cached state (conv window + SSM/LRU hidden) summarizes the
         whole prefix at a point in time, so the suffix replays in ONE
@@ -869,6 +880,10 @@ class DecoderLM:
             new_cache["index"] = ((idx + s) % w).astype(jnp.int32)
 
         x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        if all_logits:
+            return unembed(x.astype(jnp.float32),
+                           self._unembed_table(params).astype(jnp.float32),
+                           cfg.vocab_size), new_cache
         logits = unembed(x[:, -1:].astype(jnp.float32),
                         self._unembed_table(params).astype(jnp.float32),
                         cfg.vocab_size)[:, 0]

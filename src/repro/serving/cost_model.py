@@ -10,6 +10,8 @@ import functools
 from dataclasses import dataclass
 from typing import Dict, Optional
 
+import numpy as np
+
 from repro.config import ModelConfig, TierConfig
 from repro.core.request import ModalityInput, Request
 
@@ -152,6 +154,65 @@ def embedding_bytes(cfg: ModelConfig) -> float:
     ``TierEngine.encode_image`` payload)."""
     return float((cfg.num_patches or 256)
                  * (cfg.frontend_dim or cfg.d_model) * 4.0)
+
+
+# -- cross-tier speculative decoding ------------------------------------------
+
+
+def speculation_uplink_bytes(decode_tokens: int, k: int,
+                             accept_rate: float) -> float:
+    """Expected draft-block bytes riding the target tier's uplink for one
+    speculated request: every verify round ships ``k`` proposed token ids
+    (priced like the embed_bytes fusion uplink — one lump charged at
+    arrival by both execution backends)."""
+    a = min(max(float(accept_rate), 0.0), 1.0)
+    per_round = a * k + 1.0  # expected commits per round (accepts + bonus)
+    rounds = float(np.ceil(max(int(decode_tokens), 0) / per_round))
+    return rounds * k * RESPONSE_BYTES_PER_TOKEN
+
+
+def speculation_costs(target_cfg: ModelConfig, draft_cfg: ModelConfig,
+                      target_tier: TierConfig, draft_tier: TierConfig,
+                      decode_tokens: int, context_len: int, k: int,
+                      accept_rate: float,
+                      rtt_s: float = 0.0) -> Dict[str, float]:
+    """Analytic schedule of draft-and-verify decode for one request.
+
+    Per round: ``k`` sequential decode steps on the DRAFT tier, one
+    round-trip shipping the draft block, and ONE chunked verify on the
+    TARGET — a single weights pass covering ``k+1`` positions plus their
+    KV reads, which is the whole speedup: the target pays its memory-bound
+    weight read once per ``accept_rate*k + 1`` committed tokens instead of
+    once per token. Expected commits per round follow the acceptance EWMA;
+    total commits always equal ``decode_tokens`` (output is exactly the
+    target-only stream).
+    """
+    a = min(max(float(accept_rate), 0.0), 1.0)
+    per_round = a * k + 1.0
+    d = max(int(decode_tokens), 0)
+    rounds = int(np.ceil(d / per_round)) if d else 0
+    drafted = rounds * k
+    accepted = max(d - rounds, 0)  # each round commits accepts + 1 bonus
+    # draft side: k sequential single-token steps per round
+    df = db = 0.0
+    for i in range(k):
+        df += decode_flops(draft_cfg, context_len + i)
+        db += decode_hbm_bytes(draft_cfg, context_len + i)
+    draft_round_s = phase_latency(df, db, draft_tier)
+    # target side: one chunk = one weights read + (k+1) tokens' compute/KV
+    vf = decode_flops(target_cfg, context_len) * (k + 1)
+    vb = (decode_hbm_bytes(target_cfg, context_len)
+          + (decode_hbm_bytes(target_cfg, context_len)
+             - 2.0 * _active_params(target_cfg)) * k)
+    verify_round_s = phase_latency(vf, vb, target_tier)
+    link_round_s = float(rtt_s)  # block bytes ride the arrival uplink lump
+    seconds = rounds * (draft_round_s + link_round_s + verify_round_s)
+    return {"rounds": rounds, "drafted": drafted, "accepted": accepted,
+            "draft_s": rounds * draft_round_s,
+            "verify_s": rounds * verify_round_s,
+            "link_s": rounds * link_round_s, "seconds": seconds,
+            "draft_flops": rounds * df, "draft_hbm_bytes": rounds * db,
+            "verify_flops": rounds * vf, "verify_hbm_bytes": rounds * vb}
 
 
 # -- cross-tier KV migration -------------------------------------------------

@@ -298,6 +298,13 @@ class TierEngine:
         self.resumed_sessions = 0
         self.resumed_tokens = 0
         self.parks = 0
+        # cross-tier speculative decoding: tokens this engine PROPOSED as a
+        # draft, draft tokens this engine ACCEPTED while verifying as a
+        # target, and verify rounds run (accepted/drafted is the live
+        # acceptance rate the scheduler's EWMA tracks)
+        self.drafted_tokens = 0
+        self.accepted_tokens = 0
+        self.spec_rounds = 0
         # cluster-runtime hooks: admission + per-token streaming callbacks
         # (rid, t) and (rid, token, t); None = standalone engine
         self.on_admit: Optional[Callable[[int, float], None]] = None
@@ -448,6 +455,11 @@ class TierEngine:
         self._prefill_insert = jax.jit(
             self._make_prefill_insert(), donate_argnums=(1,),
             static_argnums=(6,) if self._pt is not None else ())
+        # speculative-decoding jits, built lazily on first use: the verify
+        # chunk (decode_chunk/-_recurrent with all_logits) and the batch-1
+        # autoregressive draft scan
+        self._spec_chunk_fn = None
+        self._spec_draft_fn = None
 
     # ------------------------------------------------------------------
     # jitted hot-path builders
@@ -1464,6 +1476,400 @@ class TierEngine:
         if self.cfg.frontend == "vision_stub" and "patches" in extras:
             return self.cfg.num_patches
         return 0
+
+    # -- cross-tier speculative decoding (draft-and-verify) -----------------
+    #
+    # The cluster runtime drives one verify loop per speculated request:
+    #
+    #   target: submit + _admit (a NORMAL slot)    draft: spec_admit_quiet
+    #   target: spec_begin (trim pages to the written frontier)
+    #   loop:   draft.spec_draft(k) -> target.spec_verify(block)
+    #           -> draft.spec_sync(committed)
+    #   target: spec_release (restore the eager full-budget reservation
+    #           before the slot returns to the fused step() path)
+    #
+    # spec_verify feeds [pending, d_1..d_k] through ONE chunked decode with
+    # per-position logits, samples the target's OWN token at every position
+    # under the slot's key stream (one split per COMMITTED token — the
+    # fused path's per-step math), commits the longest prefix on which the
+    # draft agreed plus the target's correction token, and rolls the cache
+    # back past the first mismatch (dense: pos/index rewind before the
+    # batch-1 insert; recurrent: re-feed the committed prefix from the
+    # untouched pre-verify rows; paged: decref the speculative tail pages).
+    # The committed stream is BY CONSTRUCTION the target-only stream, so
+    # speculation changes latency, never output.
+
+    def _make_spec_draft(self):
+        """K autoregressive decode steps on a BATCH-1 cache copy — the
+        draft side of speculation. Same per-step split/sample math as the
+        fused block; the cache copy is discarded, so proposing never
+        mutates the draft slot (only verified commits do, via spec_sync)."""
+        model = self.model
+        temp = float(self.temp)
+        max_seq = int(self.serving.max_seq)
+
+        def draft(params, cache1, key, tok, pos, teff, k):
+            ctx = teff if teff < max_seq else None
+
+            def body(carry, _):
+                cache1, key, tok, pos = carry
+                logits, cache2 = model.decode_step(
+                    params, cache1,
+                    {"tokens": tok[None, None], "positions": pos[None]},
+                    ctx=ctx)
+                if temp > 0:
+                    key, sub = jax.random.split(key, 2)
+                    nxt = jax.random.categorical(sub, logits[0] / temp)
+                else:
+                    nxt = jnp.argmax(logits[0], axis=-1)
+                nxt = nxt.astype(jnp.int32)
+                return (cache2, key, nxt, pos + 1), nxt
+
+            (_, key, *_), toks = jax.lax.scan(
+                body, (cache1, key, jnp.asarray(tok, jnp.int32),
+                       jnp.asarray(pos, jnp.int32)), None, length=k)
+            return toks, key
+
+        return draft
+
+    def _ensure_spec_chunk(self):
+        if self._spec_chunk_fn is not None:
+            return self._spec_chunk_fn
+        model, max_seq = self.model, self.serving.max_seq
+        if self._sliceable:
+            fn = lambda p, c, b, teff: model.decode_chunk(
+                p, c, b, ctx=(teff if teff < max_seq else None),
+                all_logits=True)
+        else:
+            fn = lambda p, c, b, teff: model.decode_chunk_recurrent(
+                p, c, b, all_logits=True)
+        self._spec_chunk_fn = jax.jit(fn, donate_argnums=(1,),
+                                      static_argnums=(3,))
+        return self._spec_chunk_fn
+
+    def _spec_cache1(self, slot: int):
+        """Batch-1 cache holding fresh COPIES of ``slot``'s rows (gathered
+        through the page table on paged engines) — safe to donate to the
+        verify/draft jits; the slot itself is untouched until an explicit
+        ``_insert_cache``."""
+        if self._pt is not None:
+            rows = self._gather_slot_rows(slot)
+        else:
+            rows = {name: jnp.take(leaf, slot, axis=bax)
+                    for name, leaf, bax in self._leaf_rows()}
+        tmpl = (self._dense_spec_tree if self._dense_spec_tree is not None
+                else self.cache)
+
+        def build(path, leaf):
+            name = jax.tree_util.keystr(path)
+            bax = self._axis_by_name[name][0]
+            return jnp.expand_dims(rows[name].astype(leaf.dtype), bax)
+
+        return jax.tree_util.tree_map_with_path(build, tmpl)
+
+    def spec_slot(self, rid: int) -> Optional[int]:
+        """Slot currently serving ``rid`` (None: queued/finished/unknown)."""
+        for i, s in enumerate(self.slots):
+            if s is not None and s.rid == rid:
+                return i
+        return None
+
+    def _spec_resize_pages(self, slot: int, rows: int) -> bool:
+        """Resize ``slot``'s page reservation to exactly cover ``rows``
+        cache rows. The verify loop grows ahead of each chunk and shrinks
+        back to the committed frontier afterwards — the decref IS the
+        rejected speculative tail's release. Only pages strictly beyond
+        the written frontier ever trim, so CoW pages shared with the
+        prefix store (always behind the frontier) are never touched.
+        Returns False when the pool cannot grow."""
+        if self._pt is None:
+            return True  # dense engine / recurrent flat charge: no-op
+        need = self._page_need(min(int(rows), self.serving.max_seq))
+        have = self._slot_pages[slot]
+        if need > len(have):
+            fresh = self._reserve_pages(need - len(have))
+            if fresh is None:
+                return False
+            have.extend(fresh)
+        elif need < len(have):
+            tail = have[need:]
+            del have[need:]
+            self.pool.decref(tail)
+        row = np.zeros((self._n_pt,), np.int32)
+        row[:len(have)] = have
+        self._pt[slot] = row
+        cache = dict(self.cache)
+        cache["pages"] = cache["pages"].at[slot].set(jnp.asarray(row))
+        self.cache = cache
+        # allocator invariants: rejected-tail pages really came back, the
+        # table matches the reservation, and every pool page is free XOR
+        # referenced (refcount leaks fail loudly here, not at eviction)
+        assert len(self._slot_pages[slot]) == need, (
+            f"slot {slot}: reservation {len(self._slot_pages[slot])} != "
+            f"needed {need} pages")
+        self.pool.check()
+        return True
+
+    def spec_admit_quiet(self, rid: int, tokens: np.ndarray, max_new: int,
+                         extras: Optional[Dict[str, Any]] = None
+                         ) -> Optional[int]:
+        """Admit a DRAFT-side shadow of a speculated request: a normal slot
+        (single-job legacy prefill path) admitted with the streaming hooks
+        muted — the target's hooks are the request's real event stream and
+        the runtime must not see admit/token events twice. Returns the
+        slot, or None when admission failed (no slot / no pages / finished
+        straight out of prefill), in which case no trace remains."""
+        slot = self._free_slot()
+        if slot is None:
+            return None
+        job = {"rid": int(rid), "tokens": np.asarray(tokens),
+               "max_new": int(max_new), "extras": extras or {},
+               "deadline": None, "session": None, "t": time.monotonic()}
+        if self.pool is not None:
+            vis = self._prompt_prefix(job["extras"])
+            total = min(vis + len(job["tokens"]) + int(max_new),
+                        self.serving.max_seq)
+            pages = self._reserve_pages(self._page_need(total))
+            if pages is None:
+                return None
+            self._assign_pages(slot, pages)
+        hooks = (self.on_admit, self.on_token, self.on_warm, self.on_park)
+        self.on_admit = self.on_token = self.on_warm = self.on_park = None
+        try:
+            toks = job["tokens"][None]
+            batch = {"tokens": jnp.asarray(toks, jnp.int32)}
+            for k, v in job["extras"].items():
+                batch[k] = jnp.asarray(v)[None]
+            logits, cache1 = self._prefill1(self.params, batch)
+            self._insert_cache(cache1, slot)
+            prefix = self._prompt_prefix(job["extras"])
+            self._start_seq(job, slot, toks.shape[1] + prefix,
+                            np.asarray(logits)[0])
+        finally:
+            self.on_admit, self.on_token, self.on_warm, self.on_park = hooks
+        st = self.slots[slot]
+        if st is None or st.rid != rid:
+            # finished straight out of prefill (EOS / budget / cap): a
+            # draft shadow has no consumer — drop the finished record
+            self.finished = [f for f in self.finished if f.rid != rid]
+            return None
+        self.journal.append(("spec_admit", {"rid": rid, "slot": slot}))
+        return slot
+
+    def spec_set_pending(self, rid: int, token: int) -> None:
+        """Overwrite the draft slot's pending (last sampled, not yet in
+        cache) token with the TARGET's — after admission and after every
+        verify round the draft must continue from what the target actually
+        committed, not from its own independent sample."""
+        slot = self.spec_slot(rid)
+        if slot is None:
+            return
+        self.slots[slot].generated[-1] = int(token) % self.cfg.vocab_size
+
+    def spec_begin(self, rid: int) -> bool:
+        """Start speculating on a target slot: trim the eager full-budget
+        page reservation down to the written frontier so verify rounds can
+        grow/shrink page-exactly. Balanced by ``spec_release``."""
+        slot = self.spec_slot(rid)
+        if slot is None:
+            return False
+        self._spec_resize_pages(slot, int(self.positions[slot]))
+        self.journal.append(("spec_begin", {"rid": rid}))
+        return True
+
+    def spec_release(self, rid: int) -> None:
+        """Stop speculating: restore the slot's eager full-budget page
+        reservation (remaining decode + the pending token's row) so the
+        fused ``step()`` path can run it to completion without mid-decode
+        page faults — its writes assume the admission-time reservation."""
+        slot = self.spec_slot(rid)
+        if slot is None:
+            return
+        st = self.slots[slot]
+        total = min(int(self.positions[slot])
+                    + max(0, st.max_new - len(st.generated)) + 1,
+                    self.serving.max_seq)
+        ok = self._spec_resize_pages(slot, total)
+        # the verify loop only ever GREW past the frontier with pages it
+        # returns before anyone else allocates, so the regrow cannot starve
+        assert ok, f"spec_release could not restore rid {rid}'s reservation"
+        self.journal.append(("spec_release", {"rid": rid}))
+
+    def spec_draft(self, rid: int, k: int) -> Optional[np.ndarray]:
+        """Propose ``k`` tokens for ``rid`` by running the batch-1 draft
+        scan on a COPY of the slot's cache. The slot itself (rows,
+        position, generated) is not advanced — ``spec_sync`` does that once
+        the target reports what it committed."""
+        slot = self.spec_slot(rid)
+        if slot is None:
+            return None
+        st = self.slots[slot]
+        p = int(self.positions[slot])
+        k = min(int(k), self.serving.max_seq - 1 - p)
+        if k <= 0:
+            return None
+        cache1 = self._spec_cache1(slot)
+        teff = (self._context_bucket(p + k + 1) if self._ctx_buckets
+                else self.serving.max_seq)
+        if self._spec_draft_fn is None:
+            self._spec_draft_fn = jax.jit(self._make_spec_draft(),
+                                          donate_argnums=(1,),
+                                          static_argnums=(5, 6))
+        toks, key2 = self._spec_draft_fn(
+            self.params, cache1, self._keys[slot], int(st.generated[-1]),
+            p, teff, k)
+        if self.temp > 0:
+            self._keys = self._keys.at[slot].set(key2)
+        self.drafted_tokens += k
+        self.journal.append(("spec_draft", {"rid": rid, "k": k}))
+        return np.asarray(toks)
+
+    def spec_verify(self, rid: int, draft) -> Optional[Dict[str, Any]]:
+        """Verify a draft block against this TARGET slot in one chunked
+        forward. Feeds ``[pending, d_1..d_k]`` at positions ``p..p+k``,
+        samples the target's own token at every position under the slot's
+        key stream (one split per COMMITTED token — exactly what the fused
+        path would have consumed, so a rejected draft never desyncs the
+        stream), commits the agreeing prefix + the correction token, and
+        rolls back everything past the first mismatch. Returns the round's
+        bookkeeping, or None when the slot is gone / nothing can verify."""
+        slot = self.spec_slot(rid)
+        if slot is None:
+            return None
+        st = self.slots[slot]
+        p = int(self.positions[slot])
+        draft = [int(x) for x in np.asarray(draft).reshape(-1)]
+        k = min(len(draft), self.serving.max_seq - 1 - p)
+        if k <= 0:
+            return None
+        draft = draft[:k]
+        s = k + 1
+        while s > 1 and not self._spec_resize_pages(slot, p + s):
+            k -= 1
+            s -= 1
+            draft = draft[:k]  # pool-starved: verify a shorter block
+        if not self._spec_resize_pages(slot, p + s):
+            return None
+        cache1 = self._spec_cache1(slot)
+        toks = np.asarray([int(st.generated[-1])] + draft, np.int32)
+        poss = p + np.arange(s, dtype=np.int32)
+        batch = {"tokens": jnp.asarray(toks[None]),
+                 "positions": jnp.asarray(poss[None])}
+        teff = (self._context_bucket(p + s + 1) if self._ctx_buckets
+                else self.serving.max_seq)
+        chunk = self._ensure_spec_chunk()
+        logits_all, cache2 = chunk(self.params, cache1, batch, teff)
+        logits_all = np.asarray(logits_all)[0]  # (s, V)
+        cap = self.serving.max_seq
+        key = self._keys[slot]
+        commits: List[int] = []
+        finished = False
+        for i in range(s):
+            if self.temp > 0:
+                key, sub = jax.random.split(key, 2)
+                nxt = int(jax.random.categorical(
+                    sub, jnp.asarray(logits_all[i]) / self.temp))
+            else:
+                nxt = int(np.argmax(logits_all[i]))
+            commits.append(nxt)
+            if (nxt == self.eos_id
+                    or len(st.generated) + len(commits) >= st.max_new
+                    or p + len(commits) + 1 >= cap):
+                finished = True
+                break
+            if i < k and draft[i] != nxt:
+                break  # first mismatch: the tail is dead
+        m = len(commits)  # cache rows now valid: [pending] + accepted
+        commit_end = p + m
+        if self._sliceable:
+            # rewind BEFORE the insert, mirroring the warm-admission pad
+            # re-mask: rejected rows read as holes, the write index resumes
+            # at the committed frontier
+            cache2 = dict(cache2)
+            cache2["pos"] = jnp.where(cache2["pos"] < commit_end,
+                                      cache2["pos"], -1)
+            cache2["index"] = jnp.full_like(cache2["index"],
+                                            commit_end % cap)
+            self._insert_cache(cache2, slot)
+        elif m == s:
+            self._insert_cache(cache2, slot)  # nothing to rewind
+        else:
+            # recurrent state is a point-in-time snapshot — it cannot
+            # rewind. Re-feed ONLY the committed prefix from the slot's
+            # untouched pre-verify rows (the donated cache1 was a copy).
+            redo = self._spec_cache1(slot)
+            rb = {"tokens": jnp.asarray(toks[None, :m]),
+                  "positions": jnp.asarray(poss[None, :m])}
+            _, redo = chunk(self.params, redo, rb, teff)
+            self._insert_cache(redo, slot)
+        if self.temp > 0:
+            self._keys = self._keys.at[slot].set(jnp.asarray(key))
+        self.positions[slot] = commit_end
+        self._spec_resize_pages(slot, commit_end)  # decref rejected tail
+        self.accepted_tokens += m - 1
+        self.spec_rounds += 1
+        self.last_heartbeat = time.monotonic()
+        self.journal.append(("spec_verify", {"rid": rid, "drafted": k,
+                                             "accepted": m - 1,
+                                             "rolled_back": s - m}))
+        # commit bookkeeping token-by-token with the step() stop rules —
+        # committed tokens are real decode output (counters, streaming
+        # hooks, finish), the rolled-back tail never counts toward
+        # decode_tokens or max_new
+        now = time.monotonic()
+        for j, tok in enumerate(commits, start=1):
+            if self.slots[slot] is not st:
+                break  # a callback cancelled/finished the request
+            st.generated.append(tok)
+            self.decode_tokens += 1
+            if self.on_token is not None:
+                self.on_token(st.rid, tok, now)
+            if (tok == self.eos_id or len(st.generated) >= st.max_new
+                    or p + j + 1 >= cap):
+                self._finish_slot(slot, now)
+                break
+        done = finished or self.slots[slot] is not st
+        return {"committed": commits, "accepted": m - 1, "drafted": k,
+                "rolled_back": s - m, "finished": done}
+
+    def spec_sync(self, rid: int, committed: List[int]) -> bool:
+        """Draft-side absorb of one verify round: replay the target's
+        committed tokens into the draft cache in one chunk (the old pending
+        token + all but the last commit), making the final commit the new
+        pending token. The rejected tail was never installed here, so
+        nothing rewinds. Returns False when the draft cache is out of room
+        (caller stops speculating)."""
+        slot = self.spec_slot(rid)
+        if slot is None:
+            return False
+        st = self.slots[slot]
+        committed = [int(t) % self.cfg.vocab_size for t in committed]
+        m = len(committed)
+        if m == 0:
+            return True
+        p = int(self.positions[slot])
+        if p + m + 1 >= self.serving.max_seq:
+            return False
+        feed = np.asarray([int(st.generated[-1])] + committed[:-1], np.int32)
+        cache1 = self._spec_cache1(slot)
+        poss = p + np.arange(m, dtype=np.int32)
+        batch = {"tokens": jnp.asarray(feed[None]),
+                 "positions": jnp.asarray(poss[None])}
+        teff = (self._context_bucket(p + m + 1) if self._ctx_buckets
+                else self.serving.max_seq)
+        if self._sliceable:
+            _, cache1 = self._warm_chunk(self.params, cache1, batch, teff)
+        elif self._warm_chunk_recurrent is not None:
+            _, cache1 = self._warm_chunk_recurrent(self.params, cache1,
+                                                   batch)
+        else:
+            _, cache1 = self._ensure_spec_chunk()(self.params, cache1,
+                                                  batch, teff)
+        self._insert_cache(cache1, slot)
+        st.generated.extend(committed)
+        self.positions[slot] = p + m
+        self.journal.append(("spec_sync", {"rid": rid, "tokens": m}))
+        return True
 
     # -- admission ----------------------------------------------------------
 

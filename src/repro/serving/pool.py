@@ -37,7 +37,8 @@ from repro.serving.transport import (FinishedSeq, LocalTransport,
 
 AGG_COUNTERS = ("decode_tokens", "prefill_tokens", "encode_tokens",
                 "prefix_hits", "prefix_hit_tokens", "resumed_sessions",
-                "resumed_tokens", "parks")
+                "resumed_tokens", "parks", "drafted_tokens",
+                "accepted_tokens", "spec_rounds")
 
 
 class EnginePool:

@@ -36,7 +36,7 @@ from typing import Callable, Dict, List, Optional, Protocol, Tuple
 import numpy as np
 
 from repro.config import (ClusterTopology, ModelConfig, ResilienceConfig,
-                          ServingConfig, TierSpec)
+                          ServingConfig, SpecConfig, TierSpec)
 from repro.core.request import Job, Outcome, Request, RequestRecord
 from repro.core.scheduler import MoAOffScheduler
 from repro.serving import cost_model as cm
@@ -127,9 +127,19 @@ class ClusterRuntime:
                  hedge_in_service: bool = False, sessions: bool = False,
                  session_move_threshold: int = 0,
                  resilience: Optional[ResilienceConfig] = None,
-                 fault_plan: Optional[FaultPlan] = None):
+                 fault_plan: Optional[FaultPlan] = None,
+                 spec: Optional[SpecConfig] = None):
         self.topology = topology
         self.scheduler = scheduler
+        # cross-tier speculative decoding (draft-and-verify): validate the
+        # pairing against the topology and share the config with the
+        # scheduler (which stamps decisions) unless it brought its own
+        if spec is not None:
+            topology.tier(spec.draft_tier)
+            topology.tier(spec.target_tier)
+            if getattr(scheduler, "spec", None) is None:
+                scheduler.spec = spec
+        self.spec = spec
         self.policy_name = policy_name
         self.backend = backend
         self.hedge_after_s = hedge_after_s
@@ -320,6 +330,17 @@ class ClusterRuntime:
             rec.mark("sticky", sticky)
         job = Job(request=req, decision=decision, fusion=fusion, tier=fusion,
                   t_start=ev.t, record=rec)
+        # cross-tier speculative decoding: honor the scheduler's stamp only
+        # when the fused generation still lands on the target tier (the
+        # sticky/move/degraded overrides above may have re-homed it) and
+        # the draft tier exists here
+        sp = decision.speculate
+        if (self.spec is not None and sp is not None and fusion == sp[1]
+                and sp[0] in self.specs and sticky is None
+                and move_src is None and not rec.degraded):
+            job.payload["speculate"] = {"draft": sp[0], "target": sp[1],
+                                        "k": int(sp[2]),
+                                        "alpha": float(sp[3])}
         if move_src is not None:
             self._session_move(ev.t + score_cost, job, move_src)
         # partial offload (§3.2): modalities routed off the fusion tier are
@@ -351,6 +372,14 @@ class ClusterRuntime:
                       if m.kind == "image"
                       and decision.routes.get(name, fusion) != fusion)
             remote_bytes[fusion] += emb
+            spx = job.payload.get("speculate")
+            if spx is not None:
+                # draft token blocks ride the target's uplink — priced as
+                # one arrival-time lump like the embed_bytes above (the
+                # live backend ships the real bytes round by round over
+                # the same link)
+                remote_bytes[fusion] += cm.speculation_uplink_bytes(
+                    req.decode_tokens, spx["k"], spx["alpha"])
         job.transfer_bytes = sum(remote_bytes.values())
         if remote_bytes:
             # each remote tier's payload crosses its OWN uplink; the links
@@ -663,6 +692,10 @@ class ClusterRuntime:
         rec = job.record
         rec.mark("complete", tier)
         self.scheduler.observe(latency_s=latency_s)
+        if rec.drafted_tokens > 0:
+            # acceptance-rate feedback: the EWMA gates future speculation
+            self.scheduler.observe(
+                acceptance=rec.accepted_tokens / rec.drafted_tokens)
         if self.health is not None:
             self.health.record_success(tier)
         out = Outcome(
@@ -674,7 +707,8 @@ class ClusterRuntime:
             on_time=latency_s <= req.slo_s, truncated=rec.truncated,
             migrated=rec.migrated, migration_bytes=rec.migration_bytes,
             warm=rec.warm, warm_tokens=rec.warm_tokens,
-            degraded=rec.degraded)
+            degraded=rec.degraded, drafted_tokens=rec.drafted_tokens,
+            accepted_tokens=rec.accepted_tokens)
         rec.outcome = out
         self.outcomes.append(out)
         return out
@@ -1222,17 +1256,45 @@ class AnalyticBackend:
         costs = cm.request_phase_costs(mcfg, text_tokens, image_tokens,
                                        decode_tokens, tcfg,
                                        cached_tokens=cached_tokens)
-        sec = costs["prefill"].seconds + costs["decode"].seconds
-        flops = costs["prefill"].flops + costs["decode"].flops
+        decode_s = costs["decode"].seconds
+        decode_flops = costs["decode"].flops
+        spec_stats: Dict[str, float] = {}
+        spx = job.payload.get("speculate")
+        if (spx is not None and tier == spx["target"]
+                and spx["draft"] in self.models):
+            # draft-and-verify decode: the draft tier proposes k-token
+            # blocks, the target verifies each block in ONE chunked pass —
+            # its memory-bound weight read amortizes over the accepted
+            # prefix. Decode seconds come from the speculative schedule;
+            # the target's flops become the (k+1)-wide verify chunks, and
+            # the draft tier's work is stashed for _on_service_done to
+            # charge to the DRAFT station (like off-fusion ``encode``).
+            sc = cm.speculation_costs(
+                mcfg, self.models[spx["draft"]], tcfg,
+                self.specs[spx["draft"]], decode_tokens,
+                text_tokens + image_tokens, spx["k"], spx["alpha"],
+                rtt_s=self.specs[spx["draft"]].rtt_s or tcfg.rtt_s)
+            decode_s = sc["seconds"]
+            decode_flops = sc["verify_flops"]
+            spec_stats = {"spec_rounds": sc["rounds"],
+                          "spec_drafted": sc["drafted"],
+                          "spec_accepted": sc["accepted"],
+                          "spec_draft_flops": sc["draft_flops"],
+                          "spec_draft_hbm": sc["draft_hbm_bytes"],
+                          "spec_draft_s": sc["draft_s"]}
+        sec = costs["prefill"].seconds + decode_s
+        flops = costs["prefill"].flops + decode_flops
         kv = cm._kv_bytes_per_token(mcfg) * (text_tokens + image_tokens
                                              + req.decode_tokens)
         mem_byte_s = (cm.weights_bytes(mcfg) / max(tcfg.servers, 1)
                       + kv) * sec
-        return {"seconds": sec, "flops": flops, "mem_byte_s": mem_byte_s,
-                "prefill_s": costs["prefill"].seconds,
-                "decode_s": costs["decode"].seconds,
-                "decode_flops": costs["decode"].flops,
-                "context_tokens": float(text_tokens + image_tokens)}
+        out = {"seconds": sec, "flops": flops, "mem_byte_s": mem_byte_s,
+               "prefill_s": costs["prefill"].seconds,
+               "decode_s": decode_s,
+               "decode_flops": decode_flops,
+               "context_tokens": float(text_tokens + image_tokens)}
+        out.update(spec_stats)
+        return out
 
     def encode(self, t: float, job: Job) -> None:
         """Partial-offload encode work: every modality routed away from the
@@ -1301,7 +1363,20 @@ class AnalyticBackend:
                                service_decode_flops=c["decode_flops"],
                                service_context=c["context_tokens"],
                                cost_tier=job.tier)
+            if "spec_rounds" in c:
+                job.payload["spec_stats"] = {
+                    k: c[k] for k in ("spec_rounds", "spec_drafted",
+                                      "spec_accepted", "spec_draft_flops",
+                                      "spec_draft_hbm", "spec_draft_s")}
+            else:
+                job.payload.pop("spec_stats", None)
         job.record.mark("serve", job.tier)
+        if job.payload.get("spec_stats"):
+            # one draft/verify triplet per request (not per round) so the
+            # analytic trace matches the live co-drive's marks
+            spx = job.payload["speculate"]
+            job.record.mark("draft", spx["draft"])
+            job.record.mark("verify", job.tier)
         job.payload["t_serve"] = t
         self.active[job.tier].append(job)
         sec = job.payload["service_s"]
@@ -1381,6 +1456,20 @@ class AnalyticBackend:
         mem = job.payload["service_mem"]
         st.flops += flops
         st.mem_byte_s += mem
+        sstats = job.payload.get("spec_stats")
+        if sstats:
+            # the verify loop is done: commit the acceptance ledger and
+            # charge the draft tier's station for its proposal work
+            # (counters only, like off-fusion ``encode`` — drafting rides
+            # between the draft tier's own decode steps)
+            spx = job.payload["speculate"]
+            job.record.mark("accept", tier)
+            job.record.drafted_tokens += int(sstats["spec_drafted"])
+            job.record.accepted_tokens += int(sstats["spec_accepted"])
+            dst = self.stations.get(spx["draft"])
+            if dst is not None:
+                dst.flops += sstats["spec_draft_flops"]
+                dst.mem_byte_s += sstats["spec_draft_hbm"]
         spec = self.specs[tier]
         # return path: response tokens ride the serving tier's downlink
         down = cm.downlink_seconds(req.decode_tokens, spec)
@@ -1673,7 +1762,94 @@ class LiveBackend:
                 self._snapshots[key] = pool.snapshot_replica(r)
                 self._since_snap[key] = []
             self._since_snap[key].append(job)
+        spx = job.payload.get("speculate")
+        if spx is not None and tier == spx["target"]:
+            if self._spec_drive(t, pool, r, tier, job, spx):
+                return  # submitted (and possibly fully decoded) in-drive
         self._engine_submit(pool, r, tier, job)
+
+    def _spec_drive(self, t: float, pool, r: int, tier: str, job: Job,
+                    spx: Dict) -> bool:
+        """Cross-tier speculative decoding, live: admit the request on the
+        TARGET replica, shadow-admit its prompt on a DRAFT replica, then
+        co-drive draft→verify rounds synchronously (``step()`` only runs
+        from ``advance``/poll, so nothing races the slots). Every exit path
+        degrades to the plain fused decode: the target slot is always left
+        in a state ``step()`` can finish, and the draft shadow is always
+        cancelled. Returns True once the job was submitted to the target —
+        the caller must not submit it again."""
+        from repro.serving.transport import LocalTransport
+
+        dpool = self.pools.get(spx["draft"])
+        if dpool is None:
+            return False
+        # co-driving needs direct engine access on BOTH sides: the chosen
+        # target replica if it is local, else any local one with room
+        rt_idx = None
+        if isinstance(pool.transports[r], LocalTransport):
+            rt_idx = r
+        else:
+            for i, tr in enumerate(pool.transports):
+                if isinstance(tr, LocalTransport) and tr.alive \
+                        and tr.free_slots() > 0:
+                    rt_idx = i
+                    break
+        rd_idx = None
+        for i, tr in enumerate(dpool.transports):
+            if isinstance(tr, LocalTransport) and tr.alive \
+                    and tr.free_slots() > 0:
+                rd_idx = i
+                break
+        if rt_idx is None or rd_idx is None:
+            return False  # process-only replicas / no room: plain decode
+        teng = pool.transports[rt_idx].engine
+        deng = dpool.transports[rd_idx].engine
+        req = job.request
+        rid = req.rid
+        self._engine_submit(pool, rt_idx, tier, job)
+        teng._admit()
+        slot_t = teng.spec_slot(rid)
+        if slot_t is None:
+            # queued behind a full engine (or finished straight out of
+            # prefill): the normal step()/harvest path takes over
+            return True
+        k = int(spx["k"])
+        ids, extras, _ = self._prepare_prompt(dpool.transports[rd_idx], job)
+        slot_d = deng.spec_admit_quiet(rid, ids,
+                                       max_new=req.decode_tokens + k + 2,
+                                       extras=extras)
+        if slot_d is None:
+            return True  # no draft shadow: plain fused decode
+        # the draft continues from the target's ACTUAL first token
+        deng.spec_set_pending(rid, teng.slots[slot_t].generated[-1])
+        job.record.mark("draft", spx["draft"])
+        teng.spec_begin(rid)
+        drafted = accepted = 0
+        try:
+            while True:
+                d = deng.spec_draft(rid, k)
+                if d is None or len(d) == 0:
+                    break  # draft out of room: target finishes plainly
+                res = teng.spec_verify(rid, d)
+                if res is None:
+                    break
+                drafted += res["drafted"]
+                accepted += res["accepted"]
+                if res["finished"]:
+                    break
+                if not deng.spec_sync(rid, res["committed"]):
+                    break  # draft cache exhausted mid-request
+        finally:
+            # the shadow never outlives the drive, and a surviving target
+            # slot gets its full-budget page reservation back for step()
+            deng.cancel(rid)
+            if teng.spec_slot(rid) is not None:
+                teng.spec_release(rid)
+        job.record.mark("verify", tier)
+        job.record.mark("accept", tier)
+        job.record.drafted_tokens += drafted
+        job.record.accepted_tokens += accepted
+        return True
 
     def _engine_submit(self, pool, r: int, tier: str, job: Job) -> None:
         req = job.request

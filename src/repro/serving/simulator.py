@@ -29,7 +29,7 @@ import numpy as np
 
 from repro.config import (ClusterTopology, ModelConfig, PolicyConfig,
                           ResilienceConfig, ServingConfig, SimConfig,
-                          TierSpec, two_tier_topology)
+                          SpecConfig, TierSpec, two_tier_topology)
 from repro.core.baselines import make_policy
 from repro.core.request import Outcome, Request
 from repro.core.scheduler import MoAOffScheduler
@@ -58,7 +58,8 @@ class ClusterSimulator:
                  max_context_tokens: Optional[int] = None,
                  fault_plan: Optional[FaultPlan] = None,
                  resilience: Optional[ResilienceConfig] = None,
-                 serving_cfg: Optional[ServingConfig] = None):
+                 serving_cfg: Optional[ServingConfig] = None,
+                 spec: Optional[SpecConfig] = None):
         # legacy-shim: a plan carrying only a Bernoulli rate compiles back
         # into the scalar knob, through the same rng stream as ever
         if fault_plan is not None and fail_rate == 0.0:
@@ -96,7 +97,7 @@ class ClusterSimulator:
                                       session_move_threshold=
                                       session_move_threshold,
                                       resilience=resilience,
-                                      fault_plan=fault_plan)
+                                      fault_plan=fault_plan, spec=spec)
         self.hedge_after_s = hedge_after_s
         # legacy attribute views (None when the topology lacks the name)
         self.edge = self.stations.get("edge")

@@ -35,7 +35,7 @@ import jax
 import numpy as np
 
 from repro.config import (ClusterTopology, ResilienceConfig, ServingConfig,
-                          two_tier_topology)
+                          SpecConfig, two_tier_topology)
 from repro.core.request import ModalityInput, Request
 from repro.core.scheduler import MoAOffScheduler
 from repro.data.tokenizer import ToyTokenizer
@@ -115,7 +115,8 @@ class ClusterServer:
                  snapshot_every: int = 4, sessions: bool = False,
                  session_move_threshold: int = 0,
                  fault_plan: Optional[FaultPlan] = None,
-                 resilience: Optional[ResilienceConfig] = None):
+                 resilience: Optional[ResilienceConfig] = None,
+                 spec: Optional[SpecConfig] = None):
         # legacy-shim: a plan carrying only a Bernoulli rate compiles back
         # into the scalar knob, through the same rng stream as ever
         if fault_plan is not None and fail_rate == 0.0:
@@ -147,7 +148,7 @@ class ClusterServer:
             migrate_threshold=migrate_threshold,
             hedge_in_service=hedge_in_service, sessions=sessions,
             session_move_threshold=session_move_threshold,
-            resilience=resilience, fault_plan=fault_plan)
+            resilience=resilience, fault_plan=fault_plan, spec=spec)
         self._rid = 0
         self._reported = 0  # outcomes already converted to ServedResults
         self.results: List[ServedResult] = []

@@ -200,7 +200,10 @@ class LocalTransport:
                 "prefix_hit_tokens": e.prefix_hit_tokens,
                 "resumed_sessions": e.resumed_sessions,
                 "resumed_tokens": e.resumed_tokens,
-                "parks": e.parks}
+                "parks": e.parks,
+                "drafted_tokens": e.drafted_tokens,
+                "accepted_tokens": e.accepted_tokens,
+                "spec_rounds": e.spec_rounds}
 
     @property
     def healthy(self) -> bool:
@@ -353,7 +356,10 @@ def _worker_main(conn, spec_raw: bytes) -> None:
                 "prefix_hit_tokens": eng.prefix_hit_tokens,
                 "resumed_sessions": eng.resumed_sessions,
                 "resumed_tokens": eng.resumed_tokens,
-                "parks": eng.parks},
+                "parks": eng.parks,
+                "drafted_tokens": eng.drafted_tokens,
+                "accepted_tokens": eng.accepted_tokens,
+                "spec_rounds": eng.spec_rounds},
         }
 
     conn.send_bytes(msg_to_bytes("ready", stats()))

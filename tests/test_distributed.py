@@ -128,7 +128,10 @@ _SUBPROC_DRYRUN = textwrap.dedent("""
 def _run_sub(code: str, timeout=420):
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC
-    env.pop("JAX_PLATFORMS", None)
+    # pin the subprocess to CPU: with libtpu installed, an unset
+    # JAX_PLATFORMS makes jax probe the (absent) TPU and stall for
+    # minutes on metadata retries; forced host devices work fine on cpu
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True, timeout=timeout, env=env)
     assert out.returncode == 0, out.stderr[-3000:]

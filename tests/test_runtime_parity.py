@@ -171,6 +171,55 @@ def test_sim_and_live_agree_on_replicated_topology():
     assert {r.tier for r in server.results} == {"edge", "cloud"}
 
 
+def test_sim_and_live_agree_on_speculative_lifecycle():
+    """Cross-tier speculative decoding through both backends: the same
+    cloud-fused request speculates (edge drafts, cloud verifies) and emits
+    the SAME draft/verify/accept lifecycle marks, with non-trivial
+    drafted/accepted token accounting on both sides."""
+    from repro.config import SpecConfig
+
+    pol_cfg = PolicyConfig(adaptive_tau=False)
+    topo = two_tier_topology()
+    spec = SpecConfig(draft_tier="edge", target_tier="cloud", draft_k=4)
+    server = _make_server(
+        max_seq=96,
+        scheduler=MoAOffScheduler(
+            policy=make_policy("moa-off", pol_cfg, topology=topo)),
+        spec=spec)
+    sim = ClusterSimulator(SimConfig(seed=0), policy_cfg=pol_cfg,
+                           topology=two_tier_topology(), spec=spec)
+    # heavy text complexity forces cloud fusion => the speculate gate opens
+    req = server.build_request("please Summarize this corpus now. " * 3,
+                               max_new=12,
+                               complexity={"text": 0.95})
+    sim_req = copy.deepcopy(req)
+    sim_req.arrival_s = 5.0
+    server.submit_request(req)
+    server.run()
+    sim.submit(sim_req)
+    sim.run()
+
+    (live,) = server.runtime.outcomes
+    (ana,) = sim.outcomes
+    assert live.routes == ana.routes == {"text": "cloud"}
+    assert live.served_tier == ana.served_tier == "cloud"
+    lt = server.runtime.records[req.rid].trace()
+    at = sim.runtime.records[req.rid].trace()
+    assert lt == at  # identical lifecycle incl. speculation, timing aside
+    for mark in (("draft", "edge"), ("verify", "cloud"),
+                 ("accept", "cloud")):
+        assert mark in lt
+    # both backends account real draft traffic and the scheduler heard it
+    for out in (live, ana):
+        assert out.drafted_tokens > 0
+        assert 0 <= out.accepted_tokens <= out.drafted_tokens
+    assert server.scheduler.estimator.snapshot().spec_accept is not None
+    assert sim.scheduler.estimator.snapshot().spec_accept is not None
+    # the edge drafted for real on the live side: counters moved there
+    assert server.pools["edge"].counters()["drafted_tokens"] > 0
+    assert server.pools["cloud"].counters()["drafted_tokens"] == 0
+
+
 # ---------------------------------------------------------------------------
 # migration lifecycle parity: same workload, same migrate decisions
 # ---------------------------------------------------------------------------

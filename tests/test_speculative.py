@@ -1,0 +1,373 @@
+"""Cross-tier speculative decoding: the target-side verify protocol commits
+exactly the target-only stream for ANY draft (perfect, garbage, partially
+right) at temp=0 AND temp>0 (per-slot key-stream discipline: a rejected
+draft must not desync the slot's jax.random stream), mid-draft EOS and k=1
+behave, rejected drafts leak no paged refcounts and never inflate
+decode_tokens, the draft-side shadow (quiet admission + scan drafting +
+commit sync) round-trips the full two-engine co-drive, and a hypothesis
+fuzz sweeps k x acceptance position."""
+import numpy as np
+import pytest
+
+from repro.config import ServingConfig
+from repro.models import build_model
+from repro.serving.engine import TierEngine
+
+FAMILY_PARAMS = [
+    "dense",
+    # the heavier families ride the slow mark to keep the smoke lane fast
+    pytest.param("vlm", marks=pytest.mark.slow),
+    pytest.param("moe", marks=pytest.mark.slow),
+    pytest.param("ssm", marks=pytest.mark.slow),
+    pytest.param("hybrid", marks=pytest.mark.slow),
+]
+
+
+def _make(cfg, params, temp=0.0, paged=False, eos=-1, seed=0, max_seq=192,
+          **sv_kw):
+    sv = ServingConfig(max_batch=2, max_seq=max_seq, paged=paged,
+                       **({"kv_page_size": 32} if paged else {}), **sv_kw)
+    return TierEngine(build_model(cfg), params, sv, eos_id=eos,
+                      sample_temp=temp, seed=seed)
+
+
+def _inputs(cfg, n=10, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(4, 200, size=n).astype(np.int32)
+    extras = {}
+    if cfg.frontend == "vision_stub":
+        extras["patches"] = rng.standard_normal(
+            (cfg.num_patches, cfg.frontend_dim)).astype(np.float32)
+    return toks, extras
+
+
+def _plain(eng, toks, max_new, extras, rid=0):
+    eng.submit(rid, toks, max_new=max_new, extras=extras)
+    done = {s.rid: list(s.generated) for s in eng.run_until_drained()}
+    eng.finished.clear()
+    return done[rid]
+
+
+def _spec_target(eng, toks, max_new, draft_for, rid=0, extras=None):
+    """Drive ONE request through the target-side verify protocol.
+
+    ``draft_for(generated)`` proposes the next block given the tokens
+    generated so far (the pending token is ``generated[-1]``). Empty
+    proposal -> stop speculating; the fused ``step()`` path finishes the
+    remainder, exactly like the runtime's co-drive fallback."""
+    eng.submit(rid, toks, max_new=max_new, extras=extras or {})
+    eng._admit()
+    rounds = 0
+    if eng.spec_slot(rid) is not None:
+        eng.spec_begin(rid)
+        while eng.spec_slot(rid) is not None and rounds < 500:
+            slot = eng.spec_slot(rid)
+            draft = draft_for(list(eng.slots[slot].generated))
+            if len(draft) == 0:
+                break
+            res = eng.spec_verify(rid, draft)
+            rounds += 1
+            if res is None or res["finished"]:
+                break
+        if eng.spec_slot(rid) is not None:
+            eng.spec_release(rid)
+    done = {s.rid: list(s.generated) for s in eng.run_until_drained()}
+    eng.finished.clear()
+    return done[rid], rounds
+
+
+def _perfect(ref, k):
+    return lambda gen: ref[len(gen):len(gen) + k]
+
+
+def _garbage(ref, k, vocab):
+    """Mismatch guaranteed at EVERY position: each proposal is the true
+    token + 1 (mod vocab)."""
+    return lambda gen: [(t + 1) % vocab
+                       for t in ref[len(gen):len(gen) + k]]
+
+
+def _corrupt_at(ref, k, vocab, j):
+    """True continuation with position ``j`` (0-based, within the block)
+    flipped: exactly min(j, remaining) proposals accepted per round."""
+    def f(gen):
+        blk = list(ref[len(gen):len(gen) + k])
+        if j < len(blk):
+            blk[j] = (blk[j] + 1) % vocab
+        return blk
+    return f
+
+
+# ---------------------------------------------------------------------------
+# per-family accept / rollback parity at temp=0
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", FAMILY_PARAMS)
+def test_spec_perfect_draft_matches_plain(family, family_model):
+    cfg, params = family_model(family)
+    toks, extras = _inputs(cfg)
+    ref = _plain(_make(cfg, params), toks, 12, extras)
+    eng = _make(cfg, params)
+    out, rounds = _spec_target(eng, toks, 12, _perfect(ref, 4),
+                               extras=extras)
+    assert out == ref
+    assert rounds >= 1 and eng.spec_rounds == rounds
+    assert eng.accepted_tokens > 0
+    assert eng.decode_tokens == len(out)
+
+
+@pytest.mark.parametrize("family", FAMILY_PARAMS)
+def test_spec_garbage_draft_matches_plain(family, family_model):
+    """Worst case: every proposal rejected. The correction token per round
+    still reproduces the target-only stream, and the rejected tails never
+    count toward decode_tokens."""
+    cfg, params = family_model(family)
+    toks, extras = _inputs(cfg)
+    ref = _plain(_make(cfg, params), toks, 10, extras)
+    eng = _make(cfg, params)
+    out, rounds = _spec_target(eng, toks, 10, _garbage(ref, 4,
+                                                       cfg.vocab_size),
+                               extras=extras)
+    assert out == ref
+    assert eng.accepted_tokens == 0
+    assert eng.decode_tokens == len(out)
+    # one correction commit per round (the first token came from admission)
+    assert rounds == len(ref) - 1
+
+
+def test_spec_partial_accept_rollback(family_model):
+    """Mismatch planted mid-block: the agreeing prefix + the correction
+    commit, the tail rolls back, every round."""
+    cfg, params = family_model("dense")
+    toks, extras = _inputs(cfg)
+    ref = _plain(_make(cfg, params), toks, 12, extras)
+    eng = _make(cfg, params)
+    out, rounds = _spec_target(eng, toks, 12,
+                               _corrupt_at(ref, 5, cfg.vocab_size, 2),
+                               extras=extras)
+    assert out == ref
+    # every round commits its accepted prefix + one bonus/correction token,
+    # and the admission token preceded all rounds
+    assert eng.accepted_tokens == len(out) - 1 - rounds
+    assert eng.accepted_tokens > 0  # the planted prefix really was accepted
+    assert eng.decode_tokens == len(out)
+
+
+def test_spec_k1_single_token_blocks(family_model):
+    cfg, params = family_model("dense")
+    toks, extras = _inputs(cfg)
+    ref = _plain(_make(cfg, params), toks, 8, extras)
+    eng = _make(cfg, params)
+    out, rounds = _spec_target(eng, toks, 8, _perfect(ref, 1),
+                               extras=extras)
+    assert out == ref
+    # every full round accepts its single proposal (the last round finishes
+    # on the bonus token before comparing): commits = accepted + rounds
+    assert eng.accepted_tokens == len(out) - 1 - rounds
+
+
+def test_spec_mid_draft_eos(family_model):
+    """EOS sampled mid-block: the commit loop stops AT the EOS token and
+    the rest of the block is discarded, matching the plain run."""
+    cfg, params = family_model("dense")
+    toks, extras = _inputs(cfg)
+    probe = _plain(_make(cfg, params), toks, 12, extras)
+    eos = probe[3]  # make a mid-stream token the stop token
+    ref = _plain(_make(cfg, params, eos=eos), toks, 12, extras)
+    assert len(ref) < 12 and ref[-1] == eos
+    eng = _make(cfg, params, eos=eos)
+    out, _ = _spec_target(eng, toks, 12, _perfect(probe, 8), extras=extras)
+    assert out == ref
+
+
+def test_spec_max_new_one_no_spec_round(family_model):
+    """max_new=1 finishes at admission; the protocol degrades to nothing."""
+    cfg, params = family_model("dense")
+    toks, extras = _inputs(cfg)
+    ref = _plain(_make(cfg, params), toks, 1, extras)
+    eng = _make(cfg, params)
+    out, rounds = _spec_target(eng, toks, 1, _perfect(ref, 4),
+                               extras=extras)
+    assert out == ref and len(out) == 1 and rounds == 0
+
+
+# ---------------------------------------------------------------------------
+# sampling key-stream discipline at temp > 0
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("draft_kind", ["perfect", "garbage"])
+def test_spec_temp_key_stream_parity(draft_kind, family_model):
+    """temp>0: spec_verify consumes EXACTLY one key split per committed
+    token — the same stream the fused on-device sampler would have drawn —
+    so both a fully accepted and a fully rejected draft reproduce the
+    plain stochastic stream token-for-token under the same seed."""
+    cfg, params = family_model("dense")
+    toks, extras = _inputs(cfg)
+    ref = _plain(_make(cfg, params, temp=0.8, seed=11), toks, 10, extras)
+    eng = _make(cfg, params, temp=0.8, seed=11)
+    mk = _perfect if draft_kind == "perfect" else (
+        lambda r, k: _garbage(r, k, cfg.vocab_size))
+    out, _ = _spec_target(eng, toks, 10, mk(ref, 4), extras=extras)
+    assert out == ref
+    if draft_kind == "garbage":
+        assert eng.accepted_tokens == 0
+
+
+def test_spec_temp_key_survives_fallback(family_model):
+    """Stopping mid-request (draft source dries up) must leave the slot's
+    key stream positioned so the fused path finishes with the SAME tokens
+    the uninterrupted plain run produces."""
+    cfg, params = family_model("dense")
+    toks, extras = _inputs(cfg)
+    ref = _plain(_make(cfg, params, temp=0.8, seed=7), toks, 10, extras)
+    eng = _make(cfg, params, temp=0.8, seed=7)
+    half = _perfect(ref, 3)
+    out, _ = _spec_target(
+        eng, toks, 10,
+        lambda gen: half(gen) if len(gen) < 5 else [], extras=extras)
+    assert out == ref
+
+
+# ---------------------------------------------------------------------------
+# rejected-draft accounting: paged refcounts + allocator invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", FAMILY_PARAMS)
+def test_spec_paged_rollback_refcounts(family, family_model):
+    """Every round grows pages for the speculative tail and decrefs the
+    rejected part; ``_spec_resize_pages`` asserts pool.check() throughout,
+    and after the request finishes every page is back in the free list."""
+    cfg, params = family_model(family)
+    toks, extras = _inputs(cfg)
+    ref = _plain(_make(cfg, params, paged=True, prefix_cache_mb=0,
+                       session_cache_mb=0), toks, 10, extras)
+    eng = _make(cfg, params, paged=True, prefix_cache_mb=0,
+                session_cache_mb=0)
+    free0 = eng.pool.pages_free
+    out, _ = _spec_target(eng, toks, 10, _garbage(ref, 4, cfg.vocab_size),
+                          extras=extras)
+    assert out == ref
+    assert eng.pool.pages_free == free0  # no refcount leaks
+    eng.pool.check()
+
+
+def test_spec_paged_release_restores_reservation(family_model):
+    """spec_begin trims to the frontier, spec_release regrows the full
+    decode budget — the fused path then finishes without page faults."""
+    cfg, params = family_model("dense")
+    toks, extras = _inputs(cfg)
+    ref = _plain(_make(cfg, params, paged=True, prefix_cache_mb=0,
+                       session_cache_mb=0), toks, 12, extras)
+    eng = _make(cfg, params, paged=True, prefix_cache_mb=0,
+                session_cache_mb=0)
+    stop = _perfect(ref, 4)
+    out, _ = _spec_target(
+        eng, toks, 12,
+        lambda gen: stop(gen) if len(gen) < 6 else [], extras=extras)
+    assert out == ref
+    assert eng.pool.pages_free == eng.pool.num_pages  # all pages back
+    eng.pool.check()
+
+
+# ---------------------------------------------------------------------------
+# draft side: quiet shadow admission + scan drafting + commit sync
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", FAMILY_PARAMS)
+def test_spec_two_engine_codrive(family, family_model):
+    """Full protocol with a REAL draft engine of the same model: every
+    proposal matches the target's greedy choice, so acceptance is 100%
+    and the committed stream equals the plain target-only run."""
+    cfg, params = family_model(family)
+    toks, extras = _inputs(cfg)
+    ref = _plain(_make(cfg, params), toks, 12, extras)
+    teng = _make(cfg, params)
+    deng = _make(cfg, params)
+    rid, k = 0, 4
+    teng.submit(rid, toks, max_new=12, extras=extras)
+    teng._admit()
+    assert teng.spec_slot(rid) is not None
+    dslot = deng.spec_admit_quiet(rid, toks, max_new=12 + k + 2,
+                                  extras=extras)
+    assert dslot is not None
+    assert not deng.finished  # quiet: no finished record, no hook calls
+    slot_t = teng.spec_slot(rid)
+    deng.spec_set_pending(rid, teng.slots[slot_t].generated[-1])
+    teng.spec_begin(rid)
+    drafted = accepted = 0
+    while True:
+        d = deng.spec_draft(rid, k)
+        if d is None or len(d) == 0:
+            break
+        res = teng.spec_verify(rid, d)
+        assert res is not None
+        drafted += res["drafted"]
+        accepted += res["accepted"]
+        if res["finished"]:
+            break
+        assert deng.spec_sync(rid, res["committed"])
+    deng.cancel(rid)
+    if teng.spec_slot(rid) is not None:
+        teng.spec_release(rid)
+    done = {s.rid: list(s.generated) for s in teng.run_until_drained()}
+    assert done[rid] == ref
+    # same model, temp=0: every proposal agrees — only the final round can
+    # truncate its block when max_new lands mid-draft
+    assert drafted > 0
+    assert accepted >= drafted - k
+    assert teng.drafted_tokens == 0 and deng.drafted_tokens == drafted
+    assert teng.accepted_tokens == accepted and deng.accepted_tokens == 0
+
+
+def test_spec_admit_quiet_mutes_hooks(family_model):
+    cfg, params = family_model("dense")
+    toks, _ = _inputs(cfg)
+    eng = _make(cfg, params)
+    calls = []
+    eng.on_admit = lambda rid, t: calls.append(("admit", rid))
+    eng.on_token = lambda rid, tok, t: calls.append(("token", rid))
+    assert eng.spec_admit_quiet(5, toks, max_new=8) is not None
+    assert calls == []  # the shadow is invisible to the runtime's hooks
+    eng.cancel(5)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis fuzz: k x acceptance position
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional dev dependency (requirements-dev.txt)
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.slow
+    @given(k=st.integers(1, 6), j=st.integers(0, 6), paged=st.booleans())
+    @settings(max_examples=10, deadline=None,
+              suppress_health_check=[HealthCheck.function_scoped_fixture])
+    def test_spec_fuzz_k_by_mismatch_position(k, j, paged, family_model):
+        """Any (block size, mismatch position, pool design): committed
+        stream == plain stream, counters exact, invariants hold."""
+        cfg, params = family_model("dense")
+        toks, extras = _inputs(cfg)
+        kw = dict(paged=True, prefix_cache_mb=0, session_cache_mb=0) \
+            if paged else {}
+        ref = _plain(_make(cfg, params, **kw), toks, 9, extras)
+        eng = _make(cfg, params, **kw)
+        out, _ = _spec_target(eng, toks, 9,
+                              _corrupt_at(ref, k, cfg.vocab_size, j),
+                              extras=extras)
+        assert out == ref
+        assert eng.decode_tokens == len(out)
+        if paged:
+            eng.pool.check()
+else:
+    @pytest.mark.slow
+    @pytest.mark.skip(reason="hypothesis not installed (optional dev dep)")
+    def test_spec_fuzz_k_by_mismatch_position():
+        pass
