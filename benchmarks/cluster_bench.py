@@ -23,6 +23,12 @@ storm (crashed edge tier, throttled twin, degraded cloud uplink) with the
 resilience layer off vs on — tier health + circuit breaking must convert
 terminal failures into degraded-but-on-time completions (goodput gain).
 
+A **byzantine soak** replays the hedged-migration burst under a
+whole-run wire storm (slot-payload corruption, event-stream
+drop/dup/reorder) with the invariant auditor on — checksums + the
+exactly-once delivery ledger must keep the run auditor-clean at goodput
+parity with honest wires, while the wire counters prove the faults fired.
+
 A **scale-out storm** sweeps open-loop arrival rates (Poisson, plus bursty
 and diurnal patterns at the knee) against replicated edge engine pools
 (R=1 vs R=2, local transport), per policy — the saturation curves
@@ -473,6 +479,102 @@ def run_chaos(args) -> dict:
     return out
 
 
+def run_soak(args) -> dict:
+    """Byzantine wire soak: the SAME hedged long-decode burst on
+    edge-edge-cloud, once on honest wires and once under a whole-run
+    byzantine storm (migration/session payload corruption, plus
+    drop/dup/reorder on every replica's sequenced event stream), BOTH
+    runs with the invariant auditor on.
+
+    The defense stack must make the storm invisible at the service level:
+    every corrupted slot payload is caught by a CRC32 (and the clone
+    re-prefills — recovered, never garbage KV), every duplicated frame is
+    suppressed by the delivery ledger, every drop/reorder heals via
+    outbox resync — so the byzantine run ends auditor-clean with goodput
+    within 10% of the honest run, and the wire counters prove the faults
+    actually fired."""
+    from repro.config import PolicyConfig
+    from repro.serving.faults import FaultPlan
+
+    topo = get_topology("edge-edge-cloud")
+    n = 4 if args.smoke else 6
+    sv = ServingConfig(max_batch=n, max_seq=256)
+    # the hedge-migration recipe: a tight burst of uniform long decodes
+    # pinned local, in-service hedges after 50 ms (decode outlives the
+    # window on any host), clones receive the donor's slot over the (now
+    # hostile) migration wire
+    workload = [(0.05 * i, f"Request {i}: audit the Ledger. "
+                 + "and verify every Invariant still holds. " * 12)
+                for i in range(n)]
+    storm = FaultPlan.byzantine_storm(seed=args.seed + 1, corrupt=0.9,
+                                      dup=0.25, drop=0.15, reorder=0.1)
+    out = {}
+    for mode in ("fault_free", "byzantine"):
+        server = ClusterServer(
+            build_cluster_engines(topo, sv), topology=topo,
+            scheduler=MoAOffScheduler(policy=make_policy(
+                "moa-off", PolicyConfig(adaptive_tau=False), topology=topo)),
+            hedge_after_s=0.05, hedge_in_service=True, migrate=True,
+            fault_plan=storm if mode == "byzantine" else None,
+            audit=True)
+        # warm every engine out-of-band (same ladder as the hedge bench)
+        for i, (tier, eng) in enumerate(server.engines.items()):
+            rid = 80_000 + 1_000 * i
+            for rows in (1, 2, n):
+                for r in range(rows):
+                    eng.submit(rid, (np.arange(100) % 300 + 4)
+                               .astype(np.int32), max_new=4)
+                    rid += 1
+                eng.run_until_drained()
+            eng.submit(rid, (np.arange(128) % 300 + 4).astype(np.int32),
+                       max_new=120)
+            eng.run_until_drained()
+        t0 = time.perf_counter()
+        for delay, text in workload:
+            server.submit(text, max_new=96, slo_s=args.slo, delay_s=delay,
+                          complexity={"text": 0.05})
+        results = server.run(timeout_s=args.timeout)
+        wall = time.perf_counter() - t0
+        lats = np.array([r.latency_s for r in results])
+        ws = dict(server.runtime.wire_stats)
+        verdict = server.runtime.auditor.last
+        ok = sum((not r.failed) and r.on_time for r in results)
+        out[mode] = {
+            "n": len(results),
+            "wall_s": wall,
+            "goodput_rps": ok / wall,
+            "goodput_frac": ok / max(len(results), 1),
+            "p50_latency_s": float(np.percentile(lats, 50)),
+            "p95_latency_s": float(np.percentile(lats, 95)),
+            "hedged": int(sum(r.hedged for r in results)),
+            "migrations": server.runtime.migrations,
+            "wire": ws,
+            "audit_clean": bool(verdict["clean"]),
+            "violations": list(verdict["violations"]),
+        }
+        print(f"  [soak/{mode}] goodput={out[mode]['goodput_frac']:.2f} "
+              f"({out[mode]['goodput_rps']:.2f} rps) "
+              f"p95={out[mode]['p95_latency_s']:.3f}s "
+              f"corrupt={ws.get('corrupt_detected', 0)}"
+              f"/{ws.get('corrupt_injected', 0)} "
+              f"dups={ws.get('dups_suppressed', 0)} "
+              f"resyncs={ws.get('resyncs', 0)} "
+              f"audit={'CLEAN' if verdict['clean'] else 'VIOLATIONS'}",
+              flush=True)
+        if not verdict["clean"]:
+            for v in verdict["violations"]:
+                print(f"    ! {v}", flush=True)
+    byz, ff = out["byzantine"], out["fault_free"]
+    out["goodput_ratio"] = (byz["goodput_frac"]
+                            / max(ff["goodput_frac"], 1e-9))
+    out["storm"] = json.loads(storm.to_json())
+    print(f"  [soak] byzantine/fault-free goodput ratio "
+          f"{out['goodput_ratio']:.2f} | detected corruptions "
+          f"{byz['wire'].get('corrupt_detected', 0)}, suppressed dups "
+          f"{byz['wire'].get('dups_suppressed', 0)}", flush=True)
+    return out
+
+
 def make_storm_arrivals(n: int, rate: float, pattern: str,
                         seed: int) -> np.ndarray:
     """Arrival times for one storm cell: ``poisson`` (open-loop exponential
@@ -718,6 +820,11 @@ def main() -> None:
     print("[chaos] deterministic fault storm, resilience layer off vs on, "
           "on edge-edge-cloud…", flush=True)
     results["chaos"] = run_chaos(args)
+
+    print("[soak] byzantine wire storm (corrupt/drop/dup/reorder) with "
+          "exactly-once delivery and the invariant auditor on "
+          "edge-edge-cloud…", flush=True)
+    results["soak"] = run_soak(args)
 
     print("[storm] scale-out saturation curves (replicated edge pool, "
           "poisson/burst/diurnal arrivals) on edge-cloud…", flush=True)

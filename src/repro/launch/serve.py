@@ -10,7 +10,10 @@ engines (the same lifecycle the simulator models virtually). ``--fault-plan``
 injects a deterministic chaos schedule (timed crash/slow/degrade/flap
 windows), and ``--quarantine-after`` / ``--retry-backoff`` / ``--shed``
 enable the tier-health circuit breaker, retry backoff and deadline-aware
-load shedding.
+load shedding. ``--byzantine`` adds message-level wire faults (frame
+corruption, drops, dups, reorders — all detected by checksums and the
+exactly-once delivery ledger) and ``--audit`` runs the runtime invariant
+auditor at completion.
 
 PYTHONPATH=src python -m repro.launch.serve --requests 16 --bandwidth 300e6
 PYTHONPATH=src python -m repro.launch.serve --topology edge-regional-cloud
@@ -79,6 +82,15 @@ def main() -> None:
                     help="deterministic chaos schedule: inline JSON (or a "
                          "path to a JSON file) of timed crash/slow/degrade/"
                          "flap windows — see repro.serving.faults.FaultPlan")
+    ap.add_argument("--byzantine", default=None, metavar="JSON",
+                    help="byzantine wire-fault schedule: inline JSON (or a "
+                         "path) of corrupt/msg_drop/msg_dup/msg_reorder "
+                         "windows, merged into --fault-plan; or "
+                         "'storm[:SEED]' for the canned whole-run storm")
+    ap.add_argument("--audit", action="store_true",
+                    help="run the InvariantAuditor at completion: "
+                         "exactly-once outcomes, clean delivery ledgers, "
+                         "no stuck stations, KV page conservation")
     ap.add_argument("--retry-backoff", action="store_true",
                     help="capped exponential backoff with deterministic "
                          "jitter between fault retries (instead of "
@@ -185,6 +197,24 @@ def main() -> None:
         if os.path.exists(raw):
             raw = open(raw).read()
         plan = FaultPlan.from_json(raw)
+    if args.byzantine:
+        raw = args.byzantine
+        if raw.startswith("storm"):
+            _, _, s = raw.partition(":")
+            byz = FaultPlan.byzantine_storm(seed=int(s) if s else args.seed)
+        else:
+            if os.path.exists(raw):
+                raw = open(raw).read()
+            byz = FaultPlan.from_json(raw)
+        if plan is None:
+            plan = byz
+        else:  # merge wire faults into the timed chaos schedule
+            plan = FaultPlan(list(plan.events) + list(byz.events),
+                             fail_rate=plan.fail_rate,
+                             wire_seed=byz.wire_seed or plan.wire_seed)
+        kinds = sorted({e.kind for e in byz.events})
+        print(f"byzantine wires: {', '.join(kinds)} "
+              f"(wire_seed={plan.wire_seed})")
     resilience = None
     if args.quarantine_after > 0 or args.retry_backoff or args.shed:
         resilience = ResilienceConfig(
@@ -227,7 +257,8 @@ def main() -> None:
                            hedge_in_service=args.hedge_in_service,
                            sessions=args.sessions > 0,
                            session_move_threshold=args.session_move_threshold,
-                           fault_plan=plan, resilience=resilience, spec=spec)
+                           fault_plan=plan, resilience=resilience, spec=spec,
+                           audit=args.audit)
 
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()
@@ -300,6 +331,27 @@ def main() -> None:
         print(f"sessions: {resumed} resumed turns, {hits} prefix hits, "
               f"{saved:.0f} cached tokens never re-prefilled, "
               f"{server.runtime.session_moves} parked-state moves")
+    ws = server.runtime.wire_stats
+    if args.byzantine or args.audit or ws:
+        print(f"wire: corruptions {ws.get('corrupt_detected', 0)}/"
+              f"{ws.get('corrupt_injected', 0)} detected "
+              f"(undetected={ws.get('corrupt_undetected', 0)}) | "
+              f"dropped={ws.get('msgs_dropped', 0)} "
+              f"duped={ws.get('msgs_duped', 0)} "
+              f"reordered={ws.get('msgs_reordered', 0)} | "
+              f"dups suppressed={ws.get('dups_suppressed', 0)} "
+              f"dup finishes={ws.get('dup_finishes_suppressed', 0)} "
+              f"resyncs={ws.get('resyncs', 0)}")
+    if args.audit:
+        verdict = server.runtime.auditor.last
+        if verdict.get("clean"):
+            print(f"audit: CLEAN ({verdict['requests']} requests, "
+                  f"{verdict['outcomes']} outcomes, every invariant held)")
+        else:
+            print(f"audit: {len(verdict.get('violations', []))} "
+                  f"VIOLATION(S)")
+            for v in verdict.get("violations", []):
+                print(f"  ! {v}")
     if spec is not None:
         drafted = sum(o.drafted_tokens for o in server.runtime.outcomes)
         accepted = sum(o.accepted_tokens for o in server.runtime.outcomes)

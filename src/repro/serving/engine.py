@@ -48,6 +48,7 @@ import dataclasses
 import json
 import struct
 import time
+import zlib
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
@@ -99,8 +100,12 @@ class SeqState:
 # ---------------------------------------------------------------------------
 
 #: bump when the on-wire layout changes; injectors reject other versions
-MIGRATION_WIRE_VERSION = 1
+#: v2: CRC32 on the header blob and on every raw buffer (key + each leaf)
+#: so byte corruption anywhere on the wire deterministically raises
+#: MigrationError instead of silently injecting garbage KV
+MIGRATION_WIRE_VERSION = 2
 _WIRE_MAGIC = b"MOAKV"
+_WIRE_HDR = struct.Struct("<HII")  # (version, header len, header crc32)
 
 
 class MigrationError(RuntimeError):
@@ -161,6 +166,9 @@ class SlotPayload:
             return self._wire
         seq = self.seq
         names = sorted(self.leaves)
+        key_bytes = np.ascontiguousarray(self.key).tobytes()
+        leaf_bytes = [np.ascontiguousarray(self.leaves[n]).tobytes()
+                      for n in names]
         head = {
             "version": self.version,
             "model": self.model,
@@ -178,15 +186,18 @@ class SlotPayload:
                               else [int(t) for t in self.prompt_tokens]),
             "extras_fp": self.extras_fp.hex(),
             "key": {"dtype": str(self.key.dtype),
-                    "shape": list(self.key.shape)},
+                    "shape": list(self.key.shape),
+                    "crc": zlib.crc32(key_bytes)},
             "leaves": [{"name": n, "dtype": str(self.leaves[n].dtype),
-                        "shape": list(self.leaves[n].shape)} for n in names],
+                        "shape": list(self.leaves[n].shape),
+                        "crc": zlib.crc32(raw)}
+                       for n, raw in zip(names, leaf_bytes)],
         }
         blob = json.dumps(head).encode("utf-8")
-        parts = [_WIRE_MAGIC, struct.pack("<HI", self.version, len(blob)),
-                 blob, np.ascontiguousarray(self.key).tobytes()]
-        parts += [np.ascontiguousarray(self.leaves[n]).tobytes()
-                  for n in names]
+        parts = [_WIRE_MAGIC,
+                 _WIRE_HDR.pack(self.version, len(blob), zlib.crc32(blob)),
+                 blob, key_bytes]
+        parts += leaf_bytes
         self._wire = b"".join(parts)
         return self._wire
 
@@ -195,16 +206,23 @@ class SlotPayload:
         m = len(_WIRE_MAGIC)
         if wire[:m] != _WIRE_MAGIC:
             raise MigrationError("not a slot payload (bad magic)")
-        if len(wire) < m + struct.calcsize("<HI"):
+        if len(wire) < m + _WIRE_HDR.size:
             raise MigrationError("truncated slot payload")
-        version, hlen = struct.unpack_from("<HI", wire, m)
+        version, hlen, hcrc = _WIRE_HDR.unpack_from(wire, m)
         if version != MIGRATION_WIRE_VERSION:
             raise MigrationError(
                 f"wire format version {version} != supported "
                 f"{MIGRATION_WIRE_VERSION}")
-        off = m + struct.calcsize("<HI")
+        off = m + _WIRE_HDR.size
+        if off + hlen > len(wire):
+            raise MigrationError("truncated slot payload header")
+        blob = wire[off:off + hlen]
+        # the header checksum gates json parsing: corrupt bytes raise here,
+        # deterministically, before anything is interpreted
+        if zlib.crc32(blob) != hcrc:
+            raise MigrationError("slot payload header checksum mismatch")
 
-        def pull(dtype_s: str, shape) -> np.ndarray:
+        def pull(dtype_s: str, shape, crc) -> np.ndarray:
             nonlocal off
             dt = _np_dtype(dtype_s)
             if any(int(d) < 0 for d in shape):
@@ -213,7 +231,10 @@ class SlotPayload:
             end = off + n * dt.itemsize
             if end > len(wire):
                 raise MigrationError("truncated slot payload")
-            arr = np.frombuffer(wire[off:end], dtype=dt).reshape(shape).copy()
+            raw = wire[off:end]
+            if crc is not None and zlib.crc32(raw) != crc:
+                raise MigrationError("slot payload buffer checksum mismatch")
+            arr = np.frombuffer(raw, dtype=dt).reshape(shape).copy()
             off = end
             return arr
 
@@ -221,10 +242,11 @@ class SlotPayload:
         # fields, bogus shapes) is a corrupt wire, never a crash: callers
         # rely on MigrationError to fall back to a fresh prefill
         try:
-            head = json.loads(wire[off:off + hlen].decode("utf-8"))
+            head = json.loads(blob.decode("utf-8"))
             off += hlen
-            key = pull(head["key"]["dtype"], head["key"]["shape"])
-            leaves = {d["name"]: pull(d["dtype"], d["shape"])
+            key = pull(head["key"]["dtype"], head["key"]["shape"],
+                       head["key"].get("crc"))
+            leaves = {d["name"]: pull(d["dtype"], d["shape"], d.get("crc"))
                       for d in head["leaves"]}
             s = head["seq"]
             seq = SeqState(rid=s["rid"], prompt_len=s["prompt_len"],

@@ -85,6 +85,24 @@ class EnginePool:
         for tr in self.transports:
             tr.wire_hooks(on_admit, on_token, on_warm, on_park)
 
+    def arm_wire_chaos(self, chaos, stats, now_rel) -> None:
+        """Arm byzantine message chaos on every replica's event/finish
+        stream (link ``events:<tier>/<i>``). Local transports gain the
+        sequenced delivery guard; process transports attach chaos to the
+        guard they always run."""
+        for i, tr in enumerate(self.transports):
+            tr.arm_delivery(chaos, stats, now_rel,
+                            f"events:{self.name}/{i}")
+
+    def delivery_audit(self) -> List[str]:
+        """Invariant check: no replica guard holding frames or gaps."""
+        out = []
+        for i, tr in enumerate(self.transports):
+            guard = getattr(tr, "_guard", None)
+            if guard is not None:
+                out.extend(guard.audit(f"{self.name}/{i}"))
+        return out
+
     # -- observation --------------------------------------------------------
 
     def load(self) -> float:

@@ -41,7 +41,7 @@ from repro.core.request import Job, Outcome, Request, RequestRecord
 from repro.core.scheduler import MoAOffScheduler
 from repro.serving import cost_model as cm
 from repro.serving.engine import MigrationError, SlotPayload
-from repro.serving.faults import FaultPlan
+from repro.serving.faults import FaultPlan, WireChaos
 from repro.serving.health import HealthMonitor, retry_backoff_s
 from repro.serving.prefix import (ParkedSession, PrefixStore, SessionStore,
                                   extras_fingerprint, prefix_buckets)
@@ -128,7 +128,8 @@ class ClusterRuntime:
                  session_move_threshold: int = 0,
                  resilience: Optional[ResilienceConfig] = None,
                  fault_plan: Optional[FaultPlan] = None,
-                 spec: Optional[SpecConfig] = None):
+                 spec: Optional[SpecConfig] = None,
+                 audit: bool = False):
         self.topology = topology
         self.scheduler = scheduler
         # cross-tier speculative decoding (draft-and-verify): validate the
@@ -170,6 +171,20 @@ class ClusterRuntime:
         # every path below byte-identical to the pre-resilience runtime.
         self.resilience = resilience or ResilienceConfig()
         self.plan = fault_plan
+        # byzantine wire layer: built ONLY when the plan carries message
+        # faults — otherwise every wire path below is untouched (legacy
+        # byte-identical). ``wire_stats`` is the shared counter dict that
+        # injection sites, delivery guards and backends all bump.
+        self.wire_stats: Dict[str, int] = {}
+        self.wire_chaos: Optional[WireChaos] = (
+            WireChaos(fault_plan, stats=self.wire_stats)
+            if fault_plan is not None and fault_plan.has_msg_faults
+            else None)
+        if audit:
+            from repro.serving.audit import InvariantAuditor
+            self.auditor: Optional[InvariantAuditor] = InvariantAuditor(self)
+        else:
+            self.auditor = None
         self.health: Optional[HealthMonitor] = (
             HealthMonitor([t.name for t in topology.tiers], self.resilience)
             if self.resilience.health else None)
@@ -459,7 +474,7 @@ class ClusterRuntime:
             if job.payload.pop("xfer_dead", None):
                 return  # a sibling timed out: the retry path owns the job
             if xfer["kind"] == "migrate":
-                self.backend.migrate_inject(ev.t, job)
+                self._migrate_inject(ev.t, job)
             else:
                 self._join_transfers(ev.t, job)
 
@@ -508,8 +523,49 @@ class ClusterRuntime:
         """All of a job's arrival-side transfers have landed: install any
         moved session payload so admission finds it, then enqueue."""
         if job.payload.pop("session_pending", None):
+            self._wire_transfer_fault(t, f"session:{job.tier}", job,
+                                      "session_wire")
             self.backend.session_install(t, job)
         self._enqueue_service(t, job)
+
+    # -- byzantine wire faults on slot-payload transfers --------------------
+
+    def _wire_transfer_fault(self, t: float, link: str, job: Job,
+                             key: str) -> None:
+        """Decide the fate of one landed slot-payload transfer on ``link``.
+
+        Both draws are made unconditionally so the per-link counters (and
+        hence every later decision) advance identically in the analytic
+        and live backends. Live wires get their actual bytes flipped (the
+        receiving CRC raises and the backend counts the detection); the
+        analytic backend carries the same verdict as flags its mirror
+        consumes. ``wire_tampered`` is popped by whoever detects it — if
+        an injection ever succeeds with the flag still set, the backend
+        records undetected corruption and the auditor flags the run."""
+        wc = self.wire_chaos
+        if wc is None:
+            return
+        rel = self.rel(t)
+        corrupt = wc.decide("corrupt", link, rel)
+        drop = wc.decide("msg_drop", link, rel)
+        if corrupt:
+            wire = job.payload.get(key)
+            if isinstance(wire, (bytes, bytearray)):
+                job.payload[key] = wc.tamper(bytes(wire), link)
+            job.payload["wire_tampered"] = True
+            wc.bump("corrupt_injected")
+        if drop:
+            job.payload.pop(key, None)
+            job.payload["wire_dropped"] = True
+            wc.bump("msgs_dropped")
+
+    def _migrate_inject(self, t: float, carrier: Job) -> None:
+        """Single choke point for landing a migration payload (link and
+        local paths): byzantine wire faults apply here, then the backend
+        injects (falling back to a fresh prefill on a detected fault)."""
+        self._wire_transfer_fault(t, f"migrate:{carrier.tier}", carrier,
+                                  "migration_wire")
+        self.backend.migrate_inject(t, carrier)
 
     # -- lifecycle: service ------------------------------------------------
 
@@ -615,7 +671,7 @@ class ClusterRuntime:
         return True
 
     def _on_migrate_done(self, ev: Event):
-        self.backend.migrate_inject(ev.t, ev.payload["job"])
+        self._migrate_inject(ev.t, ev.payload["job"])
 
     # -- lifecycle: session moves ------------------------------------------
 
@@ -876,6 +932,8 @@ class ClusterRuntime:
                 continue
             if not self.backend.advance():
                 break
+        if self.auditor is not None:
+            self.auditor.final_check()
         return self.outcomes
 
 
@@ -1014,9 +1072,17 @@ class AnalyticBackend:
         return float(rec.nbytes)
 
     def session_install(self, t: float, job: Job) -> None:
+        tampered = job.payload.pop("wire_tampered", False)
+        dropped = job.payload.pop("wire_dropped", False)
         rec = job.payload.pop("session_parked", None)
-        if rec is not None:
-            self.parked[job.tier].park(job.request.session, rec)
+        if rec is None or dropped:
+            return  # lost on the wire: the turn cold-prefills
+        if tampered:
+            # the live twin's CRC rejects the payload at adopt: mirror the
+            # detection and the cold-prefill recovery
+            self.rt.wire_chaos.bump("corrupt_detected")
+            return
+        self.parked[job.tier].park(job.request.session, rec)
 
     def parked_sessions(self) -> Dict[str, int]:
         return {tier: len(store) for tier, store in self.parked.items()}
@@ -1186,10 +1252,22 @@ class AnalyticBackend:
         self._next_from_queue(t, st)
 
     def migrate_inject(self, t: float, carrier: Job) -> None:
+        tampered = carrier.payload.pop("wire_tampered", False)
+        dropped = carrier.payload.pop("wire_dropped", False)
         donor = carrier.payload.pop("migration_donor", None)
         if carrier.record.done:
             carrier.payload.pop("migration_nbytes", None)
             return  # the donor finished during the transport window
+        if tampered or dropped:
+            # mirror of the live CRC rejection / vanished payload: no
+            # commit, the donor (if any) keeps racing, and the carrier
+            # falls back to a fresh prefill priced at the new tier
+            if tampered:
+                self.rt.wire_chaos.bump("corrupt_detected")
+            carrier.payload.pop("migration_nbytes", None)
+            carrier.payload.pop("cost_tier", None)  # reprice: full prefill
+            self.rt._enqueue_service(t, carrier)
+            return
         if donor is not None and not donor.record.done:
             # the injected copy resumes at the donor's exact position on a
             # fresher tier: retire the donor now (release its server, drop
@@ -1510,6 +1588,19 @@ class AnalyticBackend:
     def advance(self) -> bool:
         return False  # purely event-driven: no events left means done
 
+    def audit_residue(self) -> List[str]:
+        """Invariant check at teardown: stations idle, nothing in service."""
+        out: List[str] = []
+        for name, st in sorted(self.stations.items()):
+            if st.busy:
+                out.append(f"station {name!r} left busy={st.busy}")
+            if st.queue:
+                out.append(f"station {name!r} left {len(st.queue)} queued")
+        for tier, jobs in sorted(self.active.items()):
+            if jobs:
+                out.append(f"tier {tier!r} left {len(jobs)} jobs in service")
+        return out
+
 
 # ---------------------------------------------------------------------------
 # Live backend (monotonic clock + real TierEngines)
@@ -1613,6 +1704,14 @@ class LiveBackend:
                for tr in p.transports):
             cap = min(cap, 0.02) if cap > 0 else 0.02
         self._idle_cap_s = cap
+        # byzantine wires: arm every replica's event/finish stream with the
+        # runtime's chaos + shared stats (local transports gain the
+        # sequenced delivery guard; process guards get chaos attached)
+        if runtime.wire_chaos is not None:
+            now_rel = lambda: runtime.rel(time.monotonic())  # noqa: E731
+            for pool in self.pools.values():
+                pool.arm_wire_chaos(runtime.wire_chaos, runtime.wire_stats,
+                                    now_rel)
 
     def handlers(self):
         return {"node_fault": self._on_node_fault}
@@ -1825,11 +1924,31 @@ class LiveBackend:
         job.record.mark("draft", spx["draft"])
         teng.spec_begin(rid)
         drafted = accepted = 0
+        wc = self.rt.wire_chaos
+        draft_link = f"draft:{spx['draft']}"
         try:
             while True:
                 d = deng.spec_draft(rid, k)
                 if d is None or len(d) == 0:
                     break  # draft out of room: target finishes plainly
+                if wc is not None:
+                    # the draft block crosses a wire to the verifier: frame
+                    # it through the checksummed transport format so a
+                    # corrupted block is detected (never verified against
+                    # garbage) and the round falls back to plain decode
+                    from repro.serving.transport import (TransportError,
+                                                         msg_from_bytes,
+                                                         msg_to_bytes)
+                    frame = msg_to_bytes("draft", np.asarray(d))
+                    if wc.decide("corrupt", draft_link,
+                                 self.rt.rel(time.monotonic())):
+                        frame = wc.tamper(frame, draft_link)
+                        wc.bump("corrupt_injected")
+                    try:
+                        _, d = msg_from_bytes(frame)
+                    except TransportError:
+                        wc.bump("corrupt_detected")
+                        break  # lost round: target finishes plainly
                 res = teng.spec_verify(rid, d)
                 if res is None:
                     break
@@ -2003,10 +2122,18 @@ class LiveBackend:
         return float(len(wire))
 
     def session_install(self, t: float, job: Job) -> None:
+        tampered = job.payload.pop("wire_tampered", False)
+        job.payload.pop("wire_dropped", False)
         wire = job.payload.pop("session_wire", None)
         if wire is None:
-            return
-        self.pools[job.tier].adopt_session_wire(job.request.session, wire)
+            return  # dropped on the wire: the turn cold-prefills
+        ok = self.pools[job.tier].adopt_session_wire(job.request.session,
+                                                     wire)
+        if tampered:
+            # adopt deserializes through the CRC'd wire format: a tampered
+            # payload MUST have been rejected there
+            wc = self.rt.wire_chaos
+            wc.bump("corrupt_detected" if not ok else "corrupt_undetected")
 
     def parked_sessions(self) -> Dict[str, int]:
         return {tier: pool.session_count()
@@ -2056,6 +2183,8 @@ class LiveBackend:
         return float(len(wire))
 
     def migrate_inject(self, t: float, carrier: Job) -> None:
+        tampered = carrier.payload.pop("wire_tampered", False)
+        carrier.payload.pop("wire_dropped", False)
         wire = carrier.payload.pop("migration_wire", None)
         donor = carrier.payload.pop("migration_donor", None)
         if carrier.record.done:
@@ -2068,13 +2197,20 @@ class LiveBackend:
                 raise MigrationError("no payload shipped")
             r = pool.inject_wire(wire, carrier.request.rid)
         except MigrationError:
-            # target full / died mid-transfer: fall back to a fresh prefill
-            # submission on the same tier (still completes, just slower —
-            # the donor keeps decoding so the race survives, and the
-            # request is NOT reported as migrated)
+            # target full / died mid-transfer / CORRUPT WIRE (the payload
+            # CRC raises before any engine state mutates): fall back to a
+            # fresh prefill submission on the same tier (still completes,
+            # just slower — the donor keeps decoding so the race survives,
+            # and the request is NOT reported as migrated)
+            if tampered:
+                self.rt.wire_chaos.bump("corrupt_detected")
             carrier.payload.pop("migration_nbytes", None)
             self.rt._enqueue_service(t, carrier)
             return
+        if tampered:
+            # a flipped byte slid past every checksum: garbage KV is now
+            # serving — exactly what the auditor must flag
+            self.rt.wire_chaos.bump("corrupt_undetected")
         self.rt.commit_migration(carrier)
         if donor is not None:
             # the injected copy resumes at the donor's exact position on a
@@ -2110,12 +2246,19 @@ class LiveBackend:
         if not fins:
             return
         now = time.monotonic()
+        ws = self.rt.wire_stats
         for st in fins:
             job = self._inflight[tier].pop(st.rid, None)
             if job is None:
                 continue  # cancelled attempt / replayed duplicate
             if job.record.done:
-                continue  # the hedged twin finished first
+                # per-rid delivery ledger: a duplicated/hedged finish can
+                # never double-serve or double-charge — the single ``done``
+                # cell is the idempotence bit, counted so dup suppression
+                # is machine-visible
+                ws["dup_finishes_suppressed"] = \
+                    ws.get("dup_finishes_suppressed", 0) + 1
+                continue
             job.record.done = True
             job.record.tokens = list(st.generated)
             spec = self.rt.specs[tier]
@@ -2179,6 +2322,41 @@ class LiveBackend:
     def session_rescue_install(self, t: float, sid: str, dst: str,
                                wire) -> None:
         self.pools[dst].adopt_session_wire(sid, wire)
+
+    def audit_residue(self) -> List[str]:
+        """Invariant check at teardown: no in-flight requests, no owned
+        rids, clean delivery ledgers, every local engine quiescent (slots
+        free, queue empty) and its paged KV pool conserving pages."""
+        from repro.serving.transport import LocalTransport
+
+        out: List[str] = []
+        for tier in sorted(self.pools):
+            pool = self.pools[tier]
+            stuck = sorted(self._inflight[tier])
+            if stuck:
+                out.append(f"{tier}: rids {stuck} still in flight")
+            if pool._owner:
+                out.append(f"{tier}: pool still owns rids "
+                           f"{sorted(pool._owner)}")
+            out.extend(pool.delivery_audit())
+            for i, tr in enumerate(pool.transports):
+                if not isinstance(tr, LocalTransport) or not tr.alive:
+                    continue
+                eng = tr.engine
+                busy = [s.rid for s in eng.slots if s is not None]
+                if busy:
+                    out.append(f"{tier}/{i}: leaked engine slots for rids "
+                               f"{busy}")
+                if eng.waiting:
+                    out.append(f"{tier}/{i}: {len(eng.waiting)} requests "
+                               f"stuck in the admission queue")
+                if eng.pool is not None:
+                    try:
+                        eng.pool.check()  # free XOR referenced, per page
+                    except AssertionError as e:
+                        out.append(f"{tier}/{i}: page pool conservation "
+                                   f"violated: {e}")
+        return out
 
     def advance(self) -> bool:
         plan = self.rt.plan

@@ -59,7 +59,8 @@ class ClusterSimulator:
                  fault_plan: Optional[FaultPlan] = None,
                  resilience: Optional[ResilienceConfig] = None,
                  serving_cfg: Optional[ServingConfig] = None,
-                 spec: Optional[SpecConfig] = None):
+                 spec: Optional[SpecConfig] = None,
+                 audit: bool = False):
         # legacy-shim: a plan carrying only a Bernoulli rate compiles back
         # into the scalar knob, through the same rng stream as ever
         if fault_plan is not None and fail_rate == 0.0:
@@ -97,7 +98,8 @@ class ClusterSimulator:
                                       session_move_threshold=
                                       session_move_threshold,
                                       resilience=resilience,
-                                      fault_plan=fault_plan, spec=spec)
+                                      fault_plan=fault_plan, spec=spec,
+                                      audit=audit)
         self.hedge_after_s = hedge_after_s
         # legacy attribute views (None when the topology lacks the name)
         self.edge = self.stations.get("edge")

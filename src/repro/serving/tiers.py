@@ -116,7 +116,8 @@ class ClusterServer:
                  session_move_threshold: int = 0,
                  fault_plan: Optional[FaultPlan] = None,
                  resilience: Optional[ResilienceConfig] = None,
-                 spec: Optional[SpecConfig] = None):
+                 spec: Optional[SpecConfig] = None,
+                 audit: bool = False):
         # legacy-shim: a plan carrying only a Bernoulli rate compiles back
         # into the scalar knob, through the same rng stream as ever
         if fault_plan is not None and fail_rate == 0.0:
@@ -148,7 +149,8 @@ class ClusterServer:
             migrate_threshold=migrate_threshold,
             hedge_in_service=hedge_in_service, sessions=sessions,
             session_move_threshold=session_move_threshold,
-            resilience=resilience, fault_plan=fault_plan, spec=spec)
+            resilience=resilience, fault_plan=fault_plan, spec=spec,
+            audit=audit)
         self._rid = 0
         self._reported = 0  # outcomes already converted to ServedResults
         self.results: List[ServedResult] = []

@@ -19,23 +19,43 @@ Two implementations behind the same duck-typed surface:
   sessions cross the pipe in the existing versioned migration wire
   format (``SlotPayload.to_bytes``).
 
-Every pipe message is framed by :func:`msg_to_bytes` with a transport
-wire version so a mismatched peer fails loudly instead of misparsing.
+Every pipe message is framed by :func:`msg_to_bytes`: a magic tag, the
+transport wire version and a CRC32 of the pickled body, so a mismatched
+peer fails loudly and a corrupted frame raises :class:`TransportError`
+*before* any untrusted bytes reach ``pickle.loads`` — and a garbage
+length prefix can never trigger a giant allocation (``max_frame_bytes``
+caps both parsing and the pipe reads).
+
+Event/finish streams are additionally *sequenced*: the sender stamps a
+monotonic per-replica sequence number on every frame and keeps a bounded
+outbox; the receiving :class:`DeliveryGuard` suppresses duplicates,
+restores order, and heals gaps by replaying from the outbox (a resync) —
+exactly-once delivery over a byzantine wire.
 """
 from __future__ import annotations
 
 import multiprocessing as mp
 import pickle
+import struct
 import time
+import zlib
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.config import ServingConfig
 from repro.serving.engine import MigrationError, SlotPayload
 
-TRANSPORT_WIRE_VERSION = 1
+TRANSPORT_WIRE_VERSION = 2
+_FRAME_MAGIC = b"MOAF"
+_FRAME_HDR = struct.Struct("<HI")  # (version, crc32 of body)
+# generous default: large enough for any slot payload the reduced models
+# can produce, small enough that a garbage length can't OOM the host
+DEFAULT_MAX_FRAME_BYTES = 256 * 1024 * 1024
+# how many sequenced frames a sender keeps for gap replay
+OUTBOX_DEPTH = 512
 
 # event tuples streamed from a replica: ("admit", rid, t),
 # ("token", rid, token, t), ("warm", rid, kind, cached, suffix),
@@ -56,26 +76,189 @@ class FinishedSeq:
 
 
 def msg_to_bytes(kind: str, payload: Any) -> bytes:
-    """Frame one transport message: version-tagged, pickled."""
-    return pickle.dumps((TRANSPORT_WIRE_VERSION, kind, payload),
-                        protocol=pickle.HIGHEST_PROTOCOL)
+    """Frame one transport message: magic + version + CRC32, then the
+    pickled ``(kind, payload)`` body."""
+    body = pickle.dumps((kind, payload), protocol=pickle.HIGHEST_PROTOCOL)
+    return (_FRAME_MAGIC
+            + _FRAME_HDR.pack(TRANSPORT_WIRE_VERSION, zlib.crc32(body))
+            + body)
 
 
-def msg_from_bytes(raw: bytes) -> Tuple[str, Any]:
-    """Parse + validate one frame; raises TransportError on any mismatch."""
-    try:
-        msg = pickle.loads(raw)
-    except Exception as e:  # truncated / corrupt frame
-        raise TransportError(f"undecodable transport frame: {e}") from e
-    if not isinstance(msg, tuple) or len(msg) != 3:
-        raise TransportError(f"malformed transport frame: {type(msg)}")
-    ver, kind, payload = msg
+def msg_from_bytes(raw: bytes,
+                   max_frame_bytes: int = DEFAULT_MAX_FRAME_BYTES
+                   ) -> Tuple[str, Any]:
+    """Parse + validate one frame; raises TransportError on any mismatch.
+
+    Validation order matters: size cap, magic, version and CRC are all
+    checked BEFORE the body reaches ``pickle.loads`` — corrupt or hostile
+    bytes fail deterministically instead of crashing (or allocating) in
+    the unpickler."""
+    if len(raw) > max_frame_bytes:
+        raise TransportError(
+            f"oversized transport frame: {len(raw)} > {max_frame_bytes}")
+    hdr_end = len(_FRAME_MAGIC) + _FRAME_HDR.size
+    if len(raw) < hdr_end:
+        raise TransportError(f"short transport frame: {len(raw)} bytes")
+    if raw[:len(_FRAME_MAGIC)] != _FRAME_MAGIC:
+        raise TransportError("bad transport frame magic")
+    ver, crc = _FRAME_HDR.unpack(raw[len(_FRAME_MAGIC):hdr_end])
     if ver != TRANSPORT_WIRE_VERSION:
         raise TransportError(
             f"transport wire version {ver} != {TRANSPORT_WIRE_VERSION}")
+    body = raw[hdr_end:]
+    if zlib.crc32(body) != crc:
+        raise TransportError("transport frame checksum mismatch")
+    try:
+        msg = pickle.loads(body)
+    except Exception as e:  # truncated / corrupt frame
+        raise TransportError(f"undecodable transport frame: {e}") from e
+    if not isinstance(msg, tuple) or len(msg) != 2:
+        raise TransportError(f"malformed transport frame: {type(msg)}")
+    kind, payload = msg
     if not isinstance(kind, str):
         raise TransportError(f"malformed message kind: {kind!r}")
     return kind, payload
+
+
+class DeliveryGuard:
+    """Exactly-once, in-order receiver for one replica's sequenced
+    event/finish stream — and the injection point for byzantine message
+    chaos on that stream.
+
+    The sender stamps a monotonic ``seq`` on every frame and keeps a
+    bounded outbox. On receive: a seq at-or-below the ledger's high-water
+    mark is a duplicate (suppressed); the next expected seq is delivered
+    (plus any buffered successors); a gap buffers the frame and requests
+    ONE resync, which replays the missing range from the sender's outbox
+    through :meth:`redeliver` (chaos-exempt — a retransmission). If the
+    gap outlives ``resync_patience`` heal sweeps it is abandoned: the
+    ledger jumps forward so delivery stays live (the per-rid idempotence
+    in ``_harvest`` keeps lost finishes recoverable).
+    """
+
+    def __init__(self, link: str, chaos=None,
+                 stats: Optional[Dict[str, int]] = None,
+                 now_rel: Optional[Callable[[], float]] = None,
+                 resync: Optional[Callable[[int], None]] = None,
+                 resync_patience: int = 0):
+        self.link = link
+        self.chaos = chaos
+        self.stats = stats if stats is not None else {}
+        self.now_rel = now_rel or (lambda: 0.0)
+        self._resync = resync
+        self.resync_patience = resync_patience
+        self.last_seq = 0
+        # sender's high-water mark, advertised out of band (local: at send
+        # time; process: via stats frames) — how a dropped TAIL frame with
+        # no successor is still detected as a gap
+        self.expected = 0
+        self._pending: Dict[int, Tuple[str, Any]] = {}
+        self._held: Optional[Tuple[int, str, Any]] = None
+        self._out: List[Tuple[str, Any]] = []
+        self._gap_waited = -1  # -1: no outstanding gap / resync
+
+    def _bump(self, key: str, n: int = 1) -> None:
+        self.stats[key] = self.stats.get(key, 0) + n
+
+    @property
+    def _gapped(self) -> bool:
+        return bool(self._pending) or self.expected > self.last_seq
+
+    # -- wire side -----------------------------------------------------------
+
+    def receive(self, seq: int, kind: str, payload: Any) -> None:
+        """One sequenced frame off the wire (chaos applies here)."""
+        if self.chaos is not None:
+            t = self.now_rel()
+            if self.chaos.decide("msg_drop", self.link, t):
+                self._bump("msgs_dropped")
+                return
+            if self._held is None and self.chaos.decide(
+                    "msg_reorder", self.link, t):
+                self._held = (seq, kind, payload)
+                self._bump("msgs_reordered")
+                return
+            if self.chaos.decide("msg_dup", self.link, t):
+                self._bump("msgs_duped")
+                self._accept(seq, kind, payload)
+            self._accept(seq, kind, payload)
+            if self._held is not None:
+                held, self._held = self._held, None
+                self._accept(*held)  # delivered AFTER its successor
+        else:
+            self._accept(seq, kind, payload)
+
+    def redeliver(self, seq: int, kind: str, payload: Any) -> None:
+        """Resync replay path: chaos-exempt, still exactly-once."""
+        self._accept(seq, kind, payload)
+
+    def _accept(self, seq: int, kind: str, payload: Any) -> None:
+        self.expected = max(self.expected, seq)
+        if seq <= self.last_seq or seq in self._pending:
+            self._bump("dups_suppressed")
+            return
+        if seq == self.last_seq + 1:
+            self.last_seq = seq
+            self._out.append((kind, payload))
+            while self.last_seq + 1 in self._pending:
+                self.last_seq += 1
+                self._out.append(self._pending.pop(self.last_seq))
+            if not self._gapped:
+                self._gap_waited = -1
+            return
+        if not self._pending:
+            self._bump("gaps_detected")
+        self._pending[seq] = (kind, payload)
+
+    # -- receiver side -------------------------------------------------------
+
+    def heal(self) -> None:
+        """End-of-poll sweep: release a held reorder, then drive gap
+        recovery (request a resync once; abandon if it never lands)."""
+        if self._held is not None:
+            held, self._held = self._held, None
+            self._accept(*held)
+        if not self._gapped:
+            self._gap_waited = -1
+            return
+        if self._gap_waited < 0:
+            self._gap_waited = 0
+            if self._resync is not None:
+                self._bump("resyncs")
+                try:
+                    self._resync(self.last_seq)
+                except TransportError:
+                    pass  # sender is dead; lost-rid recovery owns it now
+            if not self._gapped:  # synchronous (in-process) replay landed
+                self._gap_waited = -1
+            return
+        self._gap_waited += 1
+        if self._gap_waited > self.resync_patience:
+            self._bump("gaps_abandoned")
+            while self._pending:
+                self.last_seq = min(self._pending)
+                self._out.append(self._pending.pop(self.last_seq))
+            self.last_seq = max(self.last_seq, self.expected)
+            self._gap_waited = -1
+
+    def drain(self) -> List[Tuple[str, Any]]:
+        out, self._out = self._out, []
+        return out
+
+    def audit(self, label: str) -> List[str]:
+        """Invariant check at teardown: nothing held, no open gap."""
+        out = []
+        if self._held is not None:
+            out.append(f"{label}: delivery guard still holding a reordered "
+                       f"frame (seq {self._held[0]})")
+        if self._pending:
+            out.append(f"{label}: delivery guard has an unresolved gap "
+                       f"(last_seq {self.last_seq}, "
+                       f"pending {sorted(self._pending)})")
+        if self._out:
+            out.append(f"{label}: {len(self._out)} delivered frames were "
+                       f"never drained")
+        return out
 
 
 @dataclass(frozen=True)
@@ -113,7 +296,17 @@ def _prefix_hit_len(store, tokens: np.ndarray, extras_fp: bytes) -> int:
 
 
 class LocalTransport:
-    """In-process replica: direct calls on a live ``TierEngine``."""
+    """In-process replica: direct calls on a live ``TierEngine``.
+
+    By default hooks attach straight to the engine and ``poll`` harvests
+    ``eng.finished`` directly — bit-identical to the pre-pool serving
+    path. :meth:`arm_delivery` (armed by the pool when a fault plan
+    carries message faults) reroutes the event/finish stream through a
+    sequenced :class:`DeliveryGuard` with an in-process outbox, so
+    byzantine drop/dup/reorder chaos exercises the SAME exactly-once
+    machinery the process transport uses; injected faults all heal
+    within the poll that produced them.
+    """
 
     kind = "local"
     supports_restore = True
@@ -121,6 +314,10 @@ class LocalTransport:
     def __init__(self, engine):
         self.engine = engine
         self.alive = True
+        self._guard: Optional[DeliveryGuard] = None
+        self._sink = (None, None, None, None)
+        self._seq = 0
+        self._outbox: deque = deque(maxlen=OUTBOX_DEPTH)
 
     # -- config surface -----------------------------------------------------
 
@@ -133,10 +330,48 @@ class LocalTransport:
         return self.engine.serving
 
     def wire_hooks(self, on_admit, on_token, on_warm, on_park) -> None:
-        self.engine.on_admit = on_admit
-        self.engine.on_token = on_token
-        self.engine.on_warm = on_warm
-        self.engine.on_park = on_park
+        self._sink = (on_admit, on_token, on_warm, on_park)
+        self._attach()
+
+    def _attach(self) -> None:
+        on_admit, on_token, on_warm, on_park = self._sink
+        if self._guard is None:
+            self.engine.on_admit = on_admit
+            self.engine.on_token = on_token
+            self.engine.on_warm = on_warm
+            self.engine.on_park = on_park
+        else:
+            self.engine.on_admit = \
+                lambda rid, t: self._gsend("ev", ("admit", rid, t))
+            self.engine.on_token = \
+                lambda rid, tok, t: self._gsend("ev", ("token", rid, tok, t))
+            self.engine.on_warm = \
+                lambda rid, k, c, s: self._gsend("ev", ("warm", rid, k, c, s))
+            self.engine.on_park = \
+                lambda rid, sid: self._gsend("ev", ("park", rid, sid))
+
+    def arm_delivery(self, chaos, stats: Dict[str, int],
+                     now_rel: Callable[[], float], link: str) -> None:
+        """Route events/finishes through a sequenced delivery guard with
+        byzantine chaos on the wire side. The resync path replays
+        synchronously from the in-process outbox."""
+        self._guard = DeliveryGuard(
+            link, chaos=chaos, stats=stats, now_rel=now_rel,
+            resync=self._replay, resync_patience=0)
+        self._attach()
+
+    def _gsend(self, kind: str, payload: Any) -> None:
+        self._seq += 1
+        self._outbox.append((self._seq, kind, payload))
+        # advertise the sender high-water mark BEFORE the wire so even a
+        # dropped tail frame is seen as a gap at the next heal
+        self._guard.expected = max(self._guard.expected, self._seq)
+        self._guard.receive(self._seq, kind, payload)
+
+    def _replay(self, last_seq: int) -> None:
+        for seq, kind, payload in self._outbox:
+            if seq > last_seq:
+                self._guard.redeliver(seq, kind, payload)
 
     # -- request plane ------------------------------------------------------
 
@@ -152,9 +387,34 @@ class LocalTransport:
         """One engine step; returns (finished, any-activity, lost rids)."""
         eng = self.engine
         n = eng.step()
-        fins = [FinishedSeq(st.rid, list(st.generated), st.t_done)
-                for st in eng.finished]
-        eng.finished.clear()
+        if self._guard is None:
+            fins = [FinishedSeq(st.rid, list(st.generated), st.t_done)
+                    for st in eng.finished]
+            eng.finished.clear()
+        else:
+            for st in eng.finished:
+                self._gsend("fin",
+                            FinishedSeq(st.rid, list(st.generated),
+                                        st.t_done))
+            eng.finished.clear()
+            self._guard.heal()
+            on_admit, on_token, on_warm, on_park = self._sink
+            fins = []
+            for kind, payload in self._guard.drain():
+                if kind == "fin":
+                    fins.append(payload)
+                    continue
+                ev = payload
+                if ev[0] == "admit" and on_admit:
+                    on_admit(ev[1], ev[2])
+                elif ev[0] == "token" and on_token:
+                    on_token(ev[1], ev[2], ev[3])
+                elif ev[0] == "warm" and on_warm:
+                    on_warm(ev[1], ev[2], ev[3], ev[4])
+                elif ev[0] == "park" and on_park:
+                    on_park(ev[1], ev[2])
+            while self._outbox and self._outbox[0][0] <= self._guard.last_seq:
+                self._outbox.popleft()
         active = bool(n) or bool(eng.waiting) \
             or any(s is not None for s in eng.slots)
         return fins, active, []
@@ -302,6 +562,18 @@ def _worker_main(conn, spec_raw: bytes) -> None:
     eng.on_warm = lambda rid, k, c, s: events.append(("warm", rid, k, c, s))
     eng.on_park = lambda rid, sid: events.append(("park", rid, sid))
 
+    # sequenced stream state: every events/fin frame carries a monotonic
+    # seq and lands in a bounded outbox so the parent's delivery guard
+    # can request a gap replay ("resync")
+    stream_seq = 0
+    outbox: deque = deque(maxlen=OUTBOX_DEPTH)
+
+    def send_seq(kind: str, payload: Any) -> None:
+        nonlocal stream_seq
+        stream_seq += 1
+        outbox.append((stream_seq, kind, payload))
+        conn.send_bytes(msg_to_bytes(kind, (stream_seq, payload)))
+
     def handle_rpc(seq: int, op: str, arg: dict) -> None:
         try:
             if op == "encode":
@@ -342,6 +614,7 @@ def _worker_main(conn, spec_raw: bytes) -> None:
 
     def stats() -> dict:
         return {
+            "stream_seq": stream_seq,
             "free_slots": sum(s is None for s in eng.slots),
             "total_slots": len(eng.slots),
             "queue": len(eng.waiting),
@@ -372,7 +645,8 @@ def _worker_main(conn, spec_raw: bytes) -> None:
             # drain commands; when idle, block briefly so the worker
             # doesn't spin a core waiting for work
             while conn.poll(0.0 if busy else 0.02):
-                kind, payload = msg_from_bytes(conn.recv_bytes())
+                kind, payload = msg_from_bytes(
+                    conn.recv_bytes(maxlength=DEFAULT_MAX_FRAME_BYTES))
                 if kind == "stop":
                     running = False
                     break
@@ -386,6 +660,10 @@ def _worker_main(conn, spec_raw: bytes) -> None:
                     eng.cancel(payload)
                 elif kind == "throttle":
                     eng.throttle = float(payload)
+                elif kind == "resync":
+                    replay = [(s, k, p) for s, k, p in outbox
+                              if s > int(payload)]
+                    conn.send_bytes(msg_to_bytes("replay", replay))
                 elif kind == "rpc":
                     handle_rpc(*payload)
                 busy = True  # a command may have created work
@@ -394,14 +672,14 @@ def _worker_main(conn, spec_raw: bytes) -> None:
             if eng.waiting or any(s is not None for s in eng.slots):
                 eng.step()
             if events:
-                conn.send_bytes(msg_to_bytes("events", events))
+                send_seq("events", events)
                 events = []
             fins = None
             if eng.finished:
                 fins = [(st.rid, list(st.generated), st.t_done)
                         for st in eng.finished]
                 eng.finished.clear()
-                conn.send_bytes(msg_to_bytes("fin", fins))
+                send_seq("fin", fins)
             now = time.monotonic()
             if fins is not None or now - last_stats > 0.05:
                 conn.send_bytes(msg_to_bytes("stats", stats()))
@@ -432,15 +710,27 @@ class ProcessTransport:
     supports_restore = False
 
     def __init__(self, spec: ReplicaSpec, start_timeout_s: float = 120.0,
-                 rpc_timeout_s: float = 60.0):
+                 rpc_timeout_s: float = 60.0,
+                 max_frame_bytes: int = DEFAULT_MAX_FRAME_BYTES):
         self.spec = spec
         self.alive = True
         self.rpc_timeout_s = rpc_timeout_s
+        self.max_frame_bytes = int(max_frame_bytes)
         self._rpc_seq = 0
         self._live_rids: set = set()
         self._pending_fins: List[FinishedSeq] = []
         self._pending_lost: List[int] = []
         self._hooks = (None, None, None, None)
+        # the sequenced event/fin stream always rides a delivery guard
+        # (exactly-once even on an honest pipe); byzantine chaos and the
+        # shared stats dict are armed later by the pool when a fault plan
+        # carries message faults
+        self._chaos = None
+        self._frame_link = f"frame:{spec.name}"
+        self._now_rel: Callable[[], float] = lambda: 0.0
+        self._guard = DeliveryGuard(
+            f"events:{spec.name}", resync=self._request_resync,
+            resync_patience=64)
         self._stats: Dict[str, Any] = {
             "free_slots": spec.serving.max_batch,
             "total_slots": spec.serving.max_batch,
@@ -464,7 +754,9 @@ class ProcessTransport:
         while True:
             if self._conn.poll(0.1):
                 try:
-                    kind, payload = msg_from_bytes(self._conn.recv_bytes())
+                    kind, payload = msg_from_bytes(
+                        self._conn.recv_bytes(maxlength=self.max_frame_bytes),
+                        self.max_frame_bytes)
                 except (EOFError, OSError) as e:
                     # spawn failed before the worker could report (e.g. a
                     # non-importable __main__): surface a TransportError
@@ -491,6 +783,19 @@ class ProcessTransport:
     def wire_hooks(self, on_admit, on_token, on_warm, on_park) -> None:
         self._hooks = (on_admit, on_token, on_warm, on_park)
 
+    def arm_delivery(self, chaos, stats: Dict[str, int],
+                     now_rel: Callable[[], float], link: str) -> None:
+        """Attach byzantine chaos + the runtime's shared wire-stats dict
+        to this replica's streams. The existing guard keeps its sequence
+        state; raw frame corruption applies on the matching frame link."""
+        self._chaos = chaos
+        self._now_rel = now_rel
+        self._frame_link = "frame:" + link.split(":", 1)[-1]
+        self._guard.link = link
+        self._guard.chaos = chaos
+        self._guard.stats = stats
+        self._guard.now_rel = now_rel
+
     # -- plumbing -----------------------------------------------------------
 
     def _mark_dead(self) -> None:
@@ -511,36 +816,66 @@ class ProcessTransport:
                 f"replica {self.spec.name} pipe broken: {e}") from e
 
     def _dispatch(self, kind: str, payload: Any) -> None:
-        """Route one inbound message (events/fin/stats/died)."""
-        if kind == "events":
-            on_admit, on_token, on_warm, on_park = self._hooks
-            for ev in payload:
-                if ev[0] == "admit" and on_admit:
-                    on_admit(ev[1], ev[2])
-                elif ev[0] == "token" and on_token:
-                    on_token(ev[1], ev[2], ev[3])
-                elif ev[0] == "warm" and on_warm:
-                    on_warm(ev[1], ev[2], ev[3], ev[4])
-                elif ev[0] == "park" and on_park:
-                    on_park(ev[1], ev[2])
-        elif kind == "fin":
-            for rid, generated, t_done in payload:
-                self._live_rids.discard(rid)
-                self._pending_fins.append(
-                    FinishedSeq(rid, list(generated), t_done))
+        """Route one inbound message. Sequenced events/fin frames pass
+        through the delivery guard (exactly-once, in order); replays and
+        stats feed its gap machinery out of band."""
+        if kind == "events" or kind == "fin":
+            seq, body = payload
+            self._guard.receive(int(seq), kind, body)
+            self._flush_guard()
+        elif kind == "replay":
+            for seq, k, body in payload:
+                self._guard.redeliver(int(seq), k, body)
+            self._flush_guard()
         elif kind == "stats":
             self._stats.update(payload)
+            self._guard.expected = max(
+                self._guard.expected, int(payload.get("stream_seq", 0)))
         elif kind == "died":
             self._mark_dead()
+
+    def _flush_guard(self) -> None:
+        """Deliver in-order frames released by the guard."""
+        for kind, body in self._guard.drain():
+            if kind == "events":
+                on_admit, on_token, on_warm, on_park = self._hooks
+                for ev in body:
+                    if ev[0] == "admit" and on_admit:
+                        on_admit(ev[1], ev[2])
+                    elif ev[0] == "token" and on_token:
+                        on_token(ev[1], ev[2], ev[3])
+                    elif ev[0] == "warm" and on_warm:
+                        on_warm(ev[1], ev[2], ev[3], ev[4])
+                    elif ev[0] == "park" and on_park:
+                        on_park(ev[1], ev[2])
+            else:  # fin
+                for rid, generated, t_done in body:
+                    self._live_rids.discard(rid)
+                    self._pending_fins.append(
+                        FinishedSeq(rid, list(generated), t_done))
+
+    def _request_resync(self, last_seq: int) -> None:
+        self._send("resync", int(last_seq))
 
     def _drain(self) -> None:
         try:
             while self.alive and self._conn.poll(0.0):
-                kind, payload = msg_from_bytes(self._conn.recv_bytes())
+                raw = self._conn.recv_bytes(maxlength=self.max_frame_bytes)
+                if self._chaos is not None and self._chaos.decide(
+                        "corrupt", self._frame_link, self._now_rel()):
+                    raw = self._chaos.tamper(raw, self._frame_link)
+                    self._chaos.bump("corrupt_injected")
+                try:
+                    kind, payload = msg_from_bytes(raw, self.max_frame_bytes)
+                except TransportError:
+                    # corrupt frame: count, discard, let the sequence
+                    # layer detect the hole and resync — never unpickled
+                    self._guard._bump("corrupt_detected")
+                    continue
                 if kind == "reply":
                     continue  # stale reply from a timed-out RPC
                 self._dispatch(kind, payload)
-        except (EOFError, OSError, BrokenPipeError, TransportError):
+        except (EOFError, OSError, BrokenPipeError):
             self._mark_dead()
         if self.alive and not self._proc.is_alive():
             self._mark_dead()
@@ -554,7 +889,9 @@ class ProcessTransport:
             try:
                 if not self._conn.poll(0.05):
                     continue
-                kind, payload = msg_from_bytes(self._conn.recv_bytes())
+                kind, payload = msg_from_bytes(
+                    self._conn.recv_bytes(maxlength=self.max_frame_bytes),
+                    self.max_frame_bytes)
             except (EOFError, OSError, BrokenPipeError) as e:
                 self._mark_dead()
                 raise TransportError(
@@ -593,6 +930,8 @@ class ProcessTransport:
 
     def poll(self) -> Tuple[List[FinishedSeq], bool, List[int]]:
         self._drain()
+        self._guard.heal()
+        self._flush_guard()
         fins, self._pending_fins = self._pending_fins, []
         lost, self._pending_lost = self._pending_lost, []
         return fins, bool(self._live_rids), lost

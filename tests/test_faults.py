@@ -120,3 +120,110 @@ def test_fail_rate_shim_is_bit_identical_to_bare_fail_rate():
     # bit-identical
     for k, v in mb.items():
         assert ms[k] == v, k
+
+
+# ---------------------------------------------------------------------------
+# byzantine message-fault kinds (corrupt / msg_drop / msg_dup / msg_reorder)
+# ---------------------------------------------------------------------------
+
+
+def test_msg_kind_validation():
+    with pytest.raises(ValueError, match="per-message probability"):
+        FaultEvent("corrupt", "*", magnitude=0.0)
+    with pytest.raises(ValueError, match="per-message probability"):
+        FaultEvent("msg_drop", "*", magnitude=1.5)
+    FaultEvent("msg_dup", "events:edge/0", magnitude=1.0)  # bound included
+
+
+def test_unknown_kind_fails_loudly_from_json():
+    """A stale plan file with a kind this build doesn't know must raise,
+    not silently skip injection."""
+    raw = json.dumps({"events": [{"kind": "msg_scramble", "tier": "*",
+                                  "magnitude": 0.5}]})
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan.from_json(raw)
+
+
+def test_msg_prob_windows_and_selectors():
+    plan = FaultPlan([
+        FaultEvent("corrupt", "migrate:edge1", t=1.0, duration=2.0,
+                   magnitude=0.5),
+        FaultEvent("msg_drop", "edge", magnitude=0.25),        # bare tier
+        FaultEvent("msg_dup", "events:cloud", magnitude=0.125),  # proto:tier
+        FaultEvent("msg_reorder", "*", t=0.0, duration=10.0, magnitude=0.1),
+    ])
+    assert plan.has_msg_faults and not plan.has_crashes
+    # timed window: closed outside, open inside
+    assert plan.msg_prob("corrupt", "migrate:edge1", 0.5) == 0.0
+    assert plan.msg_prob("corrupt", "migrate:edge1", 1.5) == 0.5
+    assert plan.msg_prob("corrupt", "migrate:edge1", 3.0) == 0.0
+    # bare tier selector covers every protocol/replica on that tier
+    assert plan.msg_prob("msg_drop", "events:edge/0", 0.0) == 0.25
+    assert plan.msg_prob("msg_drop", "frame:edge/1", 0.0) == 0.25
+    assert plan.msg_prob("msg_drop", "events:cloud/0", 0.0) == 0.0
+    # proto:tier prefix covers that tier's replicas on that protocol only
+    assert plan.msg_prob("msg_dup", "events:cloud/3", 0.0) == 0.125
+    assert plan.msg_prob("msg_dup", "migrate:cloud", 0.0) == 0.0
+    # wildcard matches everything inside its window
+    assert plan.msg_prob("msg_reorder", "anything:else", 5.0) == 0.1
+    assert plan.msg_prob("msg_reorder", "anything:else", 11.0) == 0.0
+
+
+def test_msg_faults_json_round_trip_with_links_and_wire_seed():
+    plan = FaultPlan([
+        FaultEvent("corrupt", "migrate:edge1", magnitude=0.9),  # infinite
+        FaultEvent("msg_drop", "events:edge/0", t=2.0, duration=5.0,
+                   magnitude=0.25),
+        FaultEvent("crash", "cloud", t=1.0, duration=2.0),
+    ], wire_seed=42)
+    back = FaultPlan.from_json(plan.to_json())
+    assert back.events == plan.events
+    assert back.wire_seed == 42
+    assert back.msg_prob("corrupt", "migrate:edge1", 1e12) == 0.9
+    assert back.msg_prob("msg_drop", "events:edge/0", 3.0) == 0.25
+
+
+def test_byzantine_storm_builder():
+    plan = FaultPlan.byzantine_storm(seed=7, corrupt=0.4, dup=0.3,
+                                     drop=0.2, reorder=0.1)
+    assert plan.wire_seed == 7
+    assert sorted(e.kind for e in plan.events) == [
+        "corrupt", "msg_drop", "msg_dup", "msg_reorder"]
+    assert all(e.tier == "*" and e.duration == float("inf")
+               for e in plan.events)
+    # zeroed kinds drop out of the plan entirely
+    assert not FaultPlan.byzantine_storm(seed=0, corrupt=0.0, dup=0.0,
+                                         drop=0.0, reorder=0.0).has_msg_faults
+
+
+def test_wire_chaos_counters_are_per_link_and_seeded():
+    from repro.serving.faults import WireChaos
+
+    plan = FaultPlan.byzantine_storm(seed=13, corrupt=0.5)
+    a, b = WireChaos(plan), WireChaos(plan)
+    # same per-link query sequence -> identical fates, independent of the
+    # interleaving with OTHER links (the cross-backend parity property)
+    fates_a = [a.decide("corrupt", "migrate:edge", 0.0) for _ in range(32)]
+    for _ in range(32):
+        b.decide("corrupt", "migrate:cloud", 50.0)  # noise on another link
+    fates_b = [b.decide("corrupt", "migrate:edge", 99.0) for _ in range(32)]
+    assert fates_a == fates_b
+    assert any(fates_a) and not all(fates_a)
+    # a different wire_seed reshuffles the fates
+    c = WireChaos(FaultPlan.byzantine_storm(seed=14, corrupt=0.5))
+    assert fates_a != [c.decide("corrupt", "migrate:edge", 0.0)
+                       for _ in range(32)]
+
+
+def test_wire_chaos_tamper_always_changes_bytes():
+    from repro.serving.faults import WireChaos
+
+    chaos = WireChaos(FaultPlan.byzantine_storm(seed=1))
+    data = bytes(range(64))
+    seen = set()
+    for _ in range(16):
+        out = chaos.tamper(data, "migrate:edge")
+        assert out != data and len(out) == len(data)
+        seen.add(out)
+    assert len(seen) > 1  # the flip position/mask advances with the counter
+    assert chaos.tamper(b"", "migrate:edge") == b""

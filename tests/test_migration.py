@@ -212,18 +212,22 @@ def test_wire_rejects_garbage_and_truncation(dense_payload):
     with pytest.raises(MigrationError, match="truncated"):
         SlotPayload.from_bytes(wire[:7])  # cut inside the fixed header
     # every header malformation surfaces as MigrationError (re-prefill
-    # fallback), never a stray KeyError/ValueError/AttributeError
+    # fallback), never a stray KeyError/ValueError/AttributeError. The
+    # forged header carries a VALID checksum — these are malformed-sender
+    # bugs, not wire corruption, and must still fail closed
     import json as _json
     import struct as _struct
+    import zlib as _zlib
     for mutate in (lambda h: h.pop("key"),
                    lambda h: h["leaves"][0].update(shape=[-2, 4]),
                    lambda h: h["leaves"][0].update(dtype="float77")):
-        hlen = _struct.unpack_from("<HI", wire, 5)[1]
-        head = _json.loads(wire[11:11 + hlen])
+        hlen = _struct.unpack_from("<HII", wire, 5)[1]
+        head = _json.loads(wire[15:15 + hlen])
         mutate(head)
         blob = _json.dumps(head).encode()
-        bad = (wire[:5] + _struct.pack("<HI", MIGRATION_WIRE_VERSION,
-                                       len(blob)) + blob + wire[11 + hlen:])
+        bad = (wire[:5] + _struct.pack("<HII", MIGRATION_WIRE_VERSION,
+                                       len(blob), _zlib.crc32(blob))
+               + blob + wire[15 + hlen:])
         with pytest.raises(MigrationError):
             SlotPayload.from_bytes(bad)
 

@@ -572,3 +572,58 @@ def test_observe_dict_api_feeds_all_estimator_fields():
     assert st.queue_depth("edge") == 3
     assert st.bandwidths["cloud"] == pytest.approx(1e8)
     assert s.estimator.p95_latency() == pytest.approx(0.5)
+
+
+@pytest.mark.slow
+def test_sim_and_live_agree_on_byzantine_storm():
+    """Byzantine wires through BOTH backends: every migration payload is
+    corrupted in flight (p=1.0 — the CRC rejects it and the clone falls
+    back to a fresh prefill) while the live replicas' event streams
+    additionally suffer dup/drop chaos the analytic backend has no wires
+    for. Per-(kind, link) counter hashing keeps the shared migrate-link
+    decisions identical even though the live side draws extra per-frame
+    fates on its events links — so the resilience-filtered lifecycle
+    traces match event for event, both runs audit clean, and both count
+    the SAME detected corruption."""
+    from repro.serving.faults import FaultEvent, FaultPlan
+
+    plan = FaultPlan([
+        FaultEvent("corrupt", "migrate:edge1", magnitude=1.0),
+        FaultEvent("msg_dup", "events:edge", magnitude=0.3),
+        FaultEvent("msg_drop", "events:edge", magnitude=0.2),
+    ], wire_seed=21)
+    sv = ServingConfig(max_batch=2, max_seq=192)
+    server = _twin_server(sv, hedge_after_s=0.05, migrate=True,
+                          fault_plan=plan, audit=True)
+    req = server.build_request("please describe this Scene in depth. " * 3,
+                               max_new=100, complexity={"text": 0.05})
+    sim_req = copy.deepcopy(req)
+    sim_req.arrival_s = 5.0
+    server.submit_request(req)
+    server.run(timeout_s=120.0)
+    sim = _twin_sim(hedge_after_s=0.05, migrate=True, fault_plan=plan,
+                    audit=True)
+    sim.submit(sim_req)
+    sim.run()
+
+    (live,) = [r for r in server.results if r.rid == req.rid]
+    (ana,) = sim.outcomes
+    # the corrupted migration was rejected on both sides: the request
+    # still completes, but NOT as a migration (re-prefill fallback)
+    assert not live.failed and not ana.failed
+    assert not live.migrated and not ana.migrated
+    lt = _resil(server.runtime.records[req.rid].trace())
+    at = _resil(sim.runtime.records[req.rid].trace())
+    assert lt == at
+    for ws in (server.runtime.wire_stats, sim.runtime.wire_stats):
+        assert ws.get("corrupt_injected", 0) >= 1
+        assert ws.get("corrupt_detected", 0) == ws.get("corrupt_injected")
+        assert ws.get("corrupt_undetected", 0) == 0
+    # identical migrate-link decisions despite the live-only event chaos
+    assert (server.runtime.wire_stats["corrupt_detected"]
+            == sim.runtime.wire_stats["corrupt_detected"])
+    # the live event streams really were attacked — and healed
+    assert server.runtime.wire_stats.get("dups_suppressed", 0) > 0
+    for rt in (server.runtime, sim.runtime):
+        verdict = rt.auditor.last
+        assert verdict["clean"], verdict["violations"]
